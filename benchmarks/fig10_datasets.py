@@ -1,0 +1,77 @@
+"""Fig 10/11/12/13: dataset-characteristics studies (RQ1, §5.2).
+
+* Fig 10/11 (DEEP, low dim): lower nprobe & smaller lists -> SPANN's data
+  read collapses; DiskANN benefits only via lower search_len (fixed-size
+  4KB blocks don't shrink).
+* Fig 12 (MSSPACE, int8): quantized datatype cuts SPANN bytes/query
+  uniformly at fixed nprobe; DiskANN unchanged.
+* Fig 13 (BIGANN, size): DiskANN roundtrips/requests scale ~log(N).
+* Fig 10d: SPANN on DEEP saturates the GET-QPS limit at high concurrency.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core.types import SearchParams
+from repro.storage.spec import TOS
+
+from benchmarks.common import (DEFAULT_CLUSTER, bench_dataset,
+                               default_graph_params, emit, get_cluster_index,
+                               get_dataset, get_graph_index, replay,
+                               sweep_recall_qps)
+
+
+def main():
+    # --- Fig 10/11: dimensionality (gist 960d vs deep 96d) --------------
+    for dataset in ["gist-analog", "deep-analog"]:
+        ci = get_cluster_index(dataset, DEFAULT_CLUSTER)
+        gi = get_graph_index(dataset, default_graph_params(dataset))
+        for kind, idx in [("cluster", ci), ("graph", gi)]:
+            rows = sweep_recall_qps(dataset, kind, idx, concurrency=1)
+            for knob, recall, rep in rows:
+                if recall >= 0.9:
+                    emit(f"fig10.{dataset}.{kind}", rep.mean_latency * 1e6,
+                         knob=knob, recall=recall,
+                         MB_per_query=rep.mean_bytes_read / 1e6,
+                         roundtrips=rep.mean_roundtrips)
+                    break
+        emit(f"fig10.{dataset}.listsize", 0.0,
+             avg_list_KB=ci.meta.avg_list_bytes / 1e3)
+
+    # --- Fig 10d: IOPS saturation on deep at high recall/concurrency ----
+    ci = get_cluster_index("deep-analog", DEFAULT_CLUSTER)
+    _, _, gt = get_dataset("deep-analog")
+    rows = sweep_recall_qps("deep-analog", "cluster", ci, concurrency=64)
+    knob, recall, rep = rows[-1]
+    iops = rep.storage_requests / rep.wall_time_s
+    emit("fig10d.iops", rep.mean_latency * 1e6, recall=recall,
+         iops=iops, iops_limit=TOS.get_qps_limit,
+         saturation=iops / TOS.get_qps_limit,
+         bw_MBps=rep.bandwidth_Bps / 1e6)
+
+    # --- Fig 12: int8 vs f32 at matched dim (msspace vs deep) -----------
+    for dataset in ["deep-analog", "msspace-analog"]:
+        ci = get_cluster_index(dataset, DEFAULT_CLUSTER)
+        rep = replay(dataset, "cluster", ci, SearchParams(k=10, nprobe=64))
+        emit(f"fig12.{dataset}", rep.mean_latency * 1e6,
+             nprobe=64, MB_per_query=rep.mean_bytes_read / 1e6,
+             qps=rep.qps)
+
+    # --- Fig 13: graph roundtrips vs dataset size -----------------------
+    for dataset in ["bigann-analog-s", "bigann-analog-m", "bigann-analog"]:
+        gp = default_graph_params(dataset)
+        gi = get_graph_index(dataset, gp)
+        _, _, gt = get_dataset(dataset)
+        rows = sweep_recall_qps(dataset, "graph", gi, concurrency=1,
+                                stop_recall=0.95)
+        knob, recall, rep = rows[-1]
+        n = bench_dataset(dataset).n
+        emit(f"fig13.{dataset}", rep.mean_latency * 1e6,
+             n=n, log2n=math.log2(n), recall=recall,
+             roundtrips=rep.mean_roundtrips, requests=rep.mean_requests)
+
+
+if __name__ == "__main__":
+    main()

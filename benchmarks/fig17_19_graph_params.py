@@ -1,0 +1,59 @@
+"""Fig 17/18/19: DiskANN build/search parameter studies (RQ2, §5.3).
+
+* Fig 17/18: denser graph (R up) cuts roundtrips AND requests per query —
+  consistent QPS gains on remote storage despite the bigger index;
+* Fig 19: higher beamwidth W cuts roundtrips only at high recall and
+  inflates requests/query — a win for low-concurrency high-recall ad-hoc
+  queries, a loss once the GET-QPS limit saturates at high concurrency.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.types import SearchParams
+from repro.storage.spec import TOS
+
+from benchmarks.common import (default_graph_params, emit, get_dataset,
+                               get_graph_index, replay, sweep_recall_qps)
+
+DATASET = "gist-analog"
+
+
+def main():
+    gp = default_graph_params(DATASET)
+    dense = dataclasses.replace(gp, R=128)
+    g_base = get_graph_index(DATASET, gp)
+    g_dense = get_graph_index(DATASET, dense)
+
+    emit("fig17.size.base", 0.0, index_MB=g_base.meta.index_bytes / 1e6,
+         node_KB=g_base.meta.node_nbytes / 1e3)
+    emit("fig17.size.dense", 0.0, index_MB=g_dense.meta.index_bytes / 1e6,
+         node_KB=g_dense.meta.node_nbytes / 1e3)
+
+    # ---- Fig 17/18: R=base vs dense across recalls & concurrency -------
+    for conc in [1, 16, 64]:
+        rb = sweep_recall_qps(DATASET, "graph", g_base, concurrency=conc)
+        rd = sweep_recall_qps(DATASET, "graph", g_dense, concurrency=conc)
+        for (kb, recb, repb), (kd, recd, repd) in zip(rb, rd):
+            emit(f"fig17.c{conc}", 0.0,
+                 knob=kb, recall_base=recb, recall_dense=recd,
+                 ratio=repd.qps / max(repb.qps, 1e-12),
+                 rt_base=repb.mean_roundtrips, rt_dense=repd.mean_roundtrips,
+                 req_base=repb.mean_requests, req_dense=repd.mean_requests)
+
+    # ---- Fig 19: beamwidth sweep ----------------------------------------
+    _, _, gt = get_dataset(DATASET)
+    for W in [4, 16, 32, 64]:
+        for conc in [1, 4, 64]:
+            sp = SearchParams(k=10, search_len=160, beamwidth=W)
+            rep = replay(DATASET, "graph", g_base, sp, concurrency=conc)
+            iops = rep.storage_requests / max(rep.wall_time_s, 1e-12)
+            emit(f"fig19.W{W}.c{conc}", rep.mean_latency * 1e6,
+                 recall=rep.recall_against(gt), qps=rep.qps,
+                 roundtrips=rep.mean_roundtrips,
+                 requests=rep.mean_requests,
+                 iops=iops, iops_sat=iops / TOS.get_qps_limit)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Fig 20–25: index-cache integration studies (RQ3, §5.4).
+
+* Fig 20/21: SPANN gains monotonically with cache size (hit rate grows
+  with recall); DiskANN saturates at a small cache under low concurrency;
+* Fig 23: DiskANN per-expansion-round hit rate — entry-point rounds ~1,
+  deep rounds ~0;
+* Fig 24: replication × cache size — mid-size caches favour low
+  replication (smaller lists -> higher hit rate), small & large caches
+  favour replica=8 again;
+* Fig 25: beamwidth × cache — large W suppresses roundtrip savings, but
+  W-gains dominate cache-gains at high recall.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.types import SearchParams
+from repro.serving.engine import EngineConfig
+from repro.serving.trace import replay_workload
+from repro.storage.spec import TOS
+
+from benchmarks.common import (DEFAULT_CLUSTER, default_graph_params, emit,
+                               get_cluster_index, get_dataset,
+                               get_graph_index, get_traces, replay,
+                               sweep_recall_qps)
+
+DATASET = "gist-analog"
+
+
+def _cache_sizes(index_bytes: int) -> dict[str, int]:
+    # paper: 1/4/8 GB against a 13 GB index -> express as index fractions
+    return {"none": 0,
+            "small": int(index_bytes * 1 / 13),
+            "mid": int(index_bytes * 4 / 13),
+            "large": int(index_bytes * 8 / 13)}
+
+
+def main():
+    ci = get_cluster_index(DATASET, DEFAULT_CLUSTER)
+    gi = get_graph_index(DATASET, default_graph_params(DATASET))
+    _, _, gt = get_dataset(DATASET)
+
+    # ---- Fig 20/21: cache size x concurrency x recall -------------------
+    for kind, idx in [("cluster", ci), ("graph", gi)]:
+        sizes = _cache_sizes(idx.meta.index_bytes)
+        for cname, cbytes in sizes.items():
+            for conc in [4, 64]:
+                rows = sweep_recall_qps(DATASET, kind, idx,
+                                        concurrency=conc,
+                                        cache_bytes=cbytes)
+                for knob, recall, rep in rows:
+                    if recall >= 0.9 or (knob, recall, rep) == rows[-1]:
+                        emit(f"fig20.{kind}.{cname}.c{conc}",
+                             rep.mean_latency * 1e6,
+                             knob=knob, recall=recall, qps=rep.qps,
+                             hit_rate=rep.hit_rate)
+                        break
+
+    # ---- Fig 23: per-round hit rate profile (graph, mid cache) ---------
+    sp = SearchParams(k=10, search_len=160, beamwidth=16)
+    traces = get_traces(DATASET, "graph", gi, sp)
+    cfg = EngineConfig(storage=TOS, concurrency=1,
+                       cache_bytes=_cache_sizes(gi.meta.index_bytes)["mid"])
+    rep = replay_workload(gi, traces, cfg)
+    by_round: dict[int, list[float]] = {}
+    for r in rep.records:
+        for b in r.batches:
+            tot = b.n_requests + b.n_hits
+            if tot:
+                by_round.setdefault(b.round_idx, []).append(b.n_hits / tot)
+    for ridx in sorted(by_round)[:12]:
+        emit(f"fig23.round{ridx}", 0.0,
+             hit_rate=float(np.mean(by_round[ridx])),
+             n=len(by_round[ridx]))
+
+    # ---- Fig 24: replication x cache ------------------------------------
+    for rep_name, rparams in [("r8", DEFAULT_CLUSTER),
+                              ("r4", dataclasses.replace(DEFAULT_CLUSTER,
+                                                         num_replica=4)),
+                              ("r2", dataclasses.replace(DEFAULT_CLUSTER,
+                                                         num_replica=2))]:
+        ridx = get_cluster_index(DATASET, rparams)
+        sizes = _cache_sizes(ci.meta.index_bytes)   # common base sizes
+        for cname in ["small", "mid", "large"]:
+            rows = sweep_recall_qps(DATASET, "cluster", ridx,
+                                    concurrency=4,
+                                    cache_bytes=sizes[cname])
+            rep2, knob, recall = None, None, None
+            for knob, recall, rep2 in rows:
+                if recall >= 0.95:
+                    break
+            emit(f"fig24.{rep_name}.{cname}", rep2.mean_latency * 1e6,
+                 nprobe=knob, recall=recall, qps=rep2.qps,
+                 hit_rate=rep2.hit_rate,
+                 MB_storage=rep2.mean_bytes_storage / 1e6)
+
+    # ---- Fig 25: beamwidth x cache (ad-hoc, high recall) ----------------
+    sizes = _cache_sizes(gi.meta.index_bytes)
+    for W in [4, 16, 64]:
+        for cname in ["none", "mid"]:
+            sp = SearchParams(k=10, search_len=160, beamwidth=W)
+            rep3 = replay(DATASET, "graph", gi, sp, concurrency=1,
+                          cache_bytes=sizes[cname])
+            emit(f"fig25.W{W}.{cname}", rep3.mean_latency * 1e6,
+                 recall=rep3.recall_against(gt), qps=rep3.qps,
+                 hit_rate=rep3.hit_rate,
+                 roundtrips=rep3.mean_roundtrips)
+
+
+if __name__ == "__main__":
+    main()

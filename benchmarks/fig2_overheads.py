@@ -1,0 +1,53 @@
+"""Fig 2 + Fig 3 analogue: where does search time go, disk vs cloud?
+
+For each index at the paper's default low-recall settings (SPANN nprobe=8,
+DiskANN search_len=10, concurrency=1) we decompose per-query time into
+I/O wait vs priced compute on SSD and on TOS, and report the QPS drop.
+Paper claim: on remote storage both indexes become I/O-dominated
+(SPANN 31%→54% I/O, DiskANN 69%→71%), and the disk→cloud QPS drop is much
+larger for DiskANN (TTFB-bound) than SPANN (bandwidth-bound).
+"""
+from __future__ import annotations
+
+from repro.core.types import SearchParams
+from repro.storage.spec import SSD, TOS
+
+from benchmarks.common import (DEFAULT_CLUSTER, default_graph_params, emit,
+                               get_cluster_index, get_graph_index, replay)
+
+DATASET = "gist-analog"
+
+
+def _split(rep):
+    io = sum(b.io_latency for r in rep.records for b in r.batches)
+    total = sum(r.latency for r in rep.records)
+    compute = max(total - io, 0.0)
+    return io / total * 100, compute / total * 100
+
+
+def main():
+    ci = get_cluster_index(DATASET, DEFAULT_CLUSTER)
+    gi = get_graph_index(DATASET, default_graph_params(DATASET))
+    qps = {}
+    for store, sname in [(SSD, "disk"), (TOS, "cloud")]:
+        rep = replay(DATASET, "cluster", ci, SearchParams(k=10, nprobe=8),
+                     storage=store)
+        io_pct, comp_pct = _split(rep)
+        qps[("spann", sname)] = rep.qps
+        emit(f"fig2.spann.{sname}", rep.mean_latency * 1e6,
+             io_pct=io_pct, compute_pct=comp_pct, qps=rep.qps)
+        rep = replay(DATASET, "graph", gi,
+                     SearchParams(k=10, search_len=10, beamwidth=16),
+                     storage=store)
+        io_pct, comp_pct = _split(rep)
+        qps[("diskann", sname)] = rep.qps
+        emit(f"fig2.diskann.{sname}", rep.mean_latency * 1e6,
+             io_pct=io_pct, compute_pct=comp_pct, qps=rep.qps)
+    # Fig 3f: relative QPS drop disk -> cloud
+    for idx in ["spann", "diskann"]:
+        drop = qps[(idx, "disk")] / max(qps[(idx, "cloud")], 1e-9)
+        emit(f"fig3f.qps_drop.{idx}", 0.0, disk_over_cloud=drop)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Fig 7: QPS–recall curves, SPANN vs DiskANN × concurrency (RQ1).
+
+Paper claims validated here:
+* SPANN wins at low recall / low concurrency; DiskANN overtakes at high
+  recall × high concurrency;
+* the crossover recall rises on low-dim (deep) datasets.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (DEFAULT_CLUSTER, default_graph_params, emit,
+                               get_cluster_index, get_graph_index,
+                               sweep_recall_qps)
+
+CONCURRENCIES = [1, 4, 16, 64]
+DATASETS = ["gist-analog", "deep-analog"]
+
+
+def main():
+    for dataset in DATASETS:
+        ci = get_cluster_index(dataset, DEFAULT_CLUSTER)
+        gi = get_graph_index(dataset, default_graph_params(dataset))
+        for conc in CONCURRENCIES:
+            for kind, idx in [("cluster", ci), ("graph", gi)]:
+                rows = sweep_recall_qps(dataset, kind, idx,
+                                        concurrency=conc)
+                for knob, recall, rep in rows:
+                    emit(f"fig7.{dataset}.{kind}.c{conc}",
+                         rep.mean_latency * 1e6,
+                         knob=knob, recall=recall, qps=rep.qps,
+                         bw_MBps=rep.bandwidth_Bps / 1e6)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Fig 8 + Fig 9: per-query metrics vs recall on the GIST analogue.
+
+* SPANN reads far more data per query than DiskANN at matched recall;
+* DiskANN's roundtrips grow with recall (its latency floor);
+* DiskANN makes more requests at low recall, SPANN overtakes at high;
+* SPANN's mean I/O latency blows up with recall × concurrency (Fig 9).
+"""
+from __future__ import annotations
+
+from benchmarks.common import (DEFAULT_CLUSTER, default_graph_params, emit,
+                               get_cluster_index, get_graph_index,
+                               sweep_recall_qps)
+
+DATASET = "gist-analog"
+
+
+def main():
+    ci = get_cluster_index(DATASET, DEFAULT_CLUSTER)
+    gi = get_graph_index(DATASET, default_graph_params(DATASET))
+    for kind, idx in [("cluster", ci), ("graph", gi)]:
+        rows = sweep_recall_qps(DATASET, kind, idx, concurrency=1)
+        for knob, recall, rep in rows:
+            emit(f"fig8.{kind}", rep.mean_latency * 1e6,
+                 knob=knob, recall=recall,
+                 MB_per_query=rep.mean_bytes_read / 1e6,
+                 roundtrips=rep.mean_roundtrips,
+                 requests=rep.mean_requests)
+    # Fig 9: SPANN mean I/O latency vs concurrency at the highest recall
+    for conc in [1, 16, 64]:
+        rows = sweep_recall_qps(DATASET, "cluster", ci, concurrency=conc)
+        knob, recall, rep = rows[-1]
+        emit(f"fig9.cluster.c{conc}", rep.mean_latency * 1e6,
+             recall=recall, mean_io_latency_ms=rep.mean_io_latency * 1e3,
+             qps=rep.qps)
+
+
+if __name__ == "__main__":
+    main()

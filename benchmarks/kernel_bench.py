@@ -1,0 +1,71 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run under the interpreter (their
+timings measure the interpreter, not TPU silicon), so the *performance*
+numbers reported are for the jnp reference path compiled by XLA:CPU, and
+the Pallas rows are labelled interpret=1.  On TPU hardware the same ops
+compile to Mosaic; roofline work for the kernels lives in EXPERIMENTS.md
+§Perf (kernel section) via lowered-HLO analysis.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.ref import adc_lookup_ref, l2_distance_ref, l2_topk_ref
+
+from benchmarks.common import emit
+
+
+def _time(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main():
+    rng = np.random.default_rng(0)
+    cases = [
+        ("dist.q64.n8192.d960", rng.normal(size=(64, 960)),
+         rng.normal(size=(8192, 960))),
+        ("dist.q64.n8192.d96", rng.normal(size=(64, 96)),
+         rng.normal(size=(8192, 96))),
+    ]
+    for name, q, x in cases:
+        qj = jnp.asarray(q, jnp.float32)
+        xj = jnp.asarray(x, jnp.float32)
+        flops = 2.0 * q.shape[0] * x.shape[0] * q.shape[1]
+        us = _time(jax.jit(l2_distance_ref), qj, xj)
+        emit(f"kernel.{name}.ref", us, gflops=flops / us / 1e3,
+             interpret=0)
+        us_k = _time(lambda a, b: ops.l2_distance(a, b, interpret=True),
+                     qj[:8], xj[:512], iters=1, warmup=1)
+        emit(f"kernel.{name}.pallas_interp", us_k, interpret=1)
+
+    codes = jnp.asarray(rng.integers(0, 256, size=(65536, 112)), jnp.int32)
+    table = jnp.asarray(rng.random((112, 256)), jnp.float32)
+    us = _time(jax.jit(adc_lookup_ref), codes, table)
+    emit("kernel.adc.n65536.m112.ref", us, interpret=0)
+    us_k = _time(lambda c, t: ops.adc_lookup(c, t, interpret=True),
+                 codes[:2048], table, iters=1, warmup=1)
+    emit("kernel.adc.n2048.m112.pallas_interp", us_k, interpret=1)
+
+    q = jnp.asarray(rng.normal(size=(32, 960)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(8192, 960)), jnp.float32)
+    us = _time(jax.jit(lambda a, b: l2_topk_ref(a, b, 10)), q, x)
+    emit("kernel.topk.q32.n8192.ref", us, interpret=0)
+    us_k = _time(lambda a, b: ops.l2_topk(a, b, 10, interpret=True),
+                 q[:8], x[:1024], iters=1, warmup=1)
+    emit("kernel.topk.q8.n1024.pallas_interp", us_k, interpret=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Run every benchmark harness; one CSV row per measurement:
+
+    name,us_per_call,derived
+
+Set REPRO_BENCH_QUICK=1 for a fast smoke pass (smaller datasets).
+Index builds and search traces are cached under benchmarks/.cache.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.kernel_bench",
+    "benchmarks.fig2_overheads",
+    "benchmarks.fig7_qps_recall",
+    "benchmarks.fig8_query_metrics",
+    "benchmarks.fig10_datasets",
+    "benchmarks.tab4_fig14_16_centroids_replicas",
+    "benchmarks.fig17_19_graph_params",
+    "benchmarks.fig20_25_caching",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = []
+    for modname in MODULES:
+        t0 = time.time()
+        print(f"# === {modname} ===", file=sys.stderr)
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            mod.main()
+        except Exception:
+            failures.append(modname)
+            print(f"# FAILED {modname}", file=sys.stderr)
+            traceback.print_exc()
+        print(f"# {modname}: {time.time()-t0:.0f}s", file=sys.stderr)
+    if failures:
+        print(f"# failures: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Table 4 + Fig 14/15/16: SPANN build-parameter studies (RQ2, §5.3).
+
+* Table 4: index size / list count / list size across configurations;
+* Fig 14/15: centroid%=32 (fine-grained lists) wins under I/O congestion
+  (high recall × concurrency), loses at low recall/concurrency;
+* Fig 16: lower replication shrinks lists but costs index quality —
+  higher nprobe needed for the same recall, more data read overall.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import (DEFAULT_CLUSTER, emit, get_cluster_index,
+                               get_dataset, sweep_recall_qps)
+
+DATASET = "gist-analog"
+
+C32 = dataclasses.replace(DEFAULT_CLUSTER, centroid_frac=0.32)
+R4 = dataclasses.replace(DEFAULT_CLUSTER, num_replica=4)
+R2 = dataclasses.replace(DEFAULT_CLUSTER, num_replica=2)
+
+CONFIGS = {
+    "c16_r8": DEFAULT_CLUSTER,
+    "c32_r8": C32,
+    "c16_r4": R4,
+    "c16_r2": R2,
+}
+
+
+def _interp_qps(rows, recall_target):
+    """QPS at a recall level (nearest sweep point >= target, else last)."""
+    for knob, recall, rep in rows:
+        if recall >= recall_target:
+            return rep, knob, recall
+    return rows[-1][2], rows[-1][0], rows[-1][1]
+
+
+def main():
+    idx = {name: get_cluster_index(DATASET, p)
+           for name, p in CONFIGS.items()}
+
+    # ---- Table 4 --------------------------------------------------------
+    for name, ix in idx.items():
+        emit(f"tab4.{name}", 0.0,
+             index_MB=ix.meta.index_bytes / 1e6,
+             n_lists=ix.meta.n_lists,
+             avg_list_KB=ix.meta.avg_list_bytes / 1e3)
+
+    # ---- Fig 14: centroid%=32 / centroid%=16 QPS ratio grid -------------
+    for conc in [1, 16, 64]:
+        r16 = sweep_recall_qps(DATASET, "cluster", idx["c16_r8"],
+                               concurrency=conc)
+        r32 = sweep_recall_qps(DATASET, "cluster", idx["c32_r8"],
+                               concurrency=conc)
+        for target in [0.8, 0.95, 0.99]:
+            rep16, k16, rec16 = _interp_qps(r16, target)
+            rep32, k32, rec32 = _interp_qps(r32, target)
+            emit(f"fig14.c{conc}.r{target}", 0.0,
+                 ratio=rep32.qps / max(rep16.qps, 1e-12),
+                 qps16=rep16.qps, qps32=rep32.qps,
+                 MB16=rep16.mean_bytes_read / 1e6,
+                 MB32=rep32.mean_bytes_read / 1e6,
+                 io16_ms=rep16.mean_io_latency * 1e3,
+                 io32_ms=rep32.mean_io_latency * 1e3)
+
+    # ---- Fig 16: replication sweep --------------------------------------
+    for name in ["c16_r8", "c16_r4", "c16_r2"]:
+        rows = sweep_recall_qps(DATASET, "cluster", idx[name],
+                                concurrency=4)
+        for knob, recall, rep in rows:
+            emit(f"fig16.{name}", rep.mean_latency * 1e6,
+                 nprobe=knob, recall=recall, qps=rep.qps,
+                 MB_per_query=rep.mean_bytes_read / 1e6)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Quickstart: build both index classes, serve a workload on simulated
+cloud storage, and compare against the paper's cost model.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.cluster_index import ClusterIndex
+from repro.core.cost_model import (ClusterWorkloadPoint, GraphWorkloadPoint,
+                                   cluster_query_cost, graph_query_cost)
+from repro.core.flat import exact_topk
+from repro.core.graph_index import GraphIndex
+from repro.core.types import (ClusterIndexParams, GraphIndexParams,
+                              SearchParams)
+from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
+from repro.serving.engine import run_workload
+from repro.storage.spec import TOS
+
+
+def main():
+    print("== dataset: deep-analog (96-D f32), 4000 vectors ==")
+    spec = scaled(DEEP_ANALOG, 4000, 32)
+    data, queries = make_dataset(spec)
+    gt, _ = exact_topk(data, queries, 10)
+
+    print("building SPANN-style cluster index...")
+    ci = ClusterIndex.build(data, ClusterIndexParams())
+    print(f"  {ci.meta.n_lists} posting lists, "
+          f"{ci.meta.index_bytes/1e6:.1f} MB, "
+          f"avg list {ci.meta.avg_list_bytes/1e3:.1f} KB")
+
+    print("building DiskANN-style graph index...")
+    gi = GraphIndex.build(data, GraphIndexParams(R=32, L_build=64,
+                                                 pq_dims=48))
+    print(f"  {gi.meta.n_data} nodes x {gi.meta.node_nbytes} B blocks, "
+          f"{gi.meta.index_bytes/1e6:.1f} MB")
+
+    print(f"\nserving 32 queries on {TOS.describe()}")
+    for name, idx, sp in [
+        ("SPANN  nprobe=32      ", ci, SearchParams(k=10, nprobe=32)),
+        ("DiskANN L=80 W=8      ", gi,
+         SearchParams(k=10, search_len=80, beamwidth=8)),
+    ]:
+        rep = run_workload(idx, queries, sp, TOS, concurrency=4)
+        recall = rep.recall_against(gt)
+        print(f"  {name} recall={recall:.3f} qps={rep.qps:7.1f} "
+              f"p50={rep.latency_percentile(50)*1e3:6.1f} ms "
+              f"roundtrips={rep.mean_roundtrips:5.1f} "
+              f"MB/q={rep.mean_bytes_read/1e6:6.2f}")
+
+    print("\ncost-model predictions (paper Eq. 1 / Eq. 2):")
+    cpred = cluster_query_cost(TOS, ClusterWorkloadPoint(
+        n_lists=ci.meta.n_lists, avg_list_bytes=ci.meta.avg_list_bytes,
+        avg_list_len=float(ci.meta.list_lengths.mean()), dim=spec.dim,
+        nprobe=32))
+    gpred = graph_query_cost(TOS, GraphWorkloadPoint(
+        roundtrips=10, requests_per_round=8,
+        node_nbytes=gi.meta.node_nbytes, R=32, pq_m=gi.meta.pq.m,
+        dim=spec.dim))
+    print(f"  cluster: total={cpred['total']*1e3:.1f} ms "
+          f"(fetch {cpred['c_fetch']*1e3:.1f} / dist "
+          f"{cpred['c_dist']*1e3:.2f})")
+    print(f"  graph:   total={gpred['total']*1e3:.1f} ms "
+          f"(ttfb {gpred['ttfb_total']*1e3:.1f})")
+
+
+if __name__ == "__main__":
+    main()

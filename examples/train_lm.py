@@ -1,0 +1,63 @@
+"""End-to-end training driver: ~100M-param dense LM on the synthetic
+bigram language, with checkpointing/resume and the fault-tolerant runner.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 150] [--quick]
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models.model import LM
+from repro.train import optimizer as opt
+from repro.train.runner import RunnerConfig, run
+from repro.train.train_step import make_train_step
+
+# ~100M params: 51M embedding+head (vocab 50k x 512) + ~50M blocks
+CFG_100M = ModelConfig(
+    name="repro-100m", family="dense", n_layers=16, d_model=512,
+    n_heads=8, n_kv_heads=4, d_ff=2048, vocab=50_000, mlp="swiglu",
+    dtype="float32", remat=False)
+
+CFG_QUICK = dataclasses.replace(
+    CFG_100M, name="repro-8m", n_layers=4, d_model=128, d_ff=512,
+    vocab=4096, n_heads=4, n_kv_heads=2)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    args = ap.parse_args()
+
+    cfg = CFG_QUICK if args.quick else CFG_100M
+    lm = LM(cfg)
+    print(f"model {cfg.name}: {cfg.n_params()/1e6:.1f}M params")
+    params = lm.init(jax.random.PRNGKey(0))
+    ocfg = opt.OptimizerConfig(peak_lr=1e-3, warmup_steps=20,
+                               total_steps=args.steps)
+    opt_state = opt.init_state(params)
+    pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                    global_batch=args.batch, seed=0))
+    step_fn = jax.jit(make_train_step(lm, ocfg), donate_argnums=(0, 1))
+    rcfg = RunnerConfig(total_steps=args.steps, ckpt_dir=args.ckpt,
+                        ckpt_every=50, log_every=10)
+    nb = lambda s: jax.tree.map(jnp.asarray, pipe.batch(s))
+    params, opt_state, report = run(rcfg, step_fn, params, opt_state, nb)
+    print(f"ran {report.steps_run} steps; "
+          f"loss {report.losses[0]:.3f} -> {report.losses[-1]:.3f}; "
+          f"stragglers {report.n_stragglers}")
+    first, last = np.mean(report.losses[:10]), np.mean(report.losses[-10:])
+    assert last < first, "loss did not improve"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

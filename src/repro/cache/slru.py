@@ -1,0 +1,133 @@
+"""Scan-resistant segmented LRU (SLRU) cache — the paper's cache policy
+(§5.1: "scan-resistant LRU eviction policy [50]").
+
+Two segments, both LRU-ordered:
+* probation — first-time entries land here; a scan can only ever pollute
+  this segment.
+* protected — entries re-referenced while in probation are promoted;
+  protected evictions demote back to probation (not out of the cache).
+
+Capacities are in bytes (cache sizes in the paper are 1/4/8 GB).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Hashable
+
+
+class SLRUCache:
+    def __init__(self, capacity_bytes: int, protected_frac: float = 0.8):
+        assert capacity_bytes >= 0
+        self.capacity = int(capacity_bytes)
+        self.protected_cap = int(capacity_bytes * protected_frac)
+        self.probation: OrderedDict[Hashable, int] = OrderedDict()
+        self.protected: OrderedDict[Hashable, int] = OrderedDict()
+        self.probation_bytes = 0
+        self.protected_bytes = 0
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------ stats --
+    @property
+    def used_bytes(self) -> int:
+        return self.probation_bytes + self.protected_bytes
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def reset_stats(self) -> None:
+        self.hits = 0
+        self.misses = 0
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self.probation or key in self.protected
+
+    def __len__(self) -> int:
+        return len(self.probation) + len(self.protected)
+
+    # ------------------------------------------------------------ logic --
+    def get(self, key: Hashable) -> bool:
+        """Lookup; promotes on probation hit.  Returns hit/miss."""
+        if self.capacity == 0:
+            self.misses += 1
+            return False
+        if key in self.protected:
+            self.protected.move_to_end(key)
+            self.hits += 1
+            return True
+        if key in self.probation:
+            size = self.probation.pop(key)
+            self.probation_bytes -= size
+            self._insert_protected(key, size)
+            self.hits += 1
+            return True
+        self.misses += 1
+        return False
+
+    def put(self, key: Hashable, nbytes: int) -> None:
+        """Insert after a miss-fetch.  New entries go to probation."""
+        if self.capacity == 0 or nbytes > self.capacity:
+            return
+        if key in self.protected or key in self.probation:
+            return
+        self.probation[key] = nbytes
+        self.probation_bytes += nbytes
+        self._evict_probation()
+
+    def _insert_protected(self, key: Hashable, nbytes: int) -> None:
+        self.protected[key] = nbytes
+        self.protected_bytes += nbytes
+        # demote protected LRU back to probation until it fits
+        while self.protected_bytes > self.protected_cap and self.protected:
+            k, s = self.protected.popitem(last=False)
+            self.protected_bytes -= s
+            self.probation[k] = s
+            self.probation_bytes += s
+        self._evict_probation()
+
+    def _evict_probation(self) -> None:
+        while self.used_bytes > self.capacity and self.probation:
+            _, s = self.probation.popitem(last=False)
+            self.probation_bytes -= s
+
+
+class PinnedCache:
+    """Fixed-content cache: always hits on the pinned key set.
+
+    Models the paper's A3 suggestion for DiskANN under non-IOPS-saturated
+    settings: pin the entry-point neighbourhood (Fig 23 shows those rounds
+    carry near-1 hit rates) instead of running a general LRU.
+    """
+
+    def __init__(self, keys: set):
+        self.keys = set(keys)
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def used_bytes(self) -> int:  # bookkeeping parity with SLRUCache
+        return 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def reset_stats(self) -> None:
+        self.hits = 0
+        self.misses = 0
+
+    def __contains__(self, key) -> bool:
+        return key in self.keys
+
+    def get(self, key) -> bool:
+        if key in self.keys:
+            self.hits += 1
+            return True
+        self.misses += 1
+        return False
+
+    def put(self, key, nbytes: int) -> None:
+        pass                     # contents are fixed

@@ -1,0 +1,6 @@
+from repro.configs.archs import ARCHS, get_config, smoke
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.shapes import SHAPES, shapes_for
+
+__all__ = ["ARCHS", "get_config", "smoke", "ModelConfig", "ShapeConfig",
+           "SHAPES", "shapes_for"]

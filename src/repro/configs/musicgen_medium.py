@@ -1,0 +1,5 @@
+"""Per-arch config module (assigned architecture: see archs.py)."""
+from repro.configs.archs import MUSICGEN_MEDIUM as CONFIG
+from repro.configs.archs import smoke
+
+SMOKE = smoke(CONFIG)

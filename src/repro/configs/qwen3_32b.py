@@ -1,0 +1,5 @@
+"""Per-arch config module (assigned architecture: see archs.py)."""
+from repro.configs.archs import QWEN3_32B as CONFIG
+from repro.configs.archs import smoke
+
+SMOKE = smoke(CONFIG)

@@ -1,0 +1,171 @@
+"""Distributed (multi-pod) sharded vector search — beyond the paper.
+
+The paper studies one-compute-node-to-one-bucket setups and defers
+distributed serving to future work (§2.1 footnote 1).  This module is
+that future work, TPU-native: the cluster index's posting lists are
+sharded across every chip of the production mesh; a query fans out to
+all shards (each probes its local top-``nprobe_local`` lists with the
+MXU distance pipeline), and the per-shard top-k results are merged with
+one small all-gather — a single dependency-free collective phase, which
+is exactly the property (§2.3.1) that makes cluster indexes
+cloud-friendly, re-expressed at pod scale.
+
+Also here: the distributed k-means index-build step (the offline path),
+where each shard computes local assignments and partial centroid sums
+that are all-reduced — one line of jnp thanks to jax collectives.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.distances import pairwise_sq_l2, topk_smallest
+
+
+def _all_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def sharded_search_step(mesh, *, nprobe_local: int, k: int):
+    """Builds the pjit-able fan-out/merge search step for ``mesh``.
+
+    Array layouts (dim 0 = posting-list shards across ALL mesh axes):
+      centroids  (L, D) f32,  list_vecs (L, M, D),  list_ids (L, M) i32,
+      queries    (B, D) replicated.
+    Returns fn(centroids, list_vecs, list_ids, queries) -> (ids, dists).
+    """
+    axes = _all_axes(mesh)
+    shard_spec = P(axes)
+
+    def local_search(cent, vecs, ids, norms, q):
+        # per-shard: probe local top-nprobe lists, scan, local top-k.
+        # Vector norms are precomputed at build time and gathered as
+        # scalars — the gathered vectors are read exactly once, by the
+        # int8 MXU dot (§Perf vector-search iteration 1: the baseline
+        # recomputed ||x||^2 from the gathered vectors, ~2x the bytes).
+        d_c = pairwise_sq_l2(q, cent)                    # (B, L_loc)
+        # NOTE (§Perf iteration 2, refuted on this artifact): lowering
+        # this top-k through jax.lax.approx_min_k measured +9% HBO bytes
+        # on the CPU dry-run artifact (sort fallback); on real TPU it
+        # lowers to PartialReduce and is the right choice — revisit there.
+        _, probe = topk_smallest(d_c, nprobe_local)      # (B, np)
+        pv = vecs[probe]                                 # (B, np, M, D)
+        pi = ids[probe].reshape(q.shape[0], -1)          # (B, np*M)
+        pn = norms[probe].reshape(q.shape[0], -1)        # (B, np*M) f32
+        B = q.shape[0]
+        qf = q.astype(jnp.float32)
+        qn = jnp.sum(qf * qf, axis=-1, keepdims=True)    # (B, 1)
+        ip = jax.lax.dot_general(
+            q, pv, (((1,), (3,)), ((0,), (0,))),
+            preferred_element_type=(jnp.int32 if pv.dtype == jnp.int8
+                                    else jnp.float32))   # (B, np, M)
+        d = qn + pn - 2.0 * ip.reshape(B, -1).astype(jnp.float32)
+        d = jnp.where(pi < 0, jnp.inf, d)
+        vals, sel = topk_smallest(d, k)                  # (B, k) local
+        out_ids = jnp.take_along_axis(pi, sel, axis=1)
+        # merge across every shard: one small all-gather
+        av = jax.lax.all_gather(vals, axes, tiled=False)   # (S, B, k)
+        ai = jax.lax.all_gather(out_ids, axes, tiled=False)
+        S = av.shape[0]
+        av = av.transpose(1, 0, 2).reshape(B, S * k)
+        ai = ai.transpose(1, 0, 2).reshape(B, S * k)
+        gvals, gsel = topk_smallest(av, k)
+        gids = jnp.take_along_axis(ai, gsel, axis=1)
+        return gids, gvals
+
+    fn = shard_map(
+        local_search, mesh=mesh,
+        in_specs=(shard_spec, shard_spec, shard_spec, shard_spec, P()),
+        out_specs=(P(), P()),
+        check_rep=False)
+    return fn
+
+
+def sharded_kmeans_step(mesh):
+    """One distributed Lloyd iteration: local assign + all-reduce sums.
+
+    data (N, D) sharded over all axes; centroids (K, D) replicated.
+    Returns fn(data, centroids) -> new centroids.
+    """
+    axes = _all_axes(mesh)
+
+    def step(x, cent):
+        d = pairwise_sq_l2(x, cent)                      # (N_loc, K)
+        a = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(a, cent.shape[0], dtype=jnp.float32)
+        sums = onehot.T @ x.astype(jnp.float32)          # (K, D) local
+        counts = onehot.sum(axis=0)                      # (K,)
+        sums = jax.lax.psum(sums, axes)
+        counts = jax.lax.psum(counts, axes)
+        return jnp.where(counts[:, None] > 0,
+                         sums / jnp.maximum(counts, 1.0)[:, None], cent)
+
+    return shard_map(step, mesh=mesh,
+                     in_specs=(P(axes), P()), out_specs=P(),
+                     check_rep=False)
+
+
+# --------------------------------------------------------- dry-run cell --
+
+def dryrun_distributed_search(
+    mesh, *,
+    n_lists: int = 1 << 21,       # 2M posting lists (BIGANN-1B-scale SPANN)
+    max_len: int = 128,
+    dim: int = 128,
+    batch: int = 256,
+    nprobe_local: int = 8,
+    k: int = 10,
+) -> dict:
+    """Lower + compile the production-scale sharded search; returns the
+    §Dry-run record (memory/cost/collective analysis)."""
+    from repro.launch import roofline as rf
+
+    chips = mesh.devices.size
+    sds = jax.ShapeDtypeStruct
+    shard = NamedSharding(mesh, P(_all_axes(mesh)))
+    repl = NamedSharding(mesh, P())
+    cent = sds((n_lists, dim), jnp.float32, sharding=shard)
+    vecs = sds((n_lists, max_len, dim), jnp.int8, sharding=shard)
+    ids = sds((n_lists, max_len), jnp.int32, sharding=shard)
+    norms = sds((n_lists, max_len), jnp.float32, sharding=shard)
+    q = sds((batch, dim), jnp.float32, sharding=repl)
+
+    fn = jax.jit(sharded_search_step(mesh, nprobe_local=nprobe_local,
+                                     k=k))
+    lowered = fn.lower(cent, vecs, ids, norms, q)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    mem_info = {k2: int(getattr(mem, k2)) for k2 in
+                ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes") if getattr(mem, k2, None)
+                is not None}
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = rf.collective_bytes(text)
+    # analytic "model flops": distance comps actually requested
+    lists_scanned = chips * nprobe_local * batch
+    model_flops = 2.0 * lists_scanned * max_len * dim \
+        + 2.0 * batch * n_lists * dim          # centroid matmul
+    flops_dev = float(ca.get("flops", 0.0))
+    return dict(
+        status="ok", chips=chips,
+        shape=dict(n_lists=n_lists, max_len=max_len, dim=dim,
+                   batch=batch, nprobe_local=nprobe_local, k=k),
+        memory=mem_info,
+        cost=dict(flops_per_device=flops_dev,
+                  bytes_per_device=float(ca.get("bytes accessed", 0.0))),
+        collective_bytes=coll,
+        roofline=dict(
+            compute_s=flops_dev / rf.HW["peak_flops"],
+            memory_s=float(ca.get("bytes accessed", 0.0)) / rf.HW["hbm_Bps"],
+            collective_s=sum(coll.values()) / rf.HW["ici_Bps"],
+            model_flops=model_flops,
+            useful_flops_ratio=(model_flops / (flops_dev * chips)
+                                if flops_dev else 0.0),
+        ),
+    )

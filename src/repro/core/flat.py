@@ -1,0 +1,23 @@
+"""Exact brute-force search — ground-truth oracle for recall measurement."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distances import pairwise_sq_l2, topk_smallest
+
+
+def exact_topk(
+    x: np.ndarray, queries: np.ndarray, k: int, chunk: int = 512
+) -> tuple[np.ndarray, np.ndarray]:
+    """Exact k-NN.  Returns (ids (Q, k) int64, dists (Q, k) f32)."""
+    xs = jnp.asarray(x)
+    out_ids = []
+    out_d = []
+    for s in range(0, len(queries), chunk):
+        qs = jnp.asarray(queries[s:s + chunk])
+        d = pairwise_sq_l2(qs, xs)
+        vals, idx = topk_smallest(d, k)
+        out_ids.append(np.asarray(idx, dtype=np.int64))
+        out_d.append(np.asarray(vals, dtype=np.float32))
+    return np.concatenate(out_ids), np.concatenate(out_d)

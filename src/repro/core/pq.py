@@ -1,0 +1,119 @@
+"""Product quantization (Jégou et al.) — DiskANN's in-memory compressed
+vectors (paper Table 3 "PQ dim.", default ``QD = max(dim/8, 48)``).
+
+Traversal order in DiskANN is driven by asymmetric-distance computation
+(ADC) against PQ codes held in compute-node memory; exact distances come
+from the full-precision vectors inside fetched 4KB blocks (rerank).
+
+TPU adaptation: the per-lane 256-entry LUT gather of x86/GPU ADC becomes a
+VMEM-resident LUT kernel (``repro.kernels.pq_adc``); the functions here are
+the pure-jnp oracles plus the host-side (numpy) path used by the simulated
+serving engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kmeans import kmeans_batched
+
+KSUB = 256  # codebook entries per subquantizer (uint8 codes)
+
+
+@dataclasses.dataclass
+class ProductQuantizer:
+    codebooks: np.ndarray     # (m, 256, dsub) f32
+    dim: int                  # original dimensionality (pre-padding)
+
+    @property
+    def m(self) -> int:
+        return self.codebooks.shape[0]
+
+    @property
+    def dsub(self) -> int:
+        return self.codebooks.shape[2]
+
+    @property
+    def padded_dim(self) -> int:
+        return self.m * self.dsub
+
+    # -- encode ------------------------------------------------------------
+    def _split(self, x: np.ndarray) -> np.ndarray:
+        """(N, dim) -> (N, m, dsub) with zero padding to m*dsub."""
+        x = np.asarray(x, dtype=np.float32)
+        n = x.shape[0]
+        pad = self.padded_dim - self.dim
+        if pad:
+            x = np.concatenate([x, np.zeros((n, pad), np.float32)], axis=1)
+        return x.reshape(n, self.m, self.dsub)
+
+    def encode(self, x: np.ndarray, chunk: int = 8192) -> np.ndarray:
+        """(N, dim) -> (N, m) uint8 codes."""
+        xs = self._split(x)
+        out = np.empty((xs.shape[0], self.m), dtype=np.uint8)
+        cb = self.codebooks  # (m, 256, dsub)
+        cb_norm = np.einsum("mkd,mkd->mk", cb, cb)  # (m, 256)
+        for s in range(0, xs.shape[0], chunk):
+            xe = xs[s:s + chunk]  # (c, m, dsub)
+            # d = |x|^2 - 2 x.c + |c|^2 ; |x|^2 constant in argmin
+            ip = np.einsum("cmd,mkd->cmk", xe, cb)
+            d = cb_norm[None] - 2.0 * ip
+            out[s:s + chunk] = np.argmin(d, axis=2).astype(np.uint8)
+        return out
+
+    def decode(self, codes: np.ndarray) -> np.ndarray:
+        """(N, m) uint8 -> (N, dim) f32 reconstruction."""
+        n = codes.shape[0]
+        rec = self.codebooks[np.arange(self.m)[None, :], codes.astype(np.int64)]
+        return rec.reshape(n, self.padded_dim)[:, : self.dim]
+
+    # -- ADC ---------------------------------------------------------------
+    def adc_table(self, q: np.ndarray) -> np.ndarray:
+        """(dim,) query -> (m, 256) table of per-subspace squared distances."""
+        qs = self._split(q[None])[0]              # (m, dsub)
+        diff = self.codebooks - qs[:, None, :]    # (m, 256, dsub)
+        return np.einsum("mkd,mkd->mk", diff, diff).astype(np.float32)
+
+    def adc_lookup(self, codes: np.ndarray, table: np.ndarray) -> np.ndarray:
+        """codes (N, m) uint8, table (m, 256) -> (N,) approx sq distances."""
+        idx = codes.astype(np.int64)
+        return table[np.arange(self.m)[None, :], idx].sum(axis=1)
+
+
+def train_pq(
+    x: np.ndarray,
+    m: int,
+    iters: int = 10,
+    sample: int = 20000,
+    seed: int = 0,
+) -> ProductQuantizer:
+    """Train an m-subquantizer PQ on (a sample of) x.
+
+    dim is zero-padded up to a multiple of m (DiskANN does the same).
+    """
+    x = np.asarray(x, dtype=np.float32)
+    n, dim = x.shape
+    rng = np.random.default_rng(seed)
+    if n > sample:
+        x = x[rng.choice(n, size=sample, replace=False)]
+        n = sample
+    dsub = -(-dim // m)  # ceil
+    pad = m * dsub - dim
+    if pad:
+        x = np.concatenate([x, np.zeros((n, pad), np.float32)], axis=1)
+    xs = jnp.asarray(x.reshape(n, m, dsub).transpose(1, 0, 2))  # (m, N, dsub)
+    key = jax.random.PRNGKey(seed)
+    cb, _ = kmeans_batched(key, xs, KSUB, iters=iters)
+    cb = np.asarray(cb, dtype=np.float32)
+    if cb.shape[1] < KSUB:  # tiny datasets: pad codebook by repetition
+        reps = -(-KSUB // cb.shape[1])
+        cb = np.tile(cb, (1, reps, 1))[:, :KSUB]
+    return ProductQuantizer(codebooks=cb, dim=dim)
+
+
+def default_pq_dims(dim: int) -> int:
+    """Paper §5.1: QD = max(dim/8, 48) (capped at dim)."""
+    return int(min(dim, max(dim // 8, 48)))

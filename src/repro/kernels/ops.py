@@ -1,0 +1,36 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs under the Pallas interpreter, validating BlockSpec tiling and
+numerics; on TPU the same calls compile to Mosaic.  ``interpret=None``
+auto-detects.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import distance as _distance
+from repro.kernels import fused_topk as _fused_topk
+from repro.kernels import pq_adc as _pq_adc
+from repro.kernels import ref as ref  # re-export oracles
+
+
+def _auto_interpret(interpret: bool | None) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def l2_distance(q, x, *, interpret: bool | None = None, **kw):
+    return _distance.l2_distance(
+        q, x, interpret=_auto_interpret(interpret), **kw)
+
+
+def adc_lookup(codes, table, *, interpret: bool | None = None, **kw):
+    return _pq_adc.adc_lookup(
+        codes, table, interpret=_auto_interpret(interpret), **kw)
+
+
+def l2_topk(q, x, k=10, *, interpret: bool | None = None, **kw):
+    return _fused_topk.l2_topk(
+        q, x, k, interpret=_auto_interpret(interpret), **kw)

@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count at first init.
+# This is the ONLY entry point that fakes 512 devices (dry-run exclusive).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell: build the step function (train_step for train shapes,
+prefill/serve_step for serving shapes), attach FSDPxTP shardings from
+``launch.sharding``, ``.lower().compile()`` on the production mesh, and
+record ``memory_analysis()`` (fits-proof) + ``cost_analysis()`` +
+parsed collective bytes (roofline fuel) to a JSON per cell.
+
+Also dry-runs the paper's own distributed vector-search step (sharded
+index fan-out/merge — core/distributed.py) on the same meshes.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.archs import ARCHS
+from repro.configs.shapes import SHAPES, shapes_for
+from repro.launch import roofline as rf
+from repro.launch import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import LM
+from repro.train import optimizer as opt
+from repro.train.train_step import make_train_step
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def build_step(arch: str, shape_name: str, mesh):
+    """Returns (jitted fn, example args (abstract), chips)."""
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    lm = LM(cfg)
+    specs = lm.input_specs(shape)
+    aparams = lm.abstract_params()
+    psh = sh.params_shardings(mesh, aparams)
+    bsh = sh.batch_shardings(mesh, specs["batch"])
+
+    if shape.kind == "train":
+        ocfg = opt.OptimizerConfig()
+        aopt = jax.eval_shape(lambda p: opt.init_state(p), aparams)
+        osh = {"m": psh, "v": psh,
+               "step": NamedSharding(mesh, P())}
+        # auto-microbatching: the remat carry stack is
+        # L x B_loc x S x d bf16 per chip; split the per-device batch so
+        # it stays under ~5 GB (grad accumulation via lax.scan)
+        dp = 1
+        dp_axes = ("pod", "data", "model") if sh.POLICY == "fsdp" \
+            else ("pod", "data")
+        for a in dp_axes:
+            if a in mesh.axis_names:
+                dp *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+        b_loc = max(1, shape.global_batch // dp)
+        carry_gb = (cfg.n_layers * b_loc * shape.seq_len * cfg.d_model
+                    * 2) / 2 ** 30
+        mb = 1
+        while carry_gb / mb > 2.0 and mb < b_loc:
+            mb *= 2
+        step = make_train_step(lm, ocfg, microbatches=mb)
+        fn = jax.jit(step,
+                     in_shardings=(psh, osh, bsh),
+                     out_shardings=(psh, osh, None),
+                     donate_argnums=(0, 1))
+        args = (aparams, aopt, specs["batch"])
+    elif shape.kind == "prefill":
+        fn = jax.jit(lm.prefill, in_shardings=(psh, bsh))
+        args = (aparams, specs["batch"])
+    else:  # decode
+        csh = sh.cache_shardings(mesh, specs["caches"],
+                                 shape.global_batch)
+        fn = jax.jit(lm.decode_step,
+                     in_shardings=(psh, bsh,
+                                   NamedSharding(mesh, P()), csh),
+                     out_shardings=(None, csh),
+                     donate_argnums=(3,))
+        args = (aparams, specs["batch"], specs["pos"], specs["caches"])
+    return fn, args, cfg, shape
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = None, verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    fn, args, cfg, shape = build_step(arch, shape_name, mesh)
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            mem_info[k] = int(v)
+    roof = rf.analyze(compiled, chips, cfg, shape)
+    n_coll = rf.count_collectives(compiled.as_text())
+    result = dict(
+        arch=arch, shape=shape_name,
+        mesh="2x16x16" if multi_pod else "16x16", chips=chips,
+        status="ok", lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory=mem_info,
+        collective_counts=n_coll,
+        roofline=roof.report(),
+    )
+    if verbose:
+        print(json.dumps(result, indent=1, default=str))
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{result['mesh']}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=1, default=str)
+    return result
+
+
+def run_vector_search_cell(multi_pod: bool, out_dir: str | None = None
+                           ) -> dict:
+    """Dry-run the paper's distributed sharded-index search step."""
+    from repro.core.distributed import dryrun_distributed_search
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with mesh:
+        result = dryrun_distributed_search(mesh)
+    result["mesh"] = "2x16x16" if multi_pod else "16x16"
+    result["arch"] = "vector-search-distributed"
+    print(json.dumps(result, indent=1, default=str))
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"vector-search_{result['mesh']}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=1, default=str)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--vector-search", action="store_true")
+    ap.add_argument("--policy", default="tp_fsdp",
+                    choices=["tp_fsdp", "fsdp"])
+    ap.add_argument("--remat", default="full", choices=["full", "dots"])
+    ap.add_argument("--attn-chunk", type=int, default=0)
+    ap.add_argument("--no-causal-block", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    sh.set_policy(args.policy)
+    if args.remat == "dots":
+        from repro.models import transformer as _tr
+        from repro.launch import roofline as _rf
+        _tr.set_remat_policy("dots")
+        _rf.TRAIN_FLOP_FACTOR = 3.0
+    if args.attn_chunk:
+        from repro.models import layers as _ly
+        _ly.ATTN_CHUNK = args.attn_chunk
+    if args.no_causal_block:
+        from repro.models import layers as _ly
+        _ly.CAUSAL_BLOCK_UNROLL = 0
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = []
+    if args.vector_search:
+        for mp in meshes:
+            run_vector_search_cell(mp, args.out)
+        return
+    if args.all:
+        for arch, cfg in ARCHS.items():
+            for shape_name, s in shapes_for(cfg).items():
+                for mp in meshes:
+                    mesh_tag = "2x16x16" if mp else "16x16"
+                    if s is None:
+                        print(f"# {arch} x {shape_name} x {mesh_tag}: "
+                              f"SKIP(full attention)")
+                        continue
+                    try:
+                        r = run_cell(arch, shape_name, mp, args.out,
+                                     verbose=False)
+                        roof = r["roofline"]
+                        print(f"# {arch} x {shape_name} x {mesh_tag}: OK "
+                              f"compile={r['compile_s']}s "
+                              f"bottleneck={roof['bottleneck']} "
+                              f"mfu={roof['roofline_mfu']:.3f}",
+                              flush=True)
+                    except Exception as e:
+                        failures.append((arch, shape_name, mp))
+                        print(f"# {arch} x {shape_name} x {mesh_tag}: "
+                              f"FAIL {e}", flush=True)
+                        traceback.print_exc()
+        for mp in meshes:
+            try:
+                run_vector_search_cell(mp, args.out)
+            except Exception as e:
+                failures.append(("vector-search", "-", mp))
+                traceback.print_exc()
+        if failures:
+            print(f"# FAILURES: {failures}")
+            sys.exit(1)
+        return
+    run_cell(args.arch, args.shape, args.multi_pod, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — smoke tests must keep seeing 1 CPU device.
+
+Production target: TPU v5e pods, 256 chips each, 16x16 ICI torus;
+``multi_pod=True`` models 2 pods (512 chips) with a leading "pod" axis
+(DCN between pods, ICI within).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh with the same axis names — lets every
+    sharded program also run on the CPU container for smoke testing."""
+    return jax.make_mesh((1, 1), ("data", "model"))

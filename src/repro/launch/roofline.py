@@ -1,0 +1,482 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+Terms (per EXPERIMENTS.md §Roofline; TPU v5e constants):
+
+    compute    = HLO_FLOPs_global    / (chips * 197e12 FLOP/s bf16)
+    memory     = HLO_bytes_global    / (chips * 819e9  B/s HBM)
+    collective = coll_bytes_global   / (chips * 50e9   B/s ICI link)
+
+``compiled.cost_analysis()`` reports the per-partition (post-SPMD)
+module, so per-device numbers are globalised by multiplying by the chip
+count before applying the formulas (equivalently: per-device value over
+per-chip peak).  Collective bytes are NOT in cost_analysis: we parse the
+post-optimisation HLO text and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute (async
+``-start`` forms counted once, ``-done`` forms skipped).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+HW = dict(
+    peak_flops=197e12,      # bf16 FLOP/s per v5e chip
+    hbm_Bps=819e9,          # HBM bandwidth per chip
+    ici_Bps=50e9,           # per-link ICI bandwidth
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"%([\w.\-]+) = ")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_bytes_map(hlo_text: str) -> dict[str, int]:
+    """instruction name -> total bytes of its result (tuples summed).
+
+    Post-optimisation HLO prints operands WITHOUT inline shapes, so
+    collective operand sizes are recovered by looking up the producing
+    instruction's result shape.
+    """
+    sizes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if line.startswith("ROOT "):
+            line = line[5:]
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rhs = line[m.end():]
+        # result-type region: everything before the opcode's '('
+        paren = rhs.find("(")
+        # tuple results start with '(' immediately: find the opcode paren
+        if rhs.startswith("("):
+            close = rhs.find(")")
+            region = rhs[: close + 1]
+        else:
+            region = rhs[:paren] if paren > 0 else rhs
+        nbytes = sum(_shape_bytes(d, s)
+                     for d, s in _SHAPE_RE.findall(region))
+        if nbytes:
+            sizes[m.group(1)] = nbytes
+    return sizes
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind operand bytes (per device) from HLO text."""
+    sizes = _result_bytes_map(hlo_text)
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        start = line.index(m.group(0)) + len(m.group(0)) - 1
+        depth = 0
+        end = start
+        for i in range(start, len(line)):
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = _OPERAND_RE.findall(line[start:end + 1])
+        nbytes = sum(sizes.get(op, 0) for op in operands)
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+def count_collectives(hlo_text: str) -> dict[str, int]:
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m:
+            out[m.group(1)] = out.get(m.group(1), 0) + 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# While-trip-aware accounting.
+#
+# XLA's HloCostAnalysis (and a naive text scan) counts a while-loop body
+# ONCE, but lax.scan bodies execute trip-count times — for a scanned layer
+# stack that undercounts flops/bytes/collective-traffic by ~n_layers.
+# (Measured: an 8-iteration scan of a 512^3 matmul reports exactly one
+# iteration's flops.)  We reconstruct per-computation execution multipliers
+# by walking the call graph: while bodies/conditions weighted by the trip
+# count parsed from the condition's `compare(iv, constant(N))`.
+# ---------------------------------------------------------------------------
+
+_COMP_NAME = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)")
+_CALL_RE = re.compile(
+    r"(?:condition|body|to_apply|calls)=%?([\w.\-]+)")
+_WHILE_RE = re.compile(r"\bwhile\(")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_ENTRY_KEY = "__entry__"
+
+
+def _computations(hlo_text: str) -> dict[str, list[str]]:
+    """name -> body lines.  The ENTRY computation's real name is also
+    stored under ``_ENTRY_KEY`` (as a name alias)."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # computation headers end with '{' and declare a return type;
+        # argument lists may contain nested tuple parens, so match loosely
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+            m = _COMP_NAME.match(s)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if s.startswith("ENTRY"):
+                    comps[_ENTRY_KEY] = [cur]
+                continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Trip count from a while condition.
+
+    lax.scan conditions are `compare(iv, constant(N), LT)`, but XLA often
+    wraps the compare in a kLoop fusion; the loop-bound constant still
+    appears in the condition computation itself, and it is the only
+    non-trivial constant there — so take the max constant found.
+    """
+    best = 1
+    for s in cond_lines:
+        for c in _CONST_RE.findall(s):
+            best = max(best, int(c))
+    return min(best, 10_000_000)
+
+
+def computation_multipliers(hlo_text: str) -> dict[str, int]:
+    """computation name -> number of executions of one program run."""
+    comps = _computations(hlo_text)
+    if not comps:
+        return {}
+    if _ENTRY_KEY in comps:
+        entry = comps.pop(_ENTRY_KEY)[0]
+    else:
+        entry = next(iter(comps))
+    mult: dict[str, int] = {}
+
+    def visit(name: str, factor: int):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0) + factor
+        for s in comps[name]:
+            callees = _CALL_RE.findall(s)
+            if not callees:
+                continue
+            weight = factor
+            if _WHILE_RE.search(s):
+                cond_name = None
+                m = re.search(r"condition=%?([\w.\-]+)", s)
+                if m:
+                    cond_name = m.group(1)
+                trips = _trip_count(comps.get(cond_name, []))
+                weight = factor * trips
+            for c in callees:
+                visit(c, weight)
+
+    visit(entry, 1)
+    return mult
+
+
+def collective_bytes_tripaware(hlo_text: str) -> dict[str, float]:
+    """collective_bytes with while-body traffic multiplied by trip count."""
+    sizes = _result_bytes_map(hlo_text)
+    comps = _computations(hlo_text)
+    mult = computation_multipliers(hlo_text)
+    out: dict[str, float] = {}
+    for cname, lines in comps.items():
+        if cname == _ENTRY_KEY:
+            continue
+        factor = mult.get(cname, 0)
+        if factor == 0:
+            continue
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if not m:
+                continue
+            kind = m.group(1)
+            start = line.index(m.group(0)) + len(m.group(0)) - 1
+            depth = 0
+            end = start
+            for i in range(start, len(line)):
+                if line[i] == "(":
+                    depth += 1
+                elif line[i] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operands = _OPERAND_RE.findall(line[start:end + 1])
+            nbytes = sum(sizes.get(op, 0) for op in operands)
+            out[kind] = out.get(kind, 0.0) + float(nbytes * factor)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: dict
+    model_flops: float            # 6ND (train) / 2ND (inference), active
+    raw_cost_analysis: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / HW["peak_flops"]
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HW["hbm_Bps"]
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / HW["ici_Bps"]
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step time = max of the three overlappable terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs_global — remat/redundancy waste."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs / (chips * peak * roofline step time)."""
+        denom = self.chips * HW["peak_flops"] * self.step_s
+        return self.model_flops / denom if denom else 0.0
+
+    def report(self) -> dict:
+        return dict(
+            chips=self.chips,
+            compute_s=self.compute_s,
+            memory_s=self.memory_s,
+            collective_s=self.collective_s,
+            bottleneck=self.bottleneck,
+            step_s=self.step_s,
+            model_flops=self.model_flops,
+            hlo_flops_global=self.flops_per_device * self.chips,
+            useful_flops_ratio=self.useful_flops_ratio,
+            roofline_mfu=self.mfu,
+            coll_breakdown=self.coll_breakdown,
+            raw_cost_analysis=self.raw_cost_analysis,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Analytic cost model (matmul-exact FLOPs; parameter/activation HBM-traffic
+# model).  Needed because HloCostAnalysis counts scan bodies once (see
+# above); these formulas ARE the per-cell roofline numerators, with the raw
+# cost_analysis kept alongside in every dry-run JSON for cross-checking.
+# ---------------------------------------------------------------------------
+
+def _layer_flops_per_token(cfg, kind: str, S_ctx: float, train: bool,
+                           decode: bool) -> float:
+    """Forward FLOPs per token for one layer of ``kind``.
+
+    S_ctx: attended context length (chunked attention computes all
+    (masked) blocks, so the score/AV term uses the full S, or
+    window+chunk for the banded local path).
+    """
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    f = cfg.d_ff
+    gated = cfg.mlp in ("swiglu", "geglu")
+    mlp_f = (6 if gated else 4) * d * f
+
+    if kind == "ssm":
+        din, N, Hs, P = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                         cfg.ssm_head_dim)
+        proj = 2 * d * (2 * din + 2 * N + Hs) + 2 * din * d
+        conv = 2 * cfg.ssm_conv * (din + 2 * N)
+        if decode:
+            ssd = 4 * Hs * P * N                    # state update + readout
+        else:
+            Q = cfg.ssm_chunk
+            ssd = Q * (2 * N + 2 * Hs * P) + 4 * Hs * P * N
+        return proj + conv + ssd
+    if kind == "rglru":
+        w = cfg.lru_width or d
+        rec = 2 * d * w * 2 + 2 * w * w * 2 + 2 * w * d \
+            + 2 * cfg.ssm_conv * w + 10 * w
+        return rec + mlp_f
+    # attention kinds
+    qkvo = 2 * d * H * hd + 2 * 2 * d * KV * hd + 2 * H * hd * d
+    if kind == "cross":
+        scores = 4 * cfg.n_frontend_tokens * H * hd
+        if decode:
+            qkvo = 2 * d * H * hd + 2 * H * hd * d   # K/V cached
+        return qkvo + scores + mlp_f
+    scores = 4 * S_ctx * H * hd
+    ffn = mlp_f
+    if cfg.n_experts:
+        # router + K routed experts (+ shared); dispatch is gather/scatter
+        ffn = 2 * d * cfg.n_experts \
+            + cfg.experts_per_token * cfg.capacity_factor * mlp_f \
+            + cfg.n_shared_experts * mlp_f
+    return qkvo + scores + ffn
+
+
+TRAIN_FLOP_FACTOR = 4.0
+
+
+def analytic_flops(cfg, shape) -> float:
+    """Total executed FLOPs (global, forward+backward as appropriate)."""
+    from repro.models.layers import (ATTN_CHUNK, CAUSAL_BLOCK_UNROLL,
+                                     CHUNKED_ATTN_THRESHOLD)
+    from repro.models.transformer import layer_kinds
+    S = shape.seq_len
+    decode = shape.kind == "decode"
+    train = shape.kind == "train"
+    tokens = shape.global_batch if decode else shape.tokens
+    total = 0.0
+    for kind in layer_kinds(cfg):
+        if decode:
+            s_ctx = (min(cfg.local_window, S)
+                     if (cfg.block_pattern and kind == "attn")
+                     else S)
+        elif cfg.block_pattern and kind == "attn" and cfg.local_window:
+            s_ctx = min(S, cfg.local_window + ATTN_CHUNK)
+        else:
+            s_ctx = S
+            nq = S // ATTN_CHUNK
+            if (S > CHUNKED_ATTN_THRESHOLD
+                    and 1 < nq <= CAUSAL_BLOCK_UNROLL):
+                # causal-blocked path computes only (nq+1)/(2nq) of blocks
+                s_ctx = S * (nq + 1) / (2 * nq)
+        total += _layer_flops_per_token(cfg, kind, s_ctx, train, decode)
+    total += 2 * cfg.d_model * cfg.vocab           # head matmul
+    total *= tokens
+    if train:
+        # stack: fwd + remat recompute + bwd = 4x fwd under full remat
+        # (nested attention checkpointing adds ~1 more fwd on the score
+        # terms — folded in); 3x when dots are saved (set by dryrun
+        # --remat dots via TRAIN_FLOP_FACTOR)
+        return TRAIN_FLOP_FACTOR * total
+    return total
+
+
+def analytic_bytes(cfg, shape, chips: int) -> float:
+    """Per-device HBM traffic model (documented, coarse):
+
+    * params: read for fwd (+recompute +bwd) as bf16 casts of f32 masters,
+      optimizer read/write p/m/v f32 (train);
+    * activations: ~12 (B,S,d)-sized tensor read/writes per layer + MLP/
+      attention internals, bf16;
+    * decode: full KV-cache / recurrent-state read + write-back of one slot.
+    """
+    n_params = cfg.n_params()
+    p_dev = n_params * 4.0 / chips
+    L = cfg.n_layers
+    d = cfg.d_model
+    act_width = d + cfg.n_heads * cfg.resolved_head_dim \
+        + (cfg.experts_per_token * cfg.capacity_factor
+           if cfg.n_experts else 1) * cfg.d_ff * 0.5
+    if shape.kind == "decode":
+        tokens_dev = shape.global_batch / min(chips, shape.global_batch)
+        cache = 0.0
+        for kind in (cfg.layer_kind(i) for i in range(L)):
+            if kind in ("attn", "cross"):
+                ctx = (min(cfg.local_window, shape.seq_len)
+                       if cfg.block_pattern else shape.seq_len)
+                cache += 2 * ctx * cfg.n_kv_heads * cfg.resolved_head_dim \
+                    * 2.0
+            elif kind == "ssm":
+                cache += cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state \
+                    * 4.0
+            elif kind == "rglru":
+                cache += (cfg.lru_width or d) * 4.0
+        cache_dev = cache * shape.global_batch / chips * (
+            1.0 if shape.global_batch >= 16 else chips / 16)
+        return p_dev + cache_dev + tokens_dev * L * act_width * 2 * 4
+    tokens_dev = shape.tokens / chips
+    act = tokens_dev * L * (12 * d + 2 * act_width) * 2.0
+    mult = 3.0 if shape.kind == "train" else 1.0     # fwd+recompute+bwd
+    opt = 20.0 * p_dev if shape.kind == "train" else 0.0
+    return mult * act + 3.0 * p_dev + opt
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6*N_active*tokens (train) / 2*N_active*tokens (inference).
+
+    N counts matmul-participating params: the embedding table is a
+    gather (0 FLOPs), so vocab*d is subtracted once (for tied embeddings
+    the same table IS the head matmul, which stays counted).
+    """
+    n = cfg.n_active_params() - cfg.vocab * cfg.d_model
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch      # decode: one token per seq
+
+
+def analyze(compiled, chips: int, cfg, shape) -> Roofline:
+    """Roofline terms for one compiled cell.
+
+    FLOPs/bytes numerators come from the analytic model (exact matmul
+    accounting; HloCostAnalysis counts scan bodies once — its raw values
+    are kept in ``raw_cost_analysis`` for cross-checking).  Collective
+    bytes come from the trip-aware HLO walk.
+    """
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = collective_bytes_tripaware(text)
+    coll_once = collective_bytes(text)
+    return Roofline(
+        chips=chips,
+        flops_per_device=analytic_flops(cfg, shape) / chips,
+        bytes_per_device=analytic_bytes(cfg, shape, chips),
+        coll_bytes_per_device=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops=model_flops_for(cfg, shape),
+        raw_cost_analysis=dict(
+            flops_per_device_scan_once=float(ca.get("flops", 0.0)),
+            bytes_per_device_scan_once=float(
+                ca.get("bytes accessed", 0.0)),
+            collective_bytes_scan_once=coll_once,
+        ),
+    )

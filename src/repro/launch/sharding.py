@@ -1,0 +1,229 @@
+"""Sharding policy: param-path rules -> PartitionSpec (FSDP x TP).
+
+One place encodes the whole distribution strategy; the perf hillclimb
+(EXPERIMENTS.md §Perf) edits THIS file's rules and re-lowers.
+
+Axes:
+* ``model`` — tensor parallel: vocab, attention heads, d_ff, experts;
+* ``data`` — batch data-parallel AND parameter FSDP (params/optimizer
+  sharded over it, all-gathered at use by GSPMD);
+* ``pod``  — cross-pod data parallel (multi-pod mesh only; gradient
+  all-reduce rides DCN).
+
+Dims that don't divide the axis stay unsharded unless
+``allow_uneven`` — GSPMD would pad (acceptable for q-heads 36/16; wasteful
+for kv-heads 8/16, where GQA-TP conventionally replicates instead).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _shard_dim(mesh: Mesh, size: int, axis: str, allow_uneven=False):
+    n = _axis_size(mesh, axis)
+    if n == 1:
+        return None
+    if size % n == 0 or (allow_uneven and size >= n):
+        return axis
+    return None
+
+
+POLICY = "tp_fsdp"      # "tp_fsdp" (default) | "fsdp" (pure ZeRO-3 DP)
+
+
+def set_policy(name: str) -> None:
+    """Select the global sharding policy (perf-hillclimb lever).
+
+    tp_fsdp — model axis does tensor parallelism (heads/d_ff/vocab/
+              experts), data axis does batch DP + param FSDP.
+    fsdp    — NO tensor parallelism: every mesh axis is data parallel for
+              the batch; params/optimizer fully sharded (ZeRO-3) over
+              (data, model) and all-gathered at use.  Wins when
+              tokens-per-device is large: weight all-gather bytes
+              (=params) << activation all-reduce bytes (see
+              EXPERIMENTS.md §Perf).
+    """
+    global POLICY
+    assert name in ("tp_fsdp", "fsdp"), name
+    POLICY = name
+    from repro.models import layers
+    layers.set_batch_axes(("pod", "data", "model") if name == "fsdp"
+                          else ("pod", "data"))
+
+
+def batch_axes(mesh: Mesh, batch_size: int):
+    """Shard batch over pod x data (+ model under the fsdp policy)."""
+    names = ("pod", "data", "model") if POLICY == "fsdp" \
+        else ("pod", "data")
+    axes = [a for a in names if a in mesh.axis_names]
+    total = 1
+    used = []
+    for a in axes:
+        n = _axis_size(mesh, a)
+        if batch_size % (total * n) == 0:
+            used.append(a)
+            total *= n
+    if not used:
+        return None
+    return tuple(used) if len(used) > 1 else used[0]
+
+
+def _fsdp_pspec(mesh: Mesh, path: str, leaf) -> P:
+    """Pure-FSDP placement: shard the largest dim that divides the
+    combined (data, model) axes; fall back to single axes."""
+    lead = 1 if "unit" in path else 0
+    dims = list(range(lead, leaf.ndim))
+    dims.sort(key=lambda i: -leaf.shape[i])
+    combos = [("data", "model"), ("data",), ("model",)]
+    for combo in combos:
+        size = 1
+        for a in combo:
+            size *= _axis_size(mesh, a)
+        if size == 1:
+            continue
+        for i in dims:
+            if leaf.shape[i] % size == 0 and leaf.shape[i] >= size:
+                spec = [None] * leaf.ndim
+                spec[i] = combo if len(combo) > 1 else combo[0]
+                return P(*spec)
+    return P(*([None] * leaf.ndim))
+
+
+def param_pspec(mesh: Mesh, path: str, leaf) -> P:
+    """Map a parameter (by tree path) to its PartitionSpec."""
+    if POLICY == "fsdp":
+        return _fsdp_pspec(mesh, path, leaf)
+    nd = leaf.ndim
+    shape = leaf.shape
+    m = lambda size, uneven=False: _shard_dim(mesh, size, "model", uneven)
+    d = lambda size: _shard_dim(mesh, size, "data")
+
+    def spec(*axes):
+        return P(*axes)
+
+    # --- stacked layer params have a leading layer axis: skip it -------
+    lead = 1 if "unit" in path else 0
+    dim = lambda i: shape[lead + i]
+    core_nd = nd - lead
+
+    def wrap(*axes):
+        return P(*(((None,) * lead) + axes))
+
+    if "embed" in path:                       # (V, D)
+        return spec(m(shape[0]), d(shape[1]))
+    if "lm_head" in path:                     # (D, V)
+        return spec(d(shape[0]), m(shape[1]))
+    if path.endswith("scale") or "norm" in path:
+        return wrap(*((None,) * core_nd))
+    # attention
+    # NOTE: jax rejects non-divisible NamedShardings at the jit boundary
+    # (no GSPMD padding for arguments) — head dims that don't divide the
+    # model axis (36H starcoder2, 24H musicgen, 10H recurrentgemma) stay
+    # unsharded; their TP parallelism comes from d_ff/vocab instead.
+    if path.endswith("wq"):                   # (D, H, hd)
+        return wrap(d(dim(0)), m(dim(1)), None)
+    if path.endswith("wk") or path.endswith("wv"):
+        return wrap(d(dim(0)), m(dim(1)), None)   # replicated if kv < TP
+    if path.endswith("wo") and core_nd == 3:  # (H, hd, D)
+        return wrap(m(dim(0)), None, d(dim(2)))
+    # moe
+    if "router" in path:                      # (D, E)
+        return wrap(d(dim(0)), None)
+    if core_nd == 3 and ("wi" in path or "wg" in path):   # (E, D, F)
+        return wrap(m(dim(0)), d(dim(1)), None)
+    if core_nd == 3 and "wo" in path:         # (E, F, D)
+        return wrap(m(dim(0)), None, d(dim(2)))
+    # dense mlp
+    if core_nd == 2 and ("wi" in path or "wg" in path):   # (D, F)
+        return wrap(d(dim(0)), m(dim(1)))
+    if core_nd == 2 and "wo" in path:         # (F, D)
+        return wrap(m(dim(0)), d(dim(1)))
+    # ssm / rglru projections
+    if core_nd == 2 and any(k in path for k in
+                            ("in_x", "in_z", "in_rec", "in_gate",
+                             "w_a", "w_x")):
+        return wrap(d(dim(0)), m(dim(1)))
+    if core_nd == 2 and any(k in path for k in ("in_B", "in_C", "in_dt")):
+        return wrap(d(dim(0)), m(dim(1)))
+    if core_nd == 2 and path.endswith("out"):  # (din|W, D)
+        return wrap(m(dim(0)), d(dim(1)))
+    if core_nd == 2 and "conv_w" in path:      # (K, C)
+        return wrap(None, m(dim(1)))
+    if core_nd == 1:                           # per-channel vectors
+        return wrap(m(dim(0)))
+    return wrap(*((None,) * core_nd))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def params_shardings(mesh: Mesh, abstract_params) -> Any:
+    """NamedSharding pytree for a params (or optimizer m/v) pytree."""
+    def one(path, leaf):
+        ps = _path_str(path)
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, param_pspec(mesh, ps, leaf))
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def opt_state_shardings(mesh: Mesh, abstract_opt_state, psharding):
+    """m/v mirror params; step is replicated."""
+    return {
+        "m": psharding["params"] if isinstance(psharding, dict)
+        else psharding,
+        "v": psharding["params"] if isinstance(psharding, dict)
+        else psharding,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_shardings(mesh: Mesh, abstract_batch) -> Any:
+    """Inputs: shard leading (batch) dim over pod x data."""
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        ba = batch_axes(mesh, leaf.shape[0])
+        return NamedSharding(
+            mesh, P(ba, *([None] * (leaf.ndim - 1))))
+    return jax.tree.map(one, abstract_batch)
+
+
+def cache_shardings(mesh: Mesh, abstract_caches, batch_size: int) -> Any:
+    """KV caches / recurrent state: batch dim over data, kv-heads over
+    model when divisible.  Stacked unit caches carry a leading layer dim."""
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        axes: list = [None] * leaf.ndim
+        # find the batch dim: first dim equal to batch_size
+        for i, s in enumerate(leaf.shape):
+            if s == batch_size:
+                axes[i] = batch_axes(mesh, batch_size)
+                break
+        # shard a heads-like or state dim over model if divisible
+        msize = _axis_size(mesh, "model")
+        if msize > 1:
+            for i in range(leaf.ndim - 1, 0, -1):
+                if axes[i] is None and leaf.shape[i] % msize == 0 \
+                        and leaf.shape[i] >= msize:
+                    axes[i] = "model"
+                    break
+        return NamedSharding(mesh, P(*axes))
+    return jax.tree.map(one, abstract_caches)

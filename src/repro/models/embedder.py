@@ -1,0 +1,28 @@
+"""LM -> vector-search bridge: pooled embeddings from backbone states.
+
+This is the integration point between the assigned LM architectures and
+the paper's cloud-native vector index (DESIGN.md §4 Arch-applicability):
+documents are embedded by the LM, indexed by ``repro.core``, and queried
+at serving time (examples/rag_serving.py).  The embedding width equals
+``d_model`` — the paper's dimensionality studies (96-D vs 960-D) map onto
+the choice of projection width here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def embed_tokens(lm, params, batch, out_dim: int | None = None,
+                 seed: int = 0) -> np.ndarray:
+    """Mean-pooled, L2-normalised embeddings (B, out_dim or d_model)."""
+    x = lm._backbone(params, batch)            # (B, S, D) final-norm states
+    pooled = x.astype(jnp.float32).mean(axis=1)
+    if out_dim is not None and out_dim != pooled.shape[-1]:
+        key = jax.random.PRNGKey(seed)
+        proj = jax.random.normal(key, (pooled.shape[-1], out_dim),
+                                 jnp.float32) / jnp.sqrt(out_dim)
+        pooled = pooled @ proj
+    norm = jnp.linalg.norm(pooled, axis=-1, keepdims=True)
+    return np.asarray(pooled / jnp.maximum(norm, 1e-9))

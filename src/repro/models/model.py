@@ -1,0 +1,236 @@
+"""LM wrapper: embeddings, stack, head, losses, serving steps, input specs.
+
+One class serves all 10 assigned architectures; modality differences are
+confined to ``input_specs`` / frontend handling:
+
+* text archs: int32 ``tokens``;
+* musicgen (audio): the EnCodec frontend is a stub — inputs are
+  precomputed frame *embeddings* (B, S, D) (assignment rule);
+* llama-3.2-vision (vlm): text tokens + precomputed patch embeddings
+  (B, n_frontend_tokens, D) consumed by the cross-attention layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import rglru as rg
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tr
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+Params = Any
+
+# sequence-chunk size for the vocab-parallel chunked loss (memory: the
+# full (B, S, V) f32 logits of a 256k-vocab model would be hundreds of
+# GB per chip — the loss is computed per sequence chunk instead)
+LOSS_CHUNK = 256
+
+
+def _maybe_shard(x, *spec_axes):
+    from repro.models.layers import maybe_shard
+    return maybe_shard(x, *spec_axes)
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- init --
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "embed": dense_init(k1, (cfg.vocab, cfg.d_model), scale=1.0),
+            "blocks": tr.stack_init(k2, cfg),
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(k3, (cfg.d_model, cfg.vocab))
+        return p
+
+    def abstract_params(self) -> Params:
+        return jax.eval_shape(lambda k: self.init(k), jax.random.PRNGKey(0))
+
+    # ---------------------------------------------------------- forward --
+    def _embed_inputs(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return batch["frames"].astype(jnp.dtype(cfg.dtype))
+        tok = batch["tokens"]
+        x = params["embed"][tok].astype(jnp.dtype(cfg.dtype))
+        return x * (cfg.d_model ** 0.5)
+
+    def _ctx(self, params, batch):
+        if self.cfg.family == "vlm":
+            return batch["image_embeds"].astype(jnp.dtype(self.cfg.dtype))
+        return None
+
+
+    def _head(self, params, dtype):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            # tied head: rescale so init logits are O(1) like an untied head
+            return params["embed"].T.astype(dtype) * (cfg.d_model ** -0.5)
+        return params["lm_head"].astype(dtype)
+
+    def logits(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        S = x.shape[1]
+        positions = jnp.arange(S)[None, :]
+        x = tr.stack_forward(params["blocks"], cfg, x, positions,
+                             ctx=self._ctx(params, batch))
+        x = rmsnorm(params["final_norm"], x)
+        head = self._head(params, x.dtype)
+        return jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+
+    def _backbone(self, params, batch) -> jax.Array:
+        """Final-norm hidden states (B, S, D)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        S = x.shape[1]
+        positions = jnp.arange(S)[None, :]
+        x = tr.stack_forward(params["blocks"], cfg, x, positions,
+                             ctx=self._ctx(params, batch))
+        return rmsnorm(params["final_norm"], x)
+
+    def loss(self, params, batch) -> jax.Array:
+        """Mean next-token cross entropy (+ tiny z-loss for stability).
+
+        The head matmul + softmax run per sequence chunk with the vocab
+        dim sharded over "model" — the (B, S, V) f32 logits of a
+        256k-vocab arch never materialise (DESIGN.md §5).
+        """
+        cfg = self.cfg
+        x = self._backbone(params, batch)
+        head = self._head(params, x.dtype)
+        labels = batch["labels"]
+        B, S, _ = x.shape
+        chunk = min(LOSS_CHUNK, S)
+        nc = S // chunk if S % chunk == 0 else 1
+        chunk = S // nc
+        xc = x.reshape(B, nc, chunk, -1).swapaxes(0, 1)
+        lc = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def chunk_nll(xs, ls):
+            # checkpointed: the (b, chunk, V) logits are recomputed in the
+            # backward instead of being stacked across the scan (a 256k-
+            # vocab logits stack is ~4 GB/chip otherwise)
+            logits = jnp.einsum("bsd,dv->bsv", xs, head
+                                ).astype(jnp.float32)
+            from repro.models.layers import BATCH_AXES
+            logits = _maybe_shard(logits, BATCH_AXES, None, "model")
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, ls[..., None],
+                                     axis=-1)[..., 0]
+            nll = (logz - ll) + 1e-4 * (logz ** 2)
+            return nll.sum()
+
+        def chunk_loss(carry, inp):
+            xs, ls = inp
+            return carry + chunk_nll(xs, ls), None
+
+        total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32),
+                                (xc, lc))
+        return total / (B * S)
+
+    # ---------------------------------------------------------- serving --
+    def prefill(self, params, batch):
+        """Prompt pass: returns (last-position logits, serving caches)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        S = x.shape[1]
+        positions = jnp.arange(S)[None, :]
+        x, caches = tr.stack_prefill(params["blocks"], cfg, x, positions,
+                                     ctx=self._ctx(params, batch))
+        x = rmsnorm(params["final_norm"], x[:, -1:, :])
+        logits = jnp.einsum("bsd,dv->bsv", x, self._head(params, x.dtype)
+                            ).astype(jnp.float32)
+        return logits, caches
+
+    def decode_step(self, params, batch, pos, caches):
+        """One new token against existing caches.  pos: int32 scalar."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)        # (B, 1, D)
+        x, caches = tr.stack_decode(params["blocks"], cfg, x, pos, caches,
+                                    ctx=self._ctx(params, batch))
+        x = rmsnorm(params["final_norm"], x)
+        logits = jnp.einsum("bsd,dv->bsv", x, self._head(params, x.dtype)
+                            ).astype(jnp.float32)
+        return logits, caches
+
+    # ----------------------------------------------------- cache specs ---
+    def init_caches(self, batch: int, capacity: int) -> Params:
+        """Concrete zero caches with given KV capacity (decode serving)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        unit, n_rep, tail = tr.unit_structure(cfg)
+
+        def one(kind):
+            if kind == "ssm":
+                return ssm_mod.ssm_init_cache(cfg, batch, dt)
+            if kind == "rglru":
+                return rg.rglru_init_cache(cfg, batch, dt)
+            hd = cfg.resolved_head_dim
+            if kind == "cross":
+                T = cfg.n_frontend_tokens
+                return (jnp.zeros((batch, T, cfg.n_kv_heads, hd), dt),
+                        jnp.zeros((batch, T, cfg.n_kv_heads, hd), dt))
+            window = cfg.local_window if cfg.block_pattern else 0
+            T = min(capacity, window) if window else capacity
+            return (jnp.zeros((batch, T, cfg.n_kv_heads, hd), dt),
+                    jnp.zeros((batch, T, cfg.n_kv_heads, hd), dt))
+
+        unit_caches = tuple(
+            jax.tree.map(lambda x: jnp.broadcast_to(x, (n_rep,) + x.shape),
+                         one(kind))
+            for kind in unit)
+        tail_caches = [one(kind) for kind in tail]
+        return {"unit": unit_caches, "tail": tail_caches}
+
+    # ----------------------------------------------------- input specs ---
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this cell
+        (weak-type-correct, shardable, no allocation) — dry-run fuel."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        dt = jnp.dtype(cfg.dtype)
+        sds = jax.ShapeDtypeStruct
+
+        def text_inputs(seq):
+            if cfg.family == "audio":
+                return {"frames": sds((B, seq, cfg.d_model), dt)}
+            return {"tokens": sds((B, seq), i32)}
+
+        if shape.kind == "train":
+            batch = text_inputs(S)
+            batch["labels"] = sds((B, S), i32)
+            if cfg.family == "vlm":
+                batch["image_embeds"] = sds(
+                    (B, cfg.n_frontend_tokens, cfg.d_model), dt)
+            return {"batch": batch}
+        if shape.kind == "prefill":
+            batch = text_inputs(S)
+            if cfg.family == "vlm":
+                batch["image_embeds"] = sds(
+                    (B, cfg.n_frontend_tokens, cfg.d_model), dt)
+            return {"batch": batch}
+        # decode: one token + caches at capacity S
+        batch = text_inputs(1)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = sds(
+                (B, cfg.n_frontend_tokens, cfg.d_model), dt)
+        caches = jax.eval_shape(
+            lambda: self.init_caches(B, S))
+        return {"batch": batch, "pos": sds((), i32), "caches": caches}
+
+
+def build(cfg: ModelConfig) -> LM:
+    return LM(cfg)

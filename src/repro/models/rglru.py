@@ -1,0 +1,126 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrent branch: linear -> causal depthwise conv -> RG-LRU; gate branch:
+linear -> GeLU; merged multiplicatively and projected back.  The RG-LRU:
+
+    r_t = sigmoid(W_a xi_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x xi_t + b_x)          (input gate)
+    log a_t = c * r_t * log sigmoid(Lambda)   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * xi_t)
+
+Training uses ``jax.lax.associative_scan`` over (a, b) pairs (parallel
+prefix — the TPU-native mapping of the linear recurrence); decode is the
+O(1) single step that makes long_500k viable for this arch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense_init, rmsnorm, rmsnorm_init
+
+_C = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a in [0.9, 0.999] at r=1 (Griffin appendix)
+    u = jax.random.uniform(ks[0], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u ** (-1.0 / _C) - 1.0)   # sigmoid(-lam)^c = u... inverse
+    return {
+        "norm": rmsnorm_init(d),
+        "in_rec": dense_init(ks[1], (d, w)),
+        "in_gate": dense_init(ks[2], (d, w)),
+        "conv_w": (jax.random.normal(ks[3], (K, w)) * 0.1
+                   ).astype(jnp.float32),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "w_a": dense_init(ks[4], (w, w)),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_x": dense_init(ks[5], (w, w)),
+        "b_x": jnp.zeros((w,), jnp.float32),
+        "lam": -lam.astype(jnp.float32),
+        "out": dense_init(ks[6], (w, d)),
+    }
+
+
+def _conv(p, x):
+    K = p["conv_w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + x.shape[1], :] * p["conv_w"][i].astype(x.dtype)
+               for i in range(K)) + p["conv_b"].astype(x.dtype)
+
+
+def _gates(p, xi):
+    """log_a (f32) and gated input for the RG-LRU."""
+    r = jax.nn.sigmoid((xi @ p["w_a"].astype(xi.dtype)).astype(jnp.float32)
+                       + p["b_a"])
+    i = jax.nn.sigmoid((xi @ p["w_x"].astype(xi.dtype)).astype(jnp.float32)
+                       + p["b_x"])
+    log_a = _C * r * jax.nn.log_sigmoid(p["lam"])[None, None, :]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * xi.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_forward(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Training forward with parallel associative scan.  (B,S,D)->(B,S,D)."""
+    h = rmsnorm(p["norm"], x)
+    gate = jax.nn.gelu(h @ p["in_gate"].astype(x.dtype))
+    xi = _conv(p, h @ p["in_rec"].astype(x.dtype))
+    a, b = _gates(p, xi)                      # (B,S,W) f32 each
+
+    def combine(left, right):
+        (a1, b1), (a2, b2) = left, right
+        return a2 * a1, a2 * b1 + b2
+
+    _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (hseq * gate.astype(jnp.float32)).astype(x.dtype)
+    return x + y @ p["out"].astype(x.dtype)
+
+
+def rglru_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    K = cfg.ssm_conv
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, K - 1, w), dtype)}
+
+
+def rglru_prefill(p, cfg, x):
+    h = rmsnorm(p["norm"], x)
+    gate = jax.nn.gelu(h @ p["in_gate"].astype(x.dtype))
+    pre = h @ p["in_rec"].astype(x.dtype)
+    xi = _conv(p, pre)
+    a, b = _gates(p, xi)
+
+    def combine(left, right):
+        (a1, b1), (a2, b2) = left, right
+        return a2 * a1, a2 * b1 + b2
+
+    _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (hseq * gate.astype(jnp.float32)).astype(x.dtype)
+    out = x + y @ p["out"].astype(x.dtype)
+    K = cfg.ssm_conv
+    cache = {"h": hseq[:, -1, :],
+             "conv": pre[:, pre.shape[1] - (K - 1):, :]}
+    return out, cache
+
+
+def rglru_decode(p, cfg, x, cache):
+    """One-token step.  x: (B, 1, D)."""
+    h = rmsnorm(p["norm"], x)
+    gate = jax.nn.gelu(h @ p["in_gate"].astype(x.dtype))
+    pre = h @ p["in_rec"].astype(x.dtype)                  # (B,1,W)
+    window = jnp.concatenate([cache["conv"], pre], axis=1)  # (B,K,W)
+    w = p["conv_w"].astype(x.dtype)
+    xi = (jnp.einsum("bkw,kw->bw", window, w)
+          + p["conv_b"].astype(x.dtype))[:, None, :]
+    a, b = _gates(p, xi)
+    hnew = a[:, 0] * cache["h"] + b[:, 0]
+    y = (hnew[:, None, :] * gate.astype(jnp.float32)).astype(x.dtype)
+    out = x + y @ p["out"].astype(x.dtype)
+    return out, {"h": hnew, "conv": window[:, 1:, :]}

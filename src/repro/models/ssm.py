@@ -1,0 +1,201 @@
+"""Mamba-2 (SSD / state-space duality) block — train, prefill and decode.
+
+Chunked SSD algorithm (Dao & Gu, arXiv:2405.21060, "minimal SSD" form):
+within chunks the recurrence is materialised as a masked attention-like
+matmul (MXU-friendly); across chunks a small recurrent state
+(B, H, P, N) is carried by ``lax.scan``.  Decode is the O(1) single-step
+state update — the reason this arch runs the long_500k cell.
+
+Layout: x (B, S, d_inner) viewed as (B, S, H, P); B/C projections are
+single-group (B, S, N) shared across heads; A is per-head scalar decay.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense_init, rmsnorm, rmsnorm_init
+
+
+def ssm_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    din = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    K = cfg.ssm_conv
+    conv_ch = din + 2 * N
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": rmsnorm_init(d),
+        "in_x": dense_init(ks[0], (d, din)),
+        "in_z": dense_init(ks[1], (d, din)),
+        "in_B": dense_init(ks[2], (d, N)),
+        "in_C": dense_init(ks[3], (d, N)),
+        "in_dt": dense_init(ks[4], (d, H)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[5], (K, conv_ch)) * 0.1
+                   ).astype(jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "out_norm": rmsnorm_init(din),
+        "out": dense_init(ks[6], (din, d)),
+    }
+
+
+def _causal_conv(p, xbc: jax.Array) -> jax.Array:
+    """Depthwise causal conv, kernel K.  xbc: (B, S, C)."""
+    K = p["conv_w"].shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :]
+              * p["conv_w"][i].astype(xbc.dtype)
+              for i in range(K))
+    return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+
+def _proj_inputs(p, cfg, x):
+    dt_ = x.dtype
+    h = rmsnorm(p["norm"], x)
+    z = h @ p["in_z"].astype(dt_)
+    xc = h @ p["in_x"].astype(dt_)
+    Bc = h @ p["in_B"].astype(dt_)
+    Cc = h @ p["in_C"].astype(dt_)
+    dt = jax.nn.softplus(
+        (h @ p["in_dt"].astype(dt_)).astype(jnp.float32)
+        + p["dt_bias"])                                   # (B,S,H) f32
+    return z, xc, Bc, Cc, dt
+
+
+def _ssd_chunked(cfg: ModelConfig, xh, Bc, Cc, dt, A, init_state=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P) f32; Bc/Cc: (B,S,N) f32; dt: (B,S,H) f32; A: (H,) f32<0.
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S0, H, P = xh.shape
+    N = Bc.shape[-1]
+    Q = min(cfg.ssm_chunk, S0)
+    pad = (-S0) % Q
+    if pad:
+        # zero-pad the tail: dt=0 there, so decay=1 and contribution=0 —
+        # the carried state is unaffected (verified by decode-consistency
+        # tests with non-multiple prompt lengths)
+        zp = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] *
+                               (t.ndim - 2))
+        xh, Bc, Cc, dt = zp(xh), zp(Bc), zp(Cc), zp(dt)
+    S = S0 + pad
+    nc = S // Q
+    # chunk-major layout for lax.scan: (nc, B, Q, ...) — the whole SSD
+    # runs as ONE scan over chunks carrying the (B,H,P,N) state, so peak
+    # memory is O(chunk), independent of sequence length (required for
+    # the 32k/500k cells).
+    r = lambda t: t.reshape(Bsz, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+    xh, Bc, Cc, dt = r(xh), r(Bc), r(Cc), r(dt)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(state, inp):
+        xh_c, B_c, C_c, dt_c = inp                        # (B,Q,...)
+        dA = dt_c * A[None, None, :]                      # (B,Q,H) < 0
+        La = jnp.cumsum(dA, axis=1)
+        # intra-chunk: decay from t..s, masked in the exponent so
+        # cotangents stay finite (exp of +large would poison where-grads)
+        seg = La[:, :, None, :] - La[:, None, :, :]       # (B,Q,Q,H)
+        seg = jnp.where(causal[None, :, :, None], seg, -1e30)
+        M = jnp.exp(seg) * jnp.einsum("bsn,btn->bst", C_c, B_c)[..., None] \
+            * dt_c[:, None, :, :]                         # (B,Q,Q,H)
+        y_intra = jnp.einsum("bsth,bthp->bshp", M, xh_c)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bsh,bsn,bhpn->bshp",
+                             jnp.exp(La), C_c, state)
+        # state update
+        dec_last = jnp.exp(La[:, -1:, :] - La)            # (B,Q,H)
+        contrib = jnp.einsum("bth,bthp,btn->bhpn",
+                             dec_last * dt_c, xh_c, B_c)
+        new_state = state * jnp.exp(La[:, -1, :])[..., None, None] + contrib
+        return new_state, y_intra + y_inter
+
+    state0 = (init_state if init_state is not None
+              else jnp.zeros((Bsz, H, P, N), jnp.float32))
+    final, y = jax.lax.scan(chunk_step, state0, (xh, Bc, Cc, dt))
+    y = y.swapaxes(0, 1).reshape(Bsz, S, H, P)[:, :S0]
+    return y, final
+
+
+def ssm_forward(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Training forward (B, S, D) -> (B, S, D), residual included."""
+    Bsz, S, D = x.shape
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    z, xc, Bc, Cc, dt = _proj_inputs(p, cfg, x)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    conv_out = _causal_conv(p, conv_in)
+    xc, Bc, Cc = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner
+                                      + cfg.ssm_state], axis=-1)
+    A = -jnp.exp(p["A_log"])
+    xh = xc.reshape(Bsz, S, H, P).astype(jnp.float32)
+    y, _ = _ssd_chunked(cfg, xh, Bc.astype(jnp.float32),
+                        Cc.astype(jnp.float32), dt, A)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    return x + y @ p["out"].astype(x.dtype)
+
+
+# ------------------------------------------------------------- serving ----
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    K = cfg.ssm_conv
+    conv_ch = cfg.d_inner + 2 * N
+    return {
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, conv_ch), dtype),
+    }
+
+
+def ssm_prefill(p, cfg, x):
+    """Forward over a prompt, returning output and the serving cache."""
+    Bsz, S, _ = x.shape
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    z, xc, Bc, Cc, dt = _proj_inputs(p, cfg, x)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    conv_tail = conv_in[:, S - (cfg.ssm_conv - 1):, :]
+    conv_out = _causal_conv(p, conv_in)
+    xc, Bc, Cc = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner
+                                      + cfg.ssm_state], axis=-1)
+    A = -jnp.exp(p["A_log"])
+    xh = xc.reshape(Bsz, S, H, P).astype(jnp.float32)
+    y, final = _ssd_chunked(cfg, xh, Bc.astype(jnp.float32),
+                            Cc.astype(jnp.float32), dt, A)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    out = x + y @ p["out"].astype(x.dtype)
+    return out, {"state": final, "conv": conv_tail}
+
+
+def ssm_decode(p, cfg, x, cache):
+    """One-token step.  x: (B, 1, D).  Returns (out, new_cache)."""
+    Bsz = x.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xc, Bc, Cc, dt = _proj_inputs(p, cfg, x)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)      # (B,1,C)
+    window = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,K,C)
+    w = p["conv_w"].astype(x.dtype)                        # (K, C)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, w)
+        + p["conv_b"].astype(x.dtype))[:, None, :]
+    xc, Bc, Cc = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + N],
+                           axis=-1)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[:, 0, :] * A[None, :])                 # (B,H)
+    xh = xc.reshape(Bsz, H, P).astype(jnp.float32)
+    contrib = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0], xh,
+                         Bc[:, 0].astype(jnp.float32))
+    state = cache["state"] * a[..., None, None] + contrib
+    y = jnp.einsum("bn,bhpn->bhp", Cc[:, 0].astype(jnp.float32), state)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(Bsz, 1, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    out = x + y @ p["out"].astype(x.dtype)
+    return out, {"state": state, "conv": window[:, 1:, :]}

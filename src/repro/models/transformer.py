@@ -1,0 +1,235 @@
+"""Composable decoder stack with lax.scan over repeating layer units.
+
+The layer sequence of every assigned arch is a repetition of a short unit
+(dense: [attn]; mamba2: [ssm]; recurrentgemma: [rglru, rglru, attn] with a
+2-layer tail; vlm: [attn x4, cross]), so the stack scans stacked unit
+params — one compiled unit regardless of depth (compile-time and HLO size
+stay O(unit), which also keeps the 512-device dry-runs tractable).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rglru as rg
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (attention, attention_decode,
+                                 attention_init, attention_prefill,
+                                 cross_attention, mlp, mlp_init, moe,
+                                 moe_init)
+
+Params = Any
+
+
+# --------------------------------------------------------------- structure
+
+def layer_kinds(cfg: ModelConfig) -> list[str]:
+    return [cfg.layer_kind(i) for i in range(cfg.n_layers)]
+
+
+def unit_structure(cfg: ModelConfig) -> tuple[list[str], int, list[str]]:
+    """(unit kinds, n_repetitions, tail kinds)."""
+    kinds = layer_kinds(cfg)
+    if cfg.block_pattern:
+        unit = list(cfg.block_pattern)
+    elif cfg.cross_attn_period:
+        unit = kinds[: cfg.cross_attn_period]
+    else:
+        unit = kinds[:1]
+    n_rep = len(kinds) // len(unit)
+    tail = kinds[n_rep * len(unit):]
+    return unit, n_rep, tail
+
+
+# ------------------------------------------------------------------- init
+
+def _block_init(key, cfg: ModelConfig, kind: str) -> Params:
+    k1, k2 = jax.random.split(key)
+    if kind == "ssm":
+        return {"ssm": ssm_mod.ssm_init(k1, cfg)}
+    if kind == "rglru":
+        return {"rec": rg.rglru_init(k1, cfg), "ffn": mlp_init(k2, cfg)}
+    if kind == "cross":
+        return {"attn": attention_init(k1, cfg, cross=True),
+                "ffn": mlp_init(k2, cfg)}
+    ffn = (moe_init(k2, cfg) if cfg.n_experts else mlp_init(k2, cfg))
+    return {"attn": attention_init(k1, cfg), "ffn": ffn}
+
+
+def stack_init(key, cfg: ModelConfig) -> Params:
+    unit, n_rep, tail = unit_structure(cfg)
+    keys = jax.random.split(key, n_rep * len(unit) + len(tail))
+    reps = []
+    ki = 0
+    for _ in range(n_rep):
+        blocks = []
+        for kind in unit:
+            blocks.append(_block_init(keys[ki], cfg, kind))
+            ki += 1
+        reps.append(tuple(blocks))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+    tail_params = []
+    for kind in tail:
+        tail_params.append(_block_init(keys[ki], cfg, kind))
+        ki += 1
+    return {"unit": stacked, "tail": tail_params}
+
+
+# ---------------------------------------------------------------- forward
+
+def _apply_block(kind: str, p: Params, cfg: ModelConfig, x, positions,
+                 ctx):
+    if kind == "ssm":
+        return ssm_mod.ssm_forward(p["ssm"], cfg, x)
+    if kind == "rglru":
+        x = rg.rglru_forward(p["rec"], cfg, x)
+        return mlp(p["ffn"], cfg, x)
+    if kind == "cross":
+        x = cross_attention(p["attn"], cfg, x, ctx)
+        return mlp(p["ffn"], cfg, x)
+    window = cfg.local_window if cfg.block_pattern else 0
+    x = attention(p["attn"], cfg, x, positions, window=window)
+    if cfg.n_experts:
+        return moe(p["ffn"], cfg, x)
+    return mlp(p["ffn"], cfg, x)
+
+
+# Optional remat policy for the layer-scan checkpoint (perf knob):
+# None = full recompute (4x fwd flops in training);
+# "dots" = save matmul outputs, recompute elementwise only (~3x)
+REMAT_POLICY: str | None = None
+
+
+def set_remat_policy(name: str | None) -> None:
+    global REMAT_POLICY
+    assert name in (None, "dots"), name
+    REMAT_POLICY = name
+
+
+def _checkpoint(fn):
+    if REMAT_POLICY == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def stack_forward(params: Params, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, ctx: jax.Array | None = None
+                  ) -> jax.Array:
+    unit, _, tail = unit_structure(cfg)
+
+    def unit_fn(h, unit_params):
+        for kind, p in zip(unit, unit_params):
+            h = _apply_block(kind, p, cfg, h, positions, ctx)
+        return h
+
+    if cfg.remat:
+        unit_fn = _checkpoint(unit_fn)
+
+    def body(h, unit_params):
+        return unit_fn(h, unit_params), None
+
+    x, _ = jax.lax.scan(body, x, params["unit"])
+    for kind, p in zip(tail, params["tail"]):
+        x = _apply_block(kind, p, cfg, x, positions, ctx)
+    return x
+
+
+# ------------------------------------------------------------- serving ---
+
+def _block_prefill(kind, p, cfg, x, positions, ctx):
+    if kind == "ssm":
+        out, cache = ssm_mod.ssm_prefill(p["ssm"], cfg, x)
+        return out, cache
+    if kind == "rglru":
+        x, cache = rg.rglru_prefill(p["rec"], cfg, x)
+        return mlp(p["ffn"], cfg, x), cache
+    if kind == "cross":
+        x = cross_attention(p["attn"], cfg, x, ctx)
+        # cache the projected image K/V once (static during decode)
+        from repro.models.layers import _qkv, rmsnorm
+        c = rmsnorm(p["attn"]["kv_norm"], ctx)
+        _, k, v = _qkv(p["attn"], cfg, c, c)
+        return mlp(p["ffn"], cfg, x), (k, v)
+    window = cfg.local_window if cfg.block_pattern else 0
+    x, (k, v) = attention_prefill(p["attn"], cfg, x, positions,
+                                  window=window)
+    if window:
+        # keep only the ring window, rolled so position p sits at slot
+        # p % window (the layout attention_decode's ring writes expect)
+        S = k.shape[1]
+        if S >= window:
+            k = jnp.roll(k[:, -window:], S % window, axis=1)
+            v = jnp.roll(v[:, -window:], S % window, axis=1)
+    ffn = moe if cfg.n_experts else mlp
+    return ffn(p["ffn"], cfg, x), (k, v)
+
+
+def _block_decode(kind, p, cfg, x, pos, cache, ctx):
+    if kind == "ssm":
+        return ssm_mod.ssm_decode(p["ssm"], cfg, x, cache)
+    if kind == "rglru":
+        x, cache = rg.rglru_decode(p["rec"], cfg, x, cache)
+        return mlp(p["ffn"], cfg, x), cache
+    if kind == "cross":
+        from repro.models.layers import _sdpa, rmsnorm
+        k, v = cache
+        h = rmsnorm(p["attn"]["norm"], x)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"].astype(x.dtype))
+        if cfg.qk_norm:
+            q = rmsnorm(p["attn"]["q_norm"], q)
+        o = _sdpa(q, k.astype(x.dtype), v.astype(x.dtype), None,
+                  cfg.n_kv_heads)
+        x = x + jnp.einsum("bshk,hkd->bsd", o,
+                           p["attn"]["wo"].astype(x.dtype))
+        return mlp(p["ffn"], cfg, x), cache
+    window = cfg.local_window if cfg.block_pattern else 0
+    x, cache = attention_decode(p["attn"], cfg, x, cache, pos,
+                                window=window)
+    ffn = moe if cfg.n_experts else mlp
+    return ffn(p["ffn"], cfg, x), cache
+
+
+def stack_prefill(params, cfg, x, positions, ctx=None):
+    unit, _, tail = unit_structure(cfg)
+
+    def unit_fn(h, unit_params):
+        caches = []
+        for kind, p in zip(unit, unit_params):
+            h, c = _block_prefill(kind, p, cfg, h, positions, ctx)
+            caches.append(c)
+        return h, tuple(caches)
+
+    def body(h, unit_params):
+        return unit_fn(h, unit_params)
+
+    x, unit_caches = jax.lax.scan(body, x, params["unit"])
+    tail_caches = []
+    for kind, p in zip(tail, params["tail"]):
+        x, c = _block_prefill(kind, p, cfg, x, positions, ctx)
+        tail_caches.append(c)
+    return x, {"unit": unit_caches, "tail": tail_caches}
+
+
+def stack_decode(params, cfg, x, pos, caches, ctx=None):
+    unit, _, tail = unit_structure(cfg)
+
+    def body(h, scanned):
+        unit_params, unit_cache = scanned
+        new_caches = []
+        for kind, p, c in zip(unit, unit_params, unit_cache):
+            h, nc = _block_decode(kind, p, cfg, h, pos, c, ctx)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    x, new_unit_caches = jax.lax.scan(
+        body, x, (params["unit"], caches["unit"]))
+    new_tail = []
+    for kind, p, c in zip(tail, params["tail"], caches["tail"]):
+        x, nc = _block_decode(kind, p, cfg, x, pos, c, ctx)
+        new_tail.append(nc)
+    return x, {"unit": new_unit_caches, "tail": new_tail}

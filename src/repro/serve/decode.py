@@ -1,0 +1,58 @@
+"""Greedy/sampled autoregressive generation on top of prefill/decode_step."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _grow_attention_caches(lm, caches, capacity: int):
+    """Pad prefill-length KV caches up to decode capacity."""
+    cfg = lm.cfg
+    window = cfg.local_window if cfg.block_pattern else 0
+
+    def grow(leaf):
+        if (hasattr(leaf, "ndim") and leaf.ndim >= 4
+                and cfg.n_kv_heads and leaf.shape[-2] == cfg.n_kv_heads):
+            seq_ax = leaf.ndim - 3
+            if (cfg.family == "vlm"
+                    and leaf.shape[seq_ax] == cfg.n_frontend_tokens):
+                return leaf                      # image K/V: fixed
+            cap = min(capacity, window) if window else capacity
+            pad = cap - leaf.shape[seq_ax]
+            if pad > 0:
+                widths = [(0, 0)] * leaf.ndim
+                widths[seq_ax] = (0, pad)
+                return jnp.pad(leaf, widths)
+        return leaf
+
+    return jax.tree.map(grow, caches)
+
+
+def generate(lm, params, batch, n_tokens: int,
+             temperature: float = 0.0, seed: int = 0) -> np.ndarray:
+    """Prefill the prompt then decode ``n_tokens`` greedily (or sampled).
+
+    batch: the prompt inputs (tokens (B, S) etc.).  Returns (B, n_tokens).
+    """
+    cfg = lm.cfg
+    prompt = batch["tokens"]
+    B, S = prompt.shape
+    capacity = S + n_tokens
+    prefill = jax.jit(lm.prefill)
+    step = jax.jit(lm.decode_step)
+    logits, caches = prefill(params, batch)
+    caches = _grow_attention_caches(lm, caches, capacity)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for t in range(n_tokens):
+        if temperature > 0:
+            key, sk = jax.random.split(key)
+            tok = jax.random.categorical(sk, logits[:, -1] / temperature)
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)
+        out.append(np.asarray(tok))
+        bt = dict(batch)
+        bt["tokens"] = tok[:, None].astype(jnp.int32)
+        logits, caches = step(params, bt, jnp.int32(S + t), caches)
+    return np.stack(out, axis=1)

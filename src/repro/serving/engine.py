@@ -1,0 +1,221 @@
+"""The cloud-native query engine: index × storage simulator × cache.
+
+Closed-loop serving (paper §5.1): ``concurrency`` workers drain the query
+queue; each query runs its index ``search_plan`` generator, whose fetch
+batches flow through the cache and the discrete-event storage simulator.
+Compute phases are priced from the metrics deltas the plan records
+(distance comps × ComputeSpec) — reproducing the CPU/I/O split of Fig 2/3.
+
+Everything is virtual-time deterministic for a given seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Iterable
+
+import numpy as np
+
+from repro.cache.slru import PinnedCache, SLRUCache
+from repro.core.cost_model import DEFAULT_COMPUTE, ComputeSpec
+from repro.core.types import QueryMetrics, SearchParams
+from repro.serving.metrics import BatchTrace, QueryRecord, WorkloadReport
+from repro.storage.simulator import StorageSim
+from repro.storage.spec import StorageSpec
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    storage: StorageSpec
+    concurrency: int = 1
+    cache_bytes: int = 0
+    cache_policy: str = "slru"         # "slru" | "pinned" | "none"
+    pinned_keys: frozenset | None = None
+    hit_latency_s: float = 100e-6      # local (memory/SSD) cache service
+    compute: ComputeSpec = dataclasses.field(default_factory=ComputeSpec)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class _QueryState:
+    qid: int
+    gen: object
+    metrics: QueryMetrics
+    start_t: float
+    batches: list[BatchTrace]
+    round_idx: int = 0
+    last_snapshot: tuple = (0, 0)
+    pending_batch: object = None        # FetchBatch in flight
+    pending_submit_t: float = 0.0
+    pending_hits: int = 0
+    pending_total_bytes: int = 0
+
+
+class QueryEngine:
+    def __init__(self, index, config: EngineConfig):
+        self.index = index
+        self.cfg = config
+        self.cache = self._make_cache()
+        # compute-pricing constants from the index
+        self.dim = index.meta.dim
+        pq = getattr(index.meta, "pq", None)
+        self.pq_m = pq.m if pq is not None else 0
+
+    def _make_cache(self):
+        cfg = self.cfg
+        if cfg.cache_policy == "pinned" and cfg.pinned_keys:
+            return PinnedCache(set(cfg.pinned_keys))
+        if cfg.cache_policy == "slru" and cfg.cache_bytes > 0:
+            return SLRUCache(cfg.cache_bytes)
+        return None
+
+    # ------------------------------------------------------------------ --
+    def _compute_seconds(self, st: _QueryState) -> float:
+        """Price the compute the plan did since the last yield."""
+        m = st.metrics
+        d0, p0 = st.last_snapshot
+        dd = m.dist_comps - d0
+        dp = m.pq_dist_comps - p0
+        st.last_snapshot = (m.dist_comps, m.pq_dist_comps)
+        c = self.cfg.compute
+        return (dd * 2.0 * self.dim / c.dist_flops_per_s
+                + dp * max(self.pq_m, 1) * c.adc_lookup_s)
+
+    def run(self, queries: np.ndarray, params: SearchParams,
+            query_ids: Iterable[int] | None = None) -> WorkloadReport:
+        cfg = self.cfg
+        sim = StorageSim(cfg.storage, seed=cfg.seed)
+        store = self.index.store
+        qids = list(query_ids) if query_ids is not None else list(
+            range(len(queries)))
+
+        # engine event heap: (time, seq, kind, payload)
+        events: list = []
+        seq = 0
+
+        def push(t, kind, payload):
+            nonlocal seq
+            heapq.heappush(events, (t, seq, kind, payload))
+            seq += 1
+
+        queue = list(range(len(queries)))
+        queue.reverse()                      # pop() serves in order
+        records: list[QueryRecord] = []
+        waiting: dict[int, _QueryState] = {}  # batch_id -> state
+        clock = 0.0
+
+        def start_next_query(t: float):
+            if not queue:
+                return
+            qi = queue.pop()
+            metrics = QueryMetrics()
+            gen = self.index.search_plan(queries[qi], params, metrics)
+            st = _QueryState(qid=qids[qi], gen=gen, metrics=metrics,
+                             start_t=t, batches=[])
+            _advance(st, t, first=True)
+
+        def _submit(st: _QueryState, batch, t: float):
+            """Cache-split the batch and route misses to storage."""
+            hits = 0
+            miss_bytes = 0
+            miss_n = 0
+            for rq in batch.requests:
+                st.metrics.cache_lookups += 1
+                if self.cache is not None and self.cache.get(rq.key):
+                    hits += 1
+                    st.metrics.cache_hits += 1
+                else:
+                    miss_bytes += rq.nbytes
+                    miss_n += 1
+            st.metrics.bytes_storage += miss_bytes
+            st.pending_batch = batch
+            st.pending_submit_t = t
+            st.pending_hits = hits
+            st.pending_total_bytes = batch.nbytes
+            if miss_n == 0:
+                push(t + cfg.hit_latency_s, "fetched", (st, t + cfg.hit_latency_s, 0, 0))
+            else:
+                ticket = sim.submit_batch(t, miss_bytes, miss_n)
+                waiting[ticket.batch_id] = st
+
+        def _advance(st: _QueryState, t: float, first: bool = False,
+                     payloads: dict | None = None):
+            """Resume the generator; charge compute; submit next batch."""
+            try:
+                if first:
+                    batch = next(st.gen)
+                else:
+                    batch = st.gen.send(payloads)
+            except StopIteration as stop:
+                res = stop.value
+                dt = self._compute_seconds(st)
+                records.append(QueryRecord(
+                    qid=st.qid, start_t=st.start_t, end_t=t + dt,
+                    ids=res.ids, dists=res.dists, metrics=st.metrics,
+                    batches=st.batches))
+                start_next_query(t + dt)
+                return
+            dt = self._compute_seconds(st)
+            push(t + dt, "submit", (st, batch))
+
+        def _on_fetched(st: _QueryState, t: float, n_storage_req: int,
+                        storage_bytes: int):
+            batch = st.pending_batch
+            st.batches.append(BatchTrace(
+                round_idx=st.round_idx, submit_t=st.pending_submit_t,
+                done_t=t, n_requests=n_storage_req,
+                n_hits=st.pending_hits, nbytes_storage=storage_bytes,
+                nbytes_total=st.pending_total_bytes))
+            st.round_idx += 1
+            if self.cache is not None:
+                for rq in batch.requests:
+                    self.cache.put(rq.key, rq.nbytes)
+            payloads = {rq.key: store.get(rq.key) for rq in batch.requests}
+            st.pending_batch = None
+            _advance(st, t, payloads=payloads)
+
+        # ---- bootstrap: fill the concurrency window --------------------
+        for _ in range(min(cfg.concurrency, len(queue))):
+            start_next_query(0.0)
+
+        # ---- main interleaved event loop -------------------------------
+        while events or sim.busy:
+            t_engine = events[0][0] if events else float("inf")
+            t_storage = sim.next_event_time()
+            t_storage = t_storage if t_storage is not None else float("inf")
+            if t_storage < t_engine:
+                for ticket in sim.advance_to(t_storage):
+                    st = waiting.pop(ticket.batch_id)
+                    clock = max(clock, ticket.done_t)
+                    _on_fetched(st, ticket.done_t, ticket.n_requests,
+                                ticket.nbytes)
+            elif events:
+                t, _, kind, payload = heapq.heappop(events)
+                sim.advance_to(t)
+                clock = max(clock, t)
+                if kind == "submit":
+                    st, batch = payload
+                    _submit(st, batch, t)
+                elif kind == "fetched":
+                    st, tt, nreq, nbytes = payload
+                    _on_fetched(st, tt, nreq, nbytes)
+            else:
+                break
+
+        wall = max((r.end_t for r in records), default=0.0)
+        return WorkloadReport(
+            records=records, wall_time_s=wall,
+            storage_bytes=sim.total_bytes,
+            storage_requests=sim.total_requests,
+            concurrency=cfg.concurrency)
+
+
+def run_workload(index, queries: np.ndarray, params: SearchParams,
+                 storage: StorageSpec, concurrency: int = 1,
+                 cache_bytes: int = 0, seed: int = 0,
+                 compute: ComputeSpec = DEFAULT_COMPUTE) -> WorkloadReport:
+    """One-call convenience used by the benchmark harnesses."""
+    eng = QueryEngine(index, EngineConfig(
+        storage=storage, concurrency=concurrency, cache_bytes=cache_bytes,
+        compute=compute, seed=seed))
+    return eng.run(queries, params)

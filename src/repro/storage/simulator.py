@@ -1,0 +1,157 @@
+"""Discrete-event simulator of remote-storage I/O (paper §2.2 mechanisms).
+
+Three resources gate every fetch batch:
+
+1. **GET-rate limiter** (token bucket at ``get_qps_limit``): every request
+   in a batch consumes a token — DiskANN's W batched requests still count
+   as W IOs (paper footnote 8).  Under saturation this produces exactly
+   the Fig 10d / Fig 19e IOPS ceiling.
+2. **TTFB**: one lognormal sample per batch (requests in a batch are
+   issued concurrently, so their first bytes arrive together); this gives
+   graph search its ``rt × TTFB`` latency floor (§2.3.2).
+3. **Shared bandwidth pipe** (processor sharing): all in-flight batch
+   transfers progress at ``bandwidth / n_active`` — I/O congestion rises
+   with recall × concurrency exactly as in Fig 9.
+
+The simulator is deterministic for a given seed and tracks virtual time;
+batches are the unit of transfer, requests the unit of rate limiting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Callable
+
+import numpy as np
+
+from repro.storage.spec import StorageSpec
+
+
+@dataclasses.dataclass
+class BatchTicket:
+    batch_id: int
+    submit_t: float
+    start_t: float = 0.0         # transfer start (post admission + TTFB)
+    done_t: float = 0.0
+    nbytes: int = 0
+    n_requests: int = 0
+
+
+class _SharedPipe:
+    """Exact processor-sharing pipe: active transfers share bandwidth."""
+
+    def __init__(self, bandwidth_Bps: float):
+        self.bw = bandwidth_Bps
+        self.active: dict[int, float] = {}     # id -> remaining bytes
+        self.t = 0.0
+
+    def _advance(self, t: float) -> None:
+        if t <= self.t:
+            return
+        if self.active:
+            rate = self.bw / len(self.active)
+            dt = t - self.t
+            for k in self.active:
+                self.active[k] -= rate * dt
+        self.t = t
+
+    def add(self, t: float, tid: int, nbytes: float) -> None:
+        self._advance(t)
+        self.active[tid] = max(float(nbytes), 1.0)
+
+    def next_completion(self) -> tuple[float, int] | None:
+        """(time, id) of the earliest finishing transfer, else None."""
+        if not self.active:
+            return None
+        rate = self.bw / len(self.active)
+        tid, rem = min(self.active.items(), key=lambda kv: kv[1])
+        return self.t + max(rem, 0.0) / rate, tid
+
+    def complete(self, t: float, tid: int) -> None:
+        self._advance(t)
+        self.active.pop(tid, None)
+
+
+class StorageSim:
+    """Event-driven storage backend.
+
+    Usage (driven by the serving engine): ``submit_batch`` returns a
+    ticket; ``run_until_next_completion`` pops the next finished transfer.
+    """
+
+    def __init__(self, spec: StorageSpec, seed: int = 0):
+        self.spec = spec
+        self.pipe = _SharedPipe(spec.bandwidth_Bps)
+        self.rng = np.random.default_rng(seed)
+        self._bucket_vt = 0.0                  # IOPS token-bucket clock
+        self._next_id = 0
+        self._pending: list[tuple[float, int]] = []   # (start_t, batch_id)
+        self._tickets: dict[int, BatchTicket] = {}
+        # aggregates
+        self.total_bytes = 0
+        self.total_requests = 0
+
+    # ----------------------------------------------------------- submit --
+    def sample_ttfb(self) -> float:
+        s = self.spec.ttfb_sigma
+        mu = math.log(self.spec.ttfb_p50_s)
+        return float(np.exp(self.rng.normal(mu, s)))
+
+    def submit_batch(self, t: float, nbytes: int, n_requests: int
+                     ) -> BatchTicket:
+        """Admit a dependency-free batch of GETs at virtual time t."""
+        tid = self._next_id
+        self._next_id += 1
+        # 1) GET-rate admission: n tokens at get_qps_limit
+        self._bucket_vt = max(self._bucket_vt, t) + (
+            n_requests / self.spec.get_qps_limit)
+        admit_t = max(t, self._bucket_vt)
+        # 2) TTFB (one overlapped sample per batch)
+        start_t = admit_t + self.sample_ttfb() + self.spec.min_latency_s
+        ticket = BatchTicket(batch_id=tid, submit_t=t, start_t=start_t,
+                             nbytes=nbytes, n_requests=n_requests)
+        self._tickets[tid] = ticket
+        heapq.heappush(self._pending, (start_t, tid))
+        self.total_bytes += nbytes
+        self.total_requests += n_requests
+        return ticket
+
+    # ------------------------------------------------------------- step --
+    def next_event_time(self) -> float | None:
+        """Earliest among pending transfer-starts and pipe completions."""
+        cands = []
+        if self._pending:
+            cands.append(self._pending[0][0])
+        nc = self.pipe.next_completion()
+        if nc is not None:
+            cands.append(nc[0])
+        return min(cands) if cands else None
+
+    def advance_to(self, t: float) -> list[BatchTicket]:
+        """Advance the clock to ``t``; returns batches completed by then."""
+        done: list[BatchTicket] = []
+        while True:
+            nxt = None
+            if self._pending:
+                nxt = ("start", self._pending[0][0])
+            nc = self.pipe.next_completion()
+            if nc is not None and (nxt is None or nc[0] < nxt[1]):
+                nxt = ("done", nc[0], nc[1])
+            if nxt is None or nxt[1] > t + 1e-15:
+                break
+            if nxt[0] == "start":
+                st, tid = heapq.heappop(self._pending)
+                self.pipe.add(st, tid, self._tickets[tid].nbytes)
+            else:
+                _, ct, tid = nxt
+                self.pipe.complete(ct, tid)
+                tk = self._tickets.pop(tid)
+                tk.done_t = ct
+                done.append(tk)
+        self.pipe._advance(t)
+        return done
+
+    @property
+    def busy(self) -> bool:
+        return bool(self._pending or self.pipe.active)

@@ -1,0 +1,52 @@
+"""Train step: loss -> grads -> AdamW, with optional microbatch grad
+accumulation (``lax.scan`` over microbatches keeps HLO size constant)."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LM
+from repro.train import optimizer as opt
+
+Params = Any
+
+
+def make_train_step(lm: LM, ocfg: opt.OptimizerConfig,
+                    microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, state,
+    metrics).  batch leaves have leading dim global_batch."""
+
+    def loss_fn(params, batch):
+        return lm.loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc_fn(carry, mbatch):
+                loss_acc, gacc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mbatch)
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                    gacc, grads)
+                return (loss_acc + loss / microbatches, gacc), None
+
+            (loss, grads), _ = jax.lax.scan(
+                acc_fn, (jnp.zeros((), jnp.float32), zeros), mb)
+        params, opt_state, stats = opt.apply_updates(
+            ocfg, params, grads, opt_state)
+        metrics = {"loss": loss, **stats}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,79 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cache.slru import PinnedCache, SLRUCache
+
+
+def test_basic_hit_miss():
+    c = SLRUCache(100)
+    assert not c.get("a")
+    c.put("a", 40)
+    assert c.get("a")
+    assert c.hit_rate == 0.5
+
+
+def test_eviction_at_capacity():
+    c = SLRUCache(100)
+    for i in range(5):
+        c.put(i, 40)
+    assert c.used_bytes <= 100
+
+
+def test_scan_resistance():
+    """A one-time scan must not evict the protected working set."""
+    c = SLRUCache(1000, protected_frac=0.8)
+    for i in range(10):
+        c.put(("hot", i), 50)
+        c.get(("hot", i))        # promote to protected
+    for j in range(100):         # huge scan of cold keys
+        c.get(("cold", j))
+        c.put(("cold", j), 50)
+    hot_alive = sum(1 for i in range(10) if ("hot", i) in c)
+    assert hot_alive >= 8
+
+
+def test_protected_demotion_not_eviction():
+    c = SLRUCache(200, protected_frac=0.5)
+    for i in range(4):
+        c.put(i, 50)
+        c.get(i)                 # all promoted; protected cap = 100 -> demote
+    assert c.protected_bytes <= 100
+    assert c.used_bytes <= 200
+
+
+def test_zero_capacity_never_hits():
+    c = SLRUCache(0)
+    c.put("a", 10)
+    assert not c.get("a")
+
+
+def test_oversized_object_rejected():
+    c = SLRUCache(100)
+    c.put("big", 500)
+    assert "big" not in c
+
+
+def test_pinned_cache():
+    p = PinnedCache({1, 2})
+    assert p.get(1) and p.get(2) and not p.get(3)
+    p.put(3, 10)
+    assert not p.get(3)          # contents fixed
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 30), st.integers(1, 50)),
+                min_size=1, max_size=200),
+       st.integers(50, 400))
+def test_slru_invariants(ops, cap):
+    """Property: byte accounting is exact and capacity never exceeded."""
+    c = SLRUCache(cap)
+    for key, size in ops:
+        if not c.get(key):
+            c.put(key, size)
+        assert c.used_bytes <= cap
+        assert c.probation_bytes == sum(c.probation.values())
+        assert c.protected_bytes == sum(c.protected.values())
+        # no key in both segments
+        assert not (set(c.probation) & set(c.protected))

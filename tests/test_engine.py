@@ -1,0 +1,123 @@
+"""Integration tests: serving engine reproduces the paper's mechanisms."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.cluster_index import ClusterIndex
+from repro.core.flat import exact_topk
+from repro.core.graph_index import GraphIndex
+from repro.core.types import ClusterIndexParams, GraphIndexParams, SearchParams
+from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
+from repro.serving.engine import EngineConfig, QueryEngine, run_workload
+from repro.storage.spec import SSD, TOS, StorageSpec
+
+
+def _quiet(spec):
+    return dataclasses.replace(spec, ttfb_sigma=1e-9)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = scaled(DEEP_ANALOG, 2000, 32)
+    data, queries = make_dataset(spec)
+    gt, _ = exact_topk(data, queries, 10)
+    ci = ClusterIndex.build(data, ClusterIndexParams(seed=0))
+    gi = GraphIndex.build(data, GraphIndexParams(
+        R=32, L_build=64, pq_dims=48, seed=0), batch=256)
+    return data, queries, gt, ci, gi
+
+
+def test_results_identical_to_direct_search(setup):
+    """The engine changes *timing*, never *results*."""
+    _, queries, _, ci, gi = setup
+    p = SearchParams(k=10, nprobe=16)
+    rep = run_workload(ci, queries[:8], p, _quiet(TOS))
+    for rec in rep.records:
+        direct = ci.search(queries[rec.qid], p)
+        np.testing.assert_array_equal(rec.ids, direct.ids)
+    p = SearchParams(k=10, search_len=40, beamwidth=8)
+    rep = run_workload(gi, queries[:8], p, _quiet(TOS))
+    for rec in rep.records:
+        direct = gi.search(queries[rec.qid], p)
+        np.testing.assert_array_equal(rec.ids, direct.ids)
+
+
+def test_cloud_slower_than_ssd(setup):
+    """Fig 3f: both indexes lose QPS moving disk -> remote storage."""
+    _, queries, _, ci, gi = setup
+    p = SearchParams(k=10, nprobe=32)
+    qps = {}
+    for spec in [TOS, SSD]:
+        rep = run_workload(ci, queries, p, _quiet(spec))
+        qps[spec.name] = rep.qps
+    assert qps["local-ssd"] > 3 * qps["volcano-tos"]
+
+
+def test_graph_latency_floor_is_rt_times_ttfb(setup):
+    """§2.3.2: graph query latency >= roundtrips x TTFB on remote storage."""
+    _, queries, _, _, gi = setup
+    p = SearchParams(k=10, search_len=40, beamwidth=4)
+    rep = run_workload(gi, queries[:10], p, _quiet(TOS))
+    for rec in rep.records:
+        floor = rec.metrics.roundtrips * TOS.ttfb_p50_s
+        assert rec.latency >= 0.95 * floor
+
+
+def test_concurrency_scales_graph_qps(setup):
+    """Fig 3g: graph QPS scales with concurrency (I/O underutilised)."""
+    _, queries, _, _, gi = setup
+    p = SearchParams(k=10, search_len=40, beamwidth=8)
+    q1 = run_workload(gi, queries, p, _quiet(TOS), concurrency=1).qps
+    q16 = run_workload(gi, queries, p, _quiet(TOS), concurrency=16).qps
+    assert q16 > 5 * q1
+
+
+def test_cluster_congestion_at_high_concurrency(setup):
+    """Fig 9: SPANN mean I/O latency rises with concurrency (shared bw)."""
+    _, queries, _, ci, _ = setup
+    p = SearchParams(k=10, nprobe=128)
+    io1 = run_workload(ci, queries, p, _quiet(TOS), concurrency=1)
+    io32 = run_workload(ci, queries, p, _quiet(TOS), concurrency=32)
+    assert io32.mean_io_latency > 2 * io1.mean_io_latency
+
+
+def test_cache_reduces_storage_traffic(setup):
+    """Fig 22: cache hits cut bytes-from-storage and requests (IOPS)."""
+    _, queries, _, ci, _ = setup
+    p = SearchParams(k=10, nprobe=64)
+    cold = run_workload(ci, np.concatenate([queries, queries]), p,
+                        _quiet(TOS), cache_bytes=0)
+    warm = run_workload(ci, np.concatenate([queries, queries]), p,
+                        _quiet(TOS), cache_bytes=1 << 30)
+    assert warm.hit_rate > 0.3
+    assert warm.storage_bytes < cold.storage_bytes
+    assert warm.storage_requests < cold.storage_requests
+    assert warm.qps > cold.qps
+
+
+def test_closed_loop_concurrency_bound(setup):
+    """Never more than `concurrency` queries overlap in virtual time."""
+    _, queries, _, ci, _ = setup
+    p = SearchParams(k=10, nprobe=16)
+    rep = run_workload(ci, queries, p, _quiet(TOS), concurrency=4)
+    events = []
+    for r in rep.records:
+        events.append((r.start_t, 1))
+        events.append((r.end_t, -1))
+    events.sort()
+    live = peak = 0
+    for _, delta in events:
+        live += delta
+        peak = max(peak, live)
+    assert peak <= 4
+    assert len(rep.records) == len(queries)
+
+
+def test_engine_deterministic(setup):
+    _, queries, _, ci, _ = setup
+    p = SearchParams(k=10, nprobe=16)
+    a = run_workload(ci, queries[:16], p, TOS, concurrency=4, seed=3)
+    b = run_workload(ci, queries[:16], p, TOS, concurrency=4, seed=3)
+    assert a.wall_time_s == b.wall_time_s
+    assert a.qps == b.qps

@@ -1,0 +1,137 @@
+import numpy as np
+import pytest
+
+from repro.core.flat import exact_topk
+from repro.core.graph_index import GraphIndex, _merge_candidates, _robust_prune
+from repro.core.types import GraphIndexParams, SearchParams, recall_at_k
+from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
+
+
+@pytest.fixture(scope="module")
+def built():
+    spec = scaled(DEEP_ANALOG, 2000, 20)
+    data, queries = make_dataset(spec)
+    gt, _ = exact_topk(data, queries, 10)
+    idx = GraphIndex.build(
+        data, GraphIndexParams(R=32, L_build=64, pq_dims=48, seed=0),
+        batch=256)
+    return data, queries, gt, idx
+
+
+def _run(idx, queries, gt, **kw):
+    recs, rts, reqs = [], [], []
+    for i, q in enumerate(queries):
+        r = idx.search(q, SearchParams(k=10, **kw))
+        recs.append(recall_at_k(r.ids, gt[i]))
+        rts.append(r.metrics.roundtrips)
+        reqs.append(r.metrics.requests)
+    return float(np.mean(recs)), float(np.mean(rts)), float(np.mean(reqs))
+
+
+def test_recall_increases_with_search_len(built):
+    _, queries, gt, idx = built
+    r10, rt10, _ = _run(idx, queries, gt, search_len=10, beamwidth=8)
+    r80, rt80, _ = _run(idx, queries, gt, search_len=80, beamwidth=8)
+    assert r80 >= r10
+    assert r80 >= 0.9
+    assert rt80 > rt10          # paper: higher recall -> more roundtrips
+
+
+def test_beamwidth_reduces_roundtrips(built):
+    """Paper Fig 19a: higher W -> fewer roundtrips, more requests/query."""
+    _, queries, gt, idx = built
+    r1, rt1, req1 = _run(idx, queries, gt, search_len=80, beamwidth=1)
+    r16, rt16, req16 = _run(idx, queries, gt, search_len=80, beamwidth=16)
+    assert rt16 < rt1
+    assert abs(r16 - r1) < 0.08  # recall roughly preserved
+
+
+def test_graph_degree_bounded(built):
+    data, _, _, idx = built
+    arrs = idx.device_arrays()
+    adj = arrs["adjacency"]
+    assert adj.shape[1] == idx.meta.params.R
+    valid = adj >= 0
+    assert valid.sum(1).max() <= idx.meta.params.R
+    # no self loops
+    self_loop = adj == np.arange(len(adj))[:, None]
+    assert not self_loop.any()
+
+
+def test_exact_rerank_distances(built):
+    data, queries, _, idx = built
+    r = idx.search(queries[0], SearchParams(k=10, search_len=40, beamwidth=8))
+    valid = r.ids >= 0
+    want = ((data[r.ids[valid]].astype(np.float32)
+             - queries[0].astype(np.float32)[None]) ** 2).sum(1)
+    np.testing.assert_allclose(r.dists[valid], want, rtol=1e-4)
+
+
+def test_node_block_is_sector_aligned(built):
+    _, _, _, idx = built
+    assert idx.meta.node_nbytes % idx.meta.params.sector_bytes == 0
+    # 96-d f32 + 32 neighbours fits one 4KB sector
+    assert idx.meta.node_nbytes == 4096
+
+
+def test_denser_graph_bigger_blocks():
+    spec = scaled(DEEP_ANALOG, 800, 5)
+    data, _ = make_dataset(spec)
+    # 96-d f32 vector (384B) + 1000*4B adjacency spills into a 2nd sector
+    big = GraphIndex.build(
+        data, GraphIndexParams(R=1000, L_build=32, build_passes=1, seed=0),
+        batch=256)
+    small = GraphIndex.build(
+        data, GraphIndexParams(R=32, L_build=32, build_passes=1, seed=0),
+        batch=256)
+    assert big.meta.node_nbytes > small.meta.node_nbytes
+
+
+# ---------------------------------------------------------------- units --
+
+def test_merge_candidates_invariants():
+    rng = np.random.default_rng(0)
+    B, L = 4, 8
+    cand_ids = rng.integers(0, 50, size=(B, L)).astype(np.int64)
+    cand_d = rng.random((B, L)).astype(np.float32)
+    expanded = rng.random((B, L)) < 0.5
+    new_ids = rng.integers(0, 50, size=(B, 6)).astype(np.int64)
+    new_d = rng.random((B, 6)).astype(np.float32)
+    ids, d, e = _merge_candidates(cand_ids, cand_d, expanded,
+                                  new_ids, new_d, L)
+    assert ids.shape == (B, L)
+    for b in range(B):
+        valid = ids[b][ids[b] >= 0]
+        assert len(np.unique(valid)) == len(valid)       # dedup
+        dv = d[b][ids[b] >= 0]
+        assert (np.diff(dv) >= -1e-6).all()              # sorted
+
+
+def test_merge_keeps_expanded_flag():
+    # the same id as both expanded-candidate and new neighbour must stay
+    # expanded (otherwise traversal loops forever)
+    cand_ids = np.array([[7, -1]], dtype=np.int64)
+    cand_d = np.array([[1.0, np.inf]], dtype=np.float32)
+    expanded = np.array([[True, False]])
+    new_ids = np.array([[7, 3]], dtype=np.int64)
+    new_d = np.array([[1.0, 2.0]], dtype=np.float32)
+    ids, d, e = _merge_candidates(cand_ids, cand_d, expanded,
+                                  new_ids, new_d, 2)
+    assert ids[0, 0] == 7 and e[0, 0]
+    assert ids[0, 1] == 3 and not e[0, 1]
+
+
+def test_robust_prune_properties():
+    rng = np.random.default_rng(0)
+    p = rng.normal(size=16).astype(np.float32)
+    cand = rng.normal(size=(64, 16)).astype(np.float32)
+    ids = np.arange(100, 164, dtype=np.int64)
+    sel = _robust_prune(p, ids, cand, R=8, alpha=1.2)
+    assert len(sel) <= 8
+    assert len(np.unique(sel)) == len(sel)
+    d = ((cand - p) ** 2).sum(1)
+    assert sel[0] == ids[np.argmin(d)]      # nearest always kept
+
+    # alpha=inf keeps only nearest-first greedy wins; alpha=1.0 prunes most
+    sel_tight = _robust_prune(p, ids, cand, R=8, alpha=1.0)
+    assert len(sel_tight) <= len(sel)

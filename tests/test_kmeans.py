@@ -1,0 +1,85 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distances import np_sq_l2
+from repro.core.kmeans import (BKTree, hierarchical_partition, kmeans_batched,
+                               kmeans_np)
+
+
+def _inertia(x, c, a):
+    return float(((x - c[a]) ** 2).sum())
+
+
+def test_kmeans_np_reduces_inertia():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(500, 16)).astype(np.float32)
+    c1, a1 = kmeans_np(x, 8, iters=1, rng=np.random.default_rng(1))
+    c8, a8 = kmeans_np(x, 8, iters=8, rng=np.random.default_rng(1))
+    assert _inertia(x, c8, a8) <= _inertia(x, c1, a1) * 1.001
+
+
+def test_kmeans_np_no_empty_clusters():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(300, 8)).astype(np.float32)
+    _, a = kmeans_np(x, 16, iters=6)
+    assert len(np.unique(a)) == 16
+
+
+def test_kmeans_balance_enforces_capacity():
+    rng = np.random.default_rng(0)
+    # heavily skewed data: one dense blob + sparse halo
+    x = np.concatenate([
+        rng.normal(0, 0.05, size=(800, 8)),
+        rng.normal(0, 3.0, size=(200, 8)),
+    ]).astype(np.float32)
+    _, a0 = kmeans_np(x, 8, iters=10, balance_penalty=0.0,
+                      rng=np.random.default_rng(1))
+    _, a1 = kmeans_np(x, 8, iters=10, balance_penalty=2.0,
+                      rng=np.random.default_rng(1))
+    c0 = np.bincount(a0, minlength=8)
+    c1 = np.bincount(a1, minlength=8)
+    cap = int(np.ceil(1000 / 8 * 1.5))
+    assert c1.max() <= cap          # hard capacity honoured
+    assert c1.max() < c0.max()      # blob actually split up
+
+
+def test_kmeans_batched_shapes_and_assign():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (3, 200, 4))
+    c, a = kmeans_batched(key, x, 16, iters=5)
+    assert c.shape == (3, 16, 4)
+    assert a.shape == (3, 200)
+    assert int(a.max()) < 16
+
+
+def test_hierarchical_partition_covers_all_points():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(1000, 12)).astype(np.float32)
+    tree, assign = hierarchical_partition(x, n_leaves=64, seed=0)
+    assert assign.min() >= 0
+    assert len(tree.centroids) >= 16
+    # every leaf referenced by assignment exists
+    assert assign.max() < len(tree.centroids)
+    # leaf centers approximate their members
+    for leaf in range(0, len(tree.centroids), 7):
+        members = x[assign == leaf]
+        if len(members):
+            np.testing.assert_allclose(
+                tree.centroids[leaf], members.mean(0), atol=1e-3)
+
+
+def test_bkt_search_agrees_with_flat():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(2000, 16)).astype(np.float32)
+    tree, _ = hierarchical_partition(x, n_leaves=128, seed=0)
+    q = rng.normal(size=(16,)).astype(np.float32)
+    flat = tree.flat_search(q, 10)
+    bkt, ndist = tree.search(q, 10, overquery=8)
+    # best-first descent with generous overquery should recover most of the
+    # exact top set, at sublinear distance-comp cost
+    overlap = len(np.intersect1d(flat, bkt)) / 10
+    assert overlap >= 0.6
+    assert ndist < len(tree.centroids) * 1.5
+    # nearest leaf must always be found
+    assert flat[0] in bkt

@@ -1,0 +1,144 @@
+"""Per-arch smoke tests: reduced same-family configs, one forward/train
+step on CPU, asserting output shapes and no NaNs (assignment requirement).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.archs import ARCHS, smoke
+from repro.configs.base import ShapeConfig
+from repro.models.model import LM
+
+B, S = 2, 32
+
+
+def _batch(cfg, key, seq=S):
+    ks = jax.random.split(key, 3)
+    batch = {}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            ks[0], (B, seq, cfg.d_model), jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(ks[0], (B, seq), 0, cfg.vocab)
+    batch["labels"] = jax.random.randint(ks[1], (B, seq), 0, cfg.vocab)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def models():
+    return {}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_loss_finite(arch, models):
+    cfg = smoke(ARCHS[arch])
+    lm = LM(cfg)
+    key = jax.random.PRNGKey(0)
+    params = lm.init(key)
+    models[arch] = (lm, params)
+    batch = _batch(cfg, key)
+    loss = jax.jit(lm.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    # loss near ln(vocab) at init (calibrated logits)
+    assert float(loss) < 3 * np.log(cfg.vocab) + 1
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_train_grad_finite(arch, models):
+    lm, params = models[arch]
+    cfg = lm.cfg
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    loss, grads = jax.jit(jax.value_and_grad(lm.loss))(params, batch)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in flat)
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_prefill_decode_consistency(arch, models):
+    """Greedy decode after prefill must match the teacher-forced forward
+    logits (same positions) — validates every cache implementation."""
+    lm, params = models[arch]
+    cfg = lm.cfg
+    batch = _batch(cfg, jax.random.PRNGKey(2))
+    full_logits = jax.jit(lm.logits)(params, batch)
+    prompt_len = S - 4
+
+    def cut(b, sl):
+        out = dict(b)
+        if cfg.family == "audio":
+            out["frames"] = b["frames"][:, sl]
+        else:
+            out["tokens"] = b["tokens"][:, sl]
+        out.pop("labels", None)
+        return out
+
+    logits_p, caches = jax.jit(lm.prefill)(params, cut(batch,
+                                                       slice(0, prompt_len)))
+    np.testing.assert_allclose(
+        np.asarray(logits_p[:, 0]),
+        np.asarray(full_logits[:, prompt_len - 1]), rtol=2e-2, atol=2e-2)
+
+    # grow caches to full capacity for decoding
+    caches = jax.tree.map(jnp.asarray, caches)
+    caches = _grow_caches(lm, caches, prompt_len, S)
+    step = jax.jit(lm.decode_step)
+    for t in range(prompt_len, S):
+        bt = cut(batch, slice(t, t + 1))
+        logits_t, caches = step(params, bt, jnp.int32(t), caches)
+        np.testing.assert_allclose(
+            np.asarray(logits_t[:, 0]), np.asarray(full_logits[:, t]),
+            rtol=3e-2, atol=3e-2)
+
+
+def _grow_caches(lm, caches, cur_len, capacity):
+    """Pad attention KV caches from prefill length to decode capacity."""
+    cfg = lm.cfg
+    window = cfg.local_window if cfg.block_pattern else 0
+
+    def grow(leaf):
+        if (hasattr(leaf, "ndim") and leaf.ndim >= 4
+                and leaf.shape[-2] == cfg.n_kv_heads):
+            seq_ax = leaf.ndim - 3
+            if (cfg.family == "vlm"
+                    and leaf.shape[seq_ax] == cfg.n_frontend_tokens):
+                return leaf          # cross-attn image K/V: fixed length
+            cap = min(capacity, window) if window else capacity
+            pad = cap - leaf.shape[seq_ax]
+            if pad > 0:
+                widths = [(0, 0)] * leaf.ndim
+                widths[seq_ax] = (0, pad)
+                return jnp.pad(leaf, widths)
+        return leaf
+
+    return jax.tree.map(grow, caches)
+
+
+def test_n_params_sane():
+    # full configs must be in the advertised ballpark
+    approx = {
+        "mamba2-1.3b": (0.9e9, 2.0e9),
+        "gemma-2b": (2.0e9, 3.3e9),
+        "starcoder2-7b": (6e9, 9e9),
+        "internlm2-20b": (17e9, 24e9),
+        "qwen3-32b": (28e9, 38e9),
+        "dbrx-132b": (110e9, 145e9),
+        # the assigned sheet's dims (48L x 64e x d_ff 1408) give ~29B total
+        # (the HF Moonlight-16B uses 27 layers; the assignment overrides)
+        "moonshot-v1-16b-a3b": (24e9, 32e9),
+    }
+    for name, (lo, hi) in approx.items():
+        n = ARCHS[name].n_params()
+        assert lo <= n <= hi, (name, n)
+
+
+def test_moe_active_params():
+    cfg = ARCHS["moonshot-v1-16b-a3b"]
+    act = cfg.n_active_params()
+    assert act < 0.4 * cfg.n_params()     # A3B: ~3B active of 16B
+    assert 2e9 <= act <= 5e9

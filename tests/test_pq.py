@@ -1,0 +1,78 @@
+import numpy as np
+import pytest
+
+from repro.core.distances import np_sq_l2
+from repro.core.pq import ProductQuantizer, default_pq_dims, train_pq
+
+
+@pytest.fixture(scope="module")
+def trained():
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(16, 64))
+    x = (centers[rng.integers(0, 16, 2000)]
+         + rng.normal(0, 0.2, size=(2000, 64))).astype(np.float32)
+    pq = train_pq(x, m=8, iters=8, seed=0)
+    return x, pq
+
+
+def test_pq_shapes(trained):
+    x, pq = trained
+    assert pq.m == 8 and pq.dsub == 8
+    codes = pq.encode(x[:100])
+    assert codes.shape == (100, 8) and codes.dtype == np.uint8
+
+
+def test_pq_reconstruction_beats_mean(trained):
+    x, pq = trained
+    codes = pq.encode(x)
+    rec = pq.decode(codes)
+    err = ((x - rec) ** 2).sum(1).mean()
+    base = ((x - x.mean(0)) ** 2).sum(1).mean()
+    assert err < 0.35 * base
+
+
+def test_adc_equals_distance_to_reconstruction(trained):
+    """ADC identity: table-lookup distance == exact distance to decode()."""
+    x, pq = trained
+    codes = pq.encode(x[:200])
+    rec = pq.decode(codes)
+    q = x[500]
+    table = pq.adc_table(q)
+    adc = pq.adc_lookup(codes, table)
+    exact = np_sq_l2(q, rec)
+    np.testing.assert_allclose(adc, exact, rtol=1e-4, atol=1e-3)
+
+
+def test_adc_preserves_global_ordering(trained):
+    """ADC distances must rank-correlate strongly with exact distances
+    (this is what makes PQ-guided traversal converge — §2.3.2)."""
+    x, pq = trained
+    codes = pq.encode(x)
+    q = x[123] + np.random.default_rng(1).normal(0, 0.05, 64).astype(np.float32)
+    adc = pq.adc_lookup(codes, pq.adc_table(q))
+    exact = np_sq_l2(q, x)
+    r_adc = np.argsort(np.argsort(adc)).astype(np.float64)
+    r_ex = np.argsort(np.argsort(exact)).astype(np.float64)
+    spearman = np.corrcoef(r_adc, r_ex)[0, 1]
+    assert spearman > 0.9
+    # and the coarse top set is recovered: ADC top-100 catches most of the
+    # true top-20 (rerank then fixes the fine ordering)
+    top100 = set(np.argsort(adc)[:100].tolist())
+    top20 = set(np.argsort(exact)[:20].tolist())
+    assert len(top100 & top20) >= 14
+
+
+def test_pq_padding_non_divisible_dim():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(500, 100)).astype(np.float32)  # 100 % 48 != 0
+    pq = train_pq(x, m=48, iters=3, seed=0)
+    codes = pq.encode(x[:10])
+    rec = pq.decode(codes)
+    assert rec.shape == (10, 100)
+
+
+def test_default_pq_dims():
+    assert default_pq_dims(960) == 120
+    assert default_pq_dims(96) == 48
+    assert default_pq_dims(128) == 48
+    assert default_pq_dims(32) == 32

@@ -1,0 +1,116 @@
+"""Property-based tests (hypothesis) on system-level invariants."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cost_model import (ClusterWorkloadPoint, GraphWorkloadPoint,
+                                   cluster_query_cost, graph_query_cost,
+                                   predicted_qps)
+from repro.core.types import recall_at_k
+from repro.launch import roofline as rf
+from repro.storage.spec import SSD, TOS
+from repro.storage.simulator import StorageSim
+
+
+@settings(max_examples=40, deadline=None)
+@given(nprobe=st.integers(1, 4096), conc=st.integers(1, 64))
+def test_cluster_cost_monotone_in_nprobe_and_concurrency(nprobe, conc):
+    w = lambda np_: ClusterWorkloadPoint(
+        n_lists=10_000, avg_list_bytes=64_000, avg_list_len=40, dim=960,
+        nprobe=np_)
+    c1 = cluster_query_cost(TOS, w(nprobe), concurrency=conc)
+    c2 = cluster_query_cost(TOS, w(nprobe * 2), concurrency=conc)
+    assert c2["total"] >= c1["total"]           # more lists never cheaper
+    c3 = cluster_query_cost(TOS, w(nprobe), concurrency=conc * 2)
+    assert c3["total"] >= c1["total"]           # congestion never helps
+
+
+@settings(max_examples=40, deadline=None)
+@given(rt=st.integers(1, 64), w_=st.integers(1, 64))
+def test_graph_cost_floor_is_rt_times_ttfb(rt, w_):
+    g = GraphWorkloadPoint(roundtrips=rt, requests_per_round=w_,
+                           node_nbytes=4096, R=64, pq_m=112, dim=960)
+    c = graph_query_cost(TOS, g)
+    assert c["total"] >= rt * TOS.ttfb_p50_s * 0.999
+    # the same workload on SSD is strictly cheaper
+    assert graph_query_cost(SSD, g)["total"] < c["total"]
+
+
+@settings(max_examples=40, deadline=None)
+@given(lat=st.floats(1e-4, 10.0), nbytes=st.floats(1e3, 1e9),
+       req=st.floats(1, 1e4), conc=st.integers(1, 64))
+def test_predicted_qps_respects_all_ceilings(lat, nbytes, req, conc):
+    q = predicted_qps(TOS, lat, nbytes, req, conc)
+    assert q <= conc / lat + 1e-6
+    assert q <= TOS.bandwidth_Bps / nbytes + 1e-6
+    assert q <= TOS.get_qps_limit / req + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(sizes=st.lists(st.integers(1_000, 10_000_000), min_size=1,
+                      max_size=24),
+       seed=st.integers(0, 100))
+def test_storage_sim_conservation_and_ordering(sizes, seed):
+    """Bytes are conserved; completions never precede their TTFB; the
+    total wall time is at least total_bytes / bandwidth."""
+    sim = StorageSim(TOS, seed=seed)
+    for i, s in enumerate(sizes):
+        sim.submit_batch(0.0, s, 1)
+    done = []
+    while sim.busy:
+        t = sim.next_event_time()
+        done.extend(sim.advance_to(t))
+    assert len(done) == len(sizes)
+    assert sim.total_bytes == sum(sizes)
+    end = max(d.done_t for d in done)
+    assert end >= sum(sizes) / TOS.bandwidth_Bps * 0.999
+    for d in done:
+        assert d.done_t >= d.start_t >= d.submit_t
+
+
+@settings(max_examples=30, deadline=None)
+@given(found=st.lists(st.integers(0, 50), min_size=10, max_size=10,
+                      unique=True),
+       true=st.lists(st.integers(0, 50), min_size=10, max_size=10,
+                     unique=True))
+def test_recall_bounds_and_identity(found, true):
+    r = recall_at_k(np.asarray(found), np.asarray(true))
+    assert 0.0 <= r <= 1.0
+    assert recall_at_k(np.asarray(true), np.asarray(true)) == 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(1, 4))
+def test_roofline_scan_multiplier_scales(a, b, c):
+    """Synthetic HLO: nested whiles multiply; entry factor is 1."""
+    hlo = f"""
+%cond_inner (p: (s32[])) -> pred[] {{
+  %c = s32[] constant({a})
+  ROOT %lt = pred[] compare(%iv, %c), direction=LT
+}}
+%body_inner (p: (s32[])) -> (s32[]) {{
+  %ar = f32[4]{{0}} all-reduce(%x), to_apply=%add
+  ROOT %t = (s32[]) tuple(%ar)
+}}
+%cond_outer (p: (s32[])) -> pred[] {{
+  %c2 = s32[] constant({b})
+  ROOT %lt2 = pred[] compare(%iv2, %c2), direction=LT
+}}
+%body_outer (p: (s32[])) -> (s32[]) {{
+  %w = (s32[]) while(%init), condition=%cond_inner, body=%body_inner
+  ROOT %t2 = (s32[]) tuple(%w)
+}}
+ENTRY %main () -> s32[] {{
+  %w2 = (s32[]) while(%init2), condition=%cond_outer, body=%body_outer
+  ROOT %r = s32[] constant(0)
+}}
+"""
+    mult = rf.computation_multipliers(hlo)
+    assert mult["body_outer"] == b
+    assert mult["body_inner"] == a * b
+    coll = rf.collective_bytes_tripaware(hlo)
+    naive = rf.collective_bytes(hlo)
+    assert coll.get("all-reduce", 0) == naive.get("all-reduce", 0) * a * b

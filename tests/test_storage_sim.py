@@ -1,0 +1,110 @@
+import numpy as np
+import pytest
+
+from repro.storage.simulator import StorageSim, _SharedPipe
+from repro.storage.spec import SSD, TOS, StorageSpec
+
+
+def _quiet(spec: StorageSpec) -> StorageSpec:
+    """Deterministic TTFB for unit checks."""
+    import dataclasses
+    return dataclasses.replace(spec, ttfb_sigma=1e-9)
+
+
+def _drain(sim: StorageSim):
+    done = []
+    while sim.busy:
+        t = sim.next_event_time()
+        done.extend(sim.advance_to(t))
+    return done
+
+
+def test_single_fetch_time():
+    spec = _quiet(TOS)
+    sim = StorageSim(spec, seed=0)
+    nbytes = 10_000_000
+    sim.submit_batch(0.0, nbytes, 1)
+    (tk,) = _drain(sim)
+    expect = spec.ttfb_p50_s + nbytes / spec.bandwidth_Bps + 1 / spec.get_qps_limit
+    assert tk.done_t == pytest.approx(expect, rel=0.05)
+
+
+def test_bandwidth_sharing_congestion():
+    """Two concurrent transfers take ~2x as long as one (PS pipe)."""
+    spec = _quiet(TOS)
+    nbytes = 50_000_000
+    sim1 = StorageSim(spec, seed=0)
+    sim1.submit_batch(0.0, nbytes, 1)
+    (solo,) = _drain(sim1)
+
+    sim2 = StorageSim(spec, seed=0)
+    sim2.submit_batch(0.0, nbytes, 1)
+    sim2.submit_batch(0.0, nbytes, 1)
+    both = _drain(sim2)
+    t_solo = solo.done_t
+    t_both = max(tk.done_t for tk in both)
+    assert t_both > 1.7 * t_solo
+
+
+def test_iops_throttling():
+    """Admission of many requests is limited by get_qps_limit."""
+    spec = _quiet(TOS)
+    sim = StorageSim(spec, seed=0)
+    n_req = 40_000                       # 2 seconds worth at 20k QPS
+    sim.submit_batch(0.0, 1000, n_req)
+    (tk,) = _drain(sim)
+    assert tk.done_t >= n_req / spec.get_qps_limit
+
+
+def test_iops_vs_ssd():
+    """The same request flood is ~21x faster to admit on SSD (420k IOPS)."""
+    n_req = 40_000
+    t = {}
+    for spec in [_quiet(TOS), _quiet(SSD)]:
+        sim = StorageSim(spec, seed=0)
+        sim.submit_batch(0.0, 1000, n_req)
+        (tk,) = _drain(sim)
+        t[spec.name] = tk.done_t
+    assert t["volcano-tos"] > 10 * t["local-ssd"]
+
+
+def test_ttfb_floor_dominates_small_reads():
+    """4KB reads on TOS are TTFB-bound (paper: graph-index regime)."""
+    spec = _quiet(TOS)
+    sim = StorageSim(spec, seed=0)
+    sim.submit_batch(0.0, 4096, 1)
+    (tk,) = _drain(sim)
+    transfer = 4096 / spec.bandwidth_Bps
+    assert tk.done_t > 100 * transfer    # latency >> bandwidth term
+
+
+def test_ttfb_lognormal_distribution():
+    sim = StorageSim(TOS, seed=0)
+    samples = np.array([sim.sample_ttfb() for _ in range(4000)])
+    # median near p50; tail up to the 30-200ms cold range (§2.2)
+    assert np.median(samples) == pytest.approx(TOS.ttfb_p50_s, rel=0.1)
+    assert samples.max() > 3 * TOS.ttfb_p50_s
+    assert (samples > 0).all()
+
+
+def test_pipe_conservation():
+    """PS pipe: total service time equals total bytes / bandwidth."""
+    pipe = _SharedPipe(100.0)
+    pipe.add(0.0, 1, 500.0)
+    pipe.add(0.0, 2, 500.0)
+    t1, tid1 = pipe.next_completion()
+    pipe.complete(t1, tid1)
+    t2, tid2 = pipe.next_completion()
+    pipe.complete(t2, tid2)
+    assert t2 == pytest.approx(1000.0 / 100.0)   # full drain at 10s
+
+
+def test_deterministic_given_seed():
+    for seed in [0, 7]:
+        a = StorageSim(TOS, seed=seed)
+        b = StorageSim(TOS, seed=seed)
+        a.submit_batch(0.0, 1_000_000, 10)
+        b.submit_batch(0.0, 1_000_000, 10)
+        ta = _drain(a)[0].done_t
+        tb = _drain(b)[0].done_t
+        assert ta == tb

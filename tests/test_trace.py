@@ -1,0 +1,53 @@
+"""Trace record/replay must be observationally identical to live serving."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.cluster_index import ClusterIndex
+from repro.core.graph_index import GraphIndex
+from repro.core.types import ClusterIndexParams, GraphIndexParams, SearchParams
+from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
+from repro.serving.engine import EngineConfig, run_workload
+from repro.serving.trace import record_traces, replay_workload
+from repro.storage.spec import TOS
+
+
+def _quiet(spec):
+    return dataclasses.replace(spec, ttfb_sigma=1e-9)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = scaled(DEEP_ANALOG, 1500, 16)
+    data, queries = make_dataset(spec)
+    ci = ClusterIndex.build(data, ClusterIndexParams(seed=0))
+    gi = GraphIndex.build(data, GraphIndexParams(
+        R=32, L_build=64, pq_dims=48, seed=0), batch=256)
+    return queries, ci, gi
+
+
+@pytest.mark.parametrize("which", ["cluster", "graph"])
+def test_replay_equals_live(setup, which):
+    queries, ci, gi = setup
+    if which == "cluster":
+        index, params = ci, SearchParams(k=10, nprobe=16)
+    else:
+        index, params = gi, SearchParams(k=10, search_len=40, beamwidth=8)
+    for concurrency in [1, 8]:
+        for cache in [0, 1 << 22]:
+            cfg = EngineConfig(storage=_quiet(TOS), concurrency=concurrency,
+                               cache_bytes=cache, seed=1)
+            live = run_workload(index, queries, params, _quiet(TOS),
+                                concurrency=concurrency, cache_bytes=cache,
+                                seed=1)
+            traces = record_traces(index, queries, params)
+            rep = replay_workload(index, traces, cfg)
+            assert rep.qps == pytest.approx(live.qps, rel=1e-9)
+            assert rep.wall_time_s == pytest.approx(live.wall_time_s,
+                                                    rel=1e-9)
+            assert rep.hit_rate == pytest.approx(live.hit_rate, abs=1e-12)
+            assert rep.mean_bytes_read == pytest.approx(
+                live.mean_bytes_read, rel=1e-12)
+            for a, b in zip(rep.records, live.records):
+                np.testing.assert_array_equal(a.ids, b.ids)
