@@ -1,0 +1,136 @@
+"""Tuner validation bench: does ``repro.tuning`` rediscover the paper's
+tuning rules from cost models + simulation, without being told them?
+
+Three rule checks (the actionable findings of §5.2/§7):
+
+1. **Index-class crossover** — graph (DiskANN-class) wins the
+   very-high-recall × high-concurrency × high-dim regime on cloud
+   storage; cluster (SPANN-class) wins low-recall serving on cheap/fast
+   storage.  (RQ1/RQ2, Figs 7–9)
+2. **Cloud-vs-SSD nprobe gap** — at equal recall targets the recommended
+   nprobe on high-TTFB cloud storage is a multiple of the SSD one: the
+   TTFB floor makes extra probes nearly free, so the tuner buys recall
+   headroom.  (Figs 18–19)
+3. **Cache-size-dependent policy flip** — with a small cache the tuner
+   pins the hot set (scan-resistant, no churn); with a large cache it
+   switches to SLRU, which adapts beyond any fixed pinned set.  (§7 A3,
+   Figs 20–25; this check is simulation-backed.)
+
+Every autotune call also asserts the analytic screen pruned ≥90% of the
+joint space before any simulation ran.
+
+    PYTHONPATH=src python benchmarks/tuner_bench.py
+
+Exit status is non-zero if any rule fails.
+"""
+import sys
+
+from common import emit
+
+from repro.tuning import (EnvSpec, EvalBudget, WorkloadSpec, autotune,
+                          resolve_storage)
+
+MIN_PRUNE = 0.90
+_failures: list[str] = []
+_prunes: list[float] = []
+
+
+def _check(name: str, ok: bool, detail: str) -> None:
+    print(f"# [{name}] {'PASS' if ok else 'FAIL'}: {detail}",
+          file=sys.stderr)
+    if not ok:
+        _failures.append(name)
+
+
+def _tuned(name, w, env, budget):
+    rec = autotune(w, env, budget=budget)
+    _prunes.append(rec.prune_fraction)
+    emit(f"tuner/{name}", 1e6 / max(rec.pred_qps, 1e-9),
+         kind=rec.config.kind, policy=rec.config.cache_policy,
+         nprobe=rec.config.nprobe if rec.config.kind == "cluster" else 0,
+         qps=rec.pred_qps, recall=rec.pred_recall,
+         prune=rec.prune_fraction, simulated=rec.simulated)
+    return rec
+
+
+def rule1_index_class_crossover():
+    """High recall × concurrency × dim on cloud → graph; low recall on
+    fast storage → cluster.  Both ends are simulation-backed."""
+    hi = WorkloadSpec(n=1_000_000, dim=960, target_recall=0.995,
+                      concurrency=64)
+    rec_hi = _tuned("crossover-hi", hi,
+                    EnvSpec(storage=resolve_storage("tos")),
+                    EvalBudget(rungs=((300, 12),), max_rung0=6))
+    lo = WorkloadSpec(n=10_000_000, dim=96, target_recall=0.7,
+                      concurrency=1)
+    rec_lo = _tuned("crossover-lo", lo,
+                    EnvSpec(storage=resolve_storage("ssd")),
+                    EvalBudget(rungs=((800, 20),), max_rung0=6))
+    _check("rule1-crossover",
+           rec_hi.config.kind == "graph" and rec_lo.config.kind == "cluster",
+           f"hi-recall/conc/dim on cloud -> {rec_hi.config.kind} "
+           f"(want graph); low-recall on SSD -> {rec_lo.config.kind} "
+           f"(want cluster)")
+    _check("rule1-simulated",
+           rec_hi.simulated > 0 and rec_lo.simulated > 0,
+           f"simulated configs: hi={rec_hi.simulated} lo={rec_lo.simulated}")
+
+
+def rule2_nprobe_gap():
+    """Same recall target, cluster-only: cloud nprobe ≫ SSD nprobe."""
+    def tune(storage):
+        w = WorkloadSpec(n=1_000_000, dim=128, dtype="int8",
+                         target_recall=0.9, concurrency=1)
+        rec = autotune(w, EnvSpec(storage=resolve_storage(storage)),
+                       budget="screen", kinds=("cluster",))
+        _prunes.append(rec.prune_fraction)
+        emit(f"tuner/nprobe-{storage}", 1e6 / max(rec.pred_qps, 1e-9),
+             nprobe=rec.config.nprobe, qps=rec.pred_qps,
+             recall=rec.pred_recall, prune=rec.prune_fraction)
+        return rec
+    cloud = tune("tos-external")
+    ssd = tune("ssd")
+    _check("rule2-nprobe-gap",
+           cloud.config.nprobe >= 2 * ssd.config.nprobe,
+           f"cloud nprobe={cloud.config.nprobe} vs "
+           f"ssd nprobe={ssd.config.nprobe} (want >=2x)")
+
+
+def rule3_cache_policy_flip():
+    """Zipf workload: small cache → pinned hot set; big cache → SLRU.
+    Simulation-backed: measured hit rates decide."""
+    def tune(gb):
+        w = WorkloadSpec(n=10_000_000, dim=96, target_recall=0.9,
+                         concurrency=8, query_dist="zipf")
+        return _tuned(f"cache-{gb}gb", w,
+                      EnvSpec(storage=resolve_storage("tos"),
+                              cache_bytes=int(gb * 2**30)),
+                      EvalBudget(rungs=((1200, 32),), max_rung0=8))
+    small = tune(0.25)
+    big = tune(16.0)
+    _check("rule3-policy-flip",
+           small.config.cache_policy == "pinned"
+           and big.config.cache_policy == "slru",
+           f"small cache -> {small.config.cache_policy} (want pinned); "
+           f"big cache -> {big.config.cache_policy} (want slru)")
+    _check("rule3-simulated", small.simulated > 0 and big.simulated > 0,
+           f"simulated configs: small={small.simulated} "
+           f"big={big.simulated}")
+
+
+def main() -> int:
+    rule1_index_class_crossover()
+    rule2_nprobe_gap()
+    rule3_cache_policy_flip()
+    worst = min(_prunes)
+    _check("screen-prune-fraction", worst >= MIN_PRUNE,
+           f"worst prune fraction {worst:.3f} (want >= {MIN_PRUNE})")
+    if _failures:
+        print(f"# tuner_bench: FAILED {_failures}", file=sys.stderr)
+        return 1
+    print("# tuner_bench: all paper rules rediscovered", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,103 +1,60 @@
-"""Actionable index selection & tuning from the paper's cost models
-(answers to RQ1/RQ2/RQ3 as a decision procedure).
+"""Actionable index selection & tuning — now a thin client of the
+``repro.tuning`` subsystem (RQ1/RQ2/RQ3 as a decision system).
 
-Given a workload (dataset dims/dtype, target recall, concurrency) and an
-environment (storage spec, cache size), predict both index classes' QPS
-from Eq. (1)/(2) + the environment ceilings, and print the recommendation
-with the paper's tuning rules applied.
+For each (workload, environment) pair the auto-tuner enumerates the joint
+{index class} × {build} × {search} × {cache policy} space, prunes ≥90% of
+it with the paper's analytic cost models, and (optionally) refines the
+survivors on the real engine + storage simulator before recommending.
 
-    PYTHONPATH=src python examples/cloud_tuning.py
+    python examples/cloud_tuning.py              # fast analytic screen
+    python examples/cloud_tuning.py --simulate   # + simulation refinement
+
+For one-off tuning with JSON output use the CLI directly:
+
+    python -m repro.tuning --recall 0.95 --concurrency 64 --dim 960 \
+        --storage tos
 """
-import dataclasses
+import argparse
 
-from repro.core.cost_model import (ClusterWorkloadPoint, GraphWorkloadPoint,
-                                   cluster_query_cost, graph_query_cost,
-                                   predicted_qps)
-from repro.storage.spec import PRESETS, SSD, TOS
+from repro.tuning import (EnvSpec, EvalBudget, WorkloadSpec, autotune,
+                          resolve_storage)
 
-
-@dataclasses.dataclass
-class Workload:
-    name: str
-    n: int                  # dataset size
-    dim: int
-    dtype_bytes: int
-    recall: float           # target
-    concurrency: int
-
-
-# empirical parameter curves from the paper (§5.2): knobs needed per
-# recall level, scaled by dataset characteristics
-def _nprobe_for(recall, dim):
-    base = {0.7: 16, 0.9: 64, 0.95: 128, 0.99: 512, 0.995: 2048}[recall]
-    return max(8, int(base * (dim / 960) ** 0.5))
-
-
-def _rt_for(recall, n):
-    import math
-    base = {0.7: 7, 0.9: 15, 0.95: 22, 0.99: 34, 0.995: 43}[recall]
-    return max(4, int(base * math.log2(max(n, 2)) / math.log2(1e6)))
-
-
-def recommend(w: Workload, env=TOS, cache_frac: float = 0.0) -> dict:
-    n_lists = int(0.16 * w.n)
-    avg_len = w.n * 1.8 / n_lists                     # closure replication
-    list_bytes = avg_len * (w.dim * w.dtype_bytes + 8)
-    nprobe = _nprobe_for(w.recall, w.dim)
-    c = cluster_query_cost(env, ClusterWorkloadPoint(
-        n_lists=n_lists, avg_list_bytes=list_bytes, avg_list_len=avg_len,
-        dim=w.dim, nprobe=nprobe), concurrency=w.concurrency)
-    hit = cache_frac * 0.8                            # hot-set locality
-    qps_c = predicted_qps(env, c["total"], c["bytes"] * (1 - hit),
-                          c["requests"] * (1 - hit), w.concurrency)
-
-    rt = _rt_for(w.recall, w.n)
-    node_b = 4096 * max(1, -(-(w.dim * w.dtype_bytes + 64 * 4) // 4096))
-    g = graph_query_cost(env, GraphWorkloadPoint(
-        roundtrips=rt, requests_per_round=16, node_nbytes=node_b,
-        R=64, pq_m=max(48, w.dim // 8), dim=w.dim),
-        concurrency=w.concurrency)
-    qps_g = predicted_qps(env, g["total"], g["bytes"],
-                          g["requests"], w.concurrency)
-
-    pick = "graph (DiskANN-class)" if qps_g > qps_c else \
-        "cluster (SPANN-class)"
-    tips = []
-    if pick.startswith("cluster"):
-        if w.concurrency >= 16 and w.recall >= 0.95:
-            tips.append("I/O congested: raise centroid%% to ~32 "
-                        "(fine-grained lists; paper Fig 14)")
-        if cache_frac > 0.2:
-            tips.append("mid-size cache: consider replica=2-4 for higher "
-                        "hit rate (paper Fig 24)")
-        else:
-            tips.append("keep replica=8 (quality; paper Fig 16)")
-    else:
-        tips.append("build dense graph R=256 (paper Fig 17)")
-        if w.concurrency <= 4 and w.recall >= 0.99:
-            tips.append("raise beamwidth to 32-64 (ad-hoc high recall; "
-                        "paper Fig 19)")
-        else:
-            tips.append("keep beamwidth<=16 (IOPS ceiling; paper Fig 19f)")
-    return dict(pick=pick, qps_cluster=qps_c, qps_graph=qps_g, tips=tips)
+WORKLOADS = [
+    ("adhoc-recs", WorkloadSpec(n=10_000_000, dim=96, dtype="float32",
+                                target_recall=0.9, concurrency=1)),
+    ("agentic-rag", WorkloadSpec(n=1_000_000, dim=960, dtype="float32",
+                                 target_recall=0.995, concurrency=64,
+                                 query_dist="zipf")),
+    ("ecommerce", WorkloadSpec(n=100_000_000, dim=128, dtype="int8",
+                               target_recall=0.95, concurrency=16)),
+    ("fraud-high-recall", WorkloadSpec(n=1_000_000, dim=960,
+                                       dtype="float32", target_recall=0.99,
+                                       concurrency=4)),
+]
 
 
 def main():
-    wide = [
-        Workload("adhoc-recs", 10_000_000, 96, 1, 0.9, 1),
-        Workload("agentic-rag", 1_000_000, 960, 4, 0.995, 64),
-        Workload("ecommerce", 100_000_000, 128, 1, 0.95, 16),
-        Workload("fraud-high-recall", 1_000_000, 960, 4, 0.99, 4),
-    ]
-    for env_name in ["volcano-tos", "local-ssd"]:
-        env = PRESETS[env_name]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--simulate", action="store_true",
+                    help="refine screen survivors on the real simulator "
+                         "(slower, higher fidelity)")
+    ap.add_argument("--cache-gb", type=float, default=0.0)
+    args = ap.parse_args()
+
+    budget = EvalBudget(rungs=((400, 16),), max_rung0=6) \
+        if args.simulate else "screen"
+    for env_name in ["tos", "ssd"]:
+        env = EnvSpec(storage=resolve_storage(env_name),
+                      cache_bytes=int(args.cache_gb * 2**30))
         print(f"\n=== environment: {env.describe()} ===")
-        for w in wide:
-            r = recommend(w, env)
-            print(f"  {w.name:20s} recall>={w.recall} conc={w.concurrency:3d}"
-                  f" -> {r['pick']:24s} "
-                  f"(qps c={r['qps_cluster']:8.1f} g={r['qps_graph']:8.1f})")
-            for t in r["tips"]:
+        for name, w in WORKLOADS:
+            rec = autotune(w, env, budget=budget)
+            print(f"  {name:20s} recall>={w.target_recall} "
+                  f"conc={w.concurrency:3d} -> {rec.config.label()}")
+            print(f"      predicted: {rec.pred_qps:9.1f} QPS at recall "
+                  f"{rec.pred_recall:.3f} (screen kept "
+                  f"{rec.screen_kept}/{rec.screen_total})")
+            for t in rec.tips:
                 print(f"      - {t}")
 
 

@@ -59,19 +59,29 @@ class GraphWorkloadPoint:
 
 
 def _fetch_time_s(env: StorageSpec, nbytes: float, n_requests: float,
-                  concurrency: int = 1) -> float:
+                  concurrency: int = 1, hit_rate: float = 0.0,
+                  hit_latency_s: float = 100e-6) -> float:
     """One dependency-free fetch phase under `concurrency` active queries.
 
     Bandwidth is a shared pipe (processor sharing): effective per-query
     bandwidth = bw / concurrency.  The IOPS limit throttles request
     admission at ``get_qps_limit / concurrency`` per query.  TTFB is paid
     once per phase (requests within a phase are issued together).
+
+    ``hit_rate`` models a compute-node segment cache: a fraction of the
+    phase's requests are served locally at ``hit_latency_s``, shrinking the
+    bytes/requests hitting storage.  The phase still waits on its slowest
+    request, so TTFB is charged with the probability that at least one of
+    the phase's requests misses (1 - hit_rate^n).
     """
+    hr = min(max(hit_rate, 0.0), 1.0)
     bw = env.bandwidth_Bps / max(1, concurrency)
     iops = env.get_qps_limit / max(1, concurrency)
-    t_bw = nbytes / bw
-    t_iops = n_requests / iops
-    return env.ttfb_p50_s + max(t_bw, t_iops)
+    t_bw = nbytes * (1.0 - hr) / bw
+    t_iops = n_requests * (1.0 - hr) / iops
+    p_any_miss = 1.0 - hr ** max(n_requests, 1.0)
+    return (hr * hit_latency_s + env.ttfb_p50_s * p_any_miss
+            + max(t_bw, t_iops))
 
 
 def cluster_query_cost(
@@ -79,8 +89,17 @@ def cluster_query_cost(
     compute: ComputeSpec = DEFAULT_COMPUTE,
     concurrency: int = 1,
     dtype_bytes: int = 4,
+    hit_rate: float = 0.0,
+    hit_latency_s: float = 100e-6,
 ) -> dict[str, float]:
-    """Eq. (1) with environment pricing.  Returns per-term seconds."""
+    """Eq. (1) with environment pricing.  Returns per-term seconds.
+
+    ``hit_rate`` discounts the single fetch phase's storage traffic by the
+    expected cache hit fraction (Eq. 1 extended for §7's cached serving):
+    the reported ``bytes``/``requests`` are the *storage-billed* residuals,
+    which is what the QPS ceilings in :func:`predicted_qps` care about.
+    """
+    hr = min(max(hit_rate, 0.0), 1.0)
     # c_centroid: BKT descent is O(branch * log(n) * nprobe-ish); we price
     # the empirical ~n log(nprobe) form the paper cites.
     visits = w.nprobe + math.log2(max(2, w.n_lists)) * 8.0
@@ -88,19 +107,31 @@ def cluster_query_cost(
         visits * w.dim / compute.dist_flops_per_s * 2.0)
     l_vectors = w.nprobe * w.avg_list_len
     nbytes = w.nprobe * w.avg_list_bytes
-    c_fetch = _fetch_time_s(env, nbytes, w.nprobe, concurrency)
+    c_fetch = _fetch_time_s(env, nbytes, w.nprobe, concurrency,
+                            hit_rate=hr, hit_latency_s=hit_latency_s)
     c_dist = l_vectors * (2.0 * w.dim) / compute.dist_flops_per_s
     total = c_centroid + c_fetch + c_dist
     return dict(total=total, c_centroid=c_centroid, c_fetch=c_fetch,
-                c_dist=c_dist, bytes=nbytes, requests=float(w.nprobe))
+                c_dist=c_dist, bytes=nbytes * (1.0 - hr),
+                requests=float(w.nprobe) * (1.0 - hr))
 
 
 def graph_query_cost(
     env: StorageSpec, w: GraphWorkloadPoint,
     compute: ComputeSpec = DEFAULT_COMPUTE,
     concurrency: int = 1,
+    hit_rate: float = 0.0,
+    hit_latency_s: float = 100e-6,
 ) -> dict[str, float]:
-    """Eq. (2) with environment pricing.  Returns per-term seconds."""
+    """Eq. (2) with environment pricing.  Returns per-term seconds.
+
+    ``hit_rate`` is modelled at *round* granularity: graph cache hits
+    concentrate in the early traversal rounds (entry-point neighbourhood,
+    paper Fig 23 / suggestion A3), so a hit fraction ``hr`` removes that
+    fraction of the ``rt × TTFB`` latency floor entirely — cached rounds
+    cost only ``hit_latency_s`` — and discounts storage bytes/requests.
+    """
+    hr = min(max(hit_rate, 0.0), 1.0)
     per_round_bytes = w.requests_per_round * w.node_nbytes
     c_fetch = _fetch_time_s(env, per_round_bytes, w.requests_per_round,
                             concurrency) - env.ttfb_p50_s
@@ -108,13 +139,15 @@ def graph_query_cost(
     c_dist = (w.requests_per_round * w.R * w.pq_m * compute.adc_lookup_s
               + w.requests_per_round * 2.0 * w.dim
               / compute.dist_flops_per_s)
+    rt_miss = w.roundtrips * (1.0 - hr)
+    rt_hit = w.roundtrips * hr
     per_round = env.ttfb_p50_s + c_fetch + c_dist
-    total = w.roundtrips * per_round
-    return dict(total=total, ttfb_total=w.roundtrips * env.ttfb_p50_s,
-                c_fetch=w.roundtrips * c_fetch,
+    total = rt_miss * per_round + rt_hit * (hit_latency_s + c_dist)
+    return dict(total=total, ttfb_total=rt_miss * env.ttfb_p50_s,
+                c_fetch=rt_miss * c_fetch,
                 c_dist=w.roundtrips * c_dist,
-                bytes=w.roundtrips * per_round_bytes,
-                requests=w.roundtrips * w.requests_per_round)
+                bytes=rt_miss * per_round_bytes,
+                requests=rt_miss * w.requests_per_round)
 
 
 def predicted_qps(env: StorageSpec, per_query_s: float, bytes_per_query: float,

@@ -211,11 +211,26 @@ class QueryEngine:
 
 
 def run_workload(index, queries: np.ndarray, params: SearchParams,
-                 storage: StorageSpec, concurrency: int = 1,
+                 storage: StorageSpec | EngineConfig, concurrency: int = 1,
                  cache_bytes: int = 0, seed: int = 0,
-                 compute: ComputeSpec = DEFAULT_COMPUTE) -> WorkloadReport:
-    """One-call convenience used by the benchmark harnesses."""
-    eng = QueryEngine(index, EngineConfig(
-        storage=storage, concurrency=concurrency, cache_bytes=cache_bytes,
-        compute=compute, seed=seed))
-    return eng.run(queries, params)
+                 compute: ComputeSpec = DEFAULT_COMPUTE,
+                 cache_policy: str = "slru",
+                 pinned_keys: frozenset | None = None,
+                 query_ids: Iterable[int] | None = None) -> WorkloadReport:
+    """The one-call evaluation hook: run ``queries`` through the engine.
+
+    Accepts either a bare :class:`StorageSpec` plus knobs (the benchmark
+    harness style) or a fully-formed :class:`EngineConfig` as the fourth
+    argument (the ``repro.tuning`` style — every cache/seed/compute knob in
+    one value).  ``query_ids`` maps repeated/reordered workload queries
+    back to ground-truth rows (see ``serving.workload``).
+    """
+    if isinstance(storage, EngineConfig):
+        cfg = storage
+    else:
+        cfg = EngineConfig(
+            storage=storage, concurrency=concurrency,
+            cache_bytes=cache_bytes, cache_policy=cache_policy,
+            pinned_keys=pinned_keys, compute=compute, seed=seed)
+    eng = QueryEngine(index, cfg)
+    return eng.run(queries, params, query_ids=query_ids)

@@ -1,0 +1,27 @@
+"""``repro.tuning`` — simulation-driven auto-configuration (paper §5.2/§7
+as a decision system).
+
+Pipeline: ``enumerate_space`` (declarative grids, paper-derived priors)
+→ ``screen`` (analytic Eq. 1/2 pricing prunes ≥90%) → ``successive_halving``
+(survivors run on the real engine + storage simulator at subsampled scale)
+→ ``pareto_frontier`` + ``autotune`` (knee-with-slack recommendation).
+
+CLI: ``python -m repro.tuning --recall 0.95 --concurrency 64 --dim 960
+--storage tos`` emits a JSON :class:`Recommendation`.
+"""
+from repro.tuning.evaluate import (EvalBudget, EvalOutcome, default_budget,
+                                   successive_halving)
+from repro.tuning.pareto import hypervolume, pareto_frontier
+from repro.tuning.recommend import Recommendation, autotune
+from repro.tuning.screen import (Prediction, ScreenResult,
+                                 best_predicted_qps, predict, screen)
+from repro.tuning.space import (Candidate, EnvSpec, WorkloadSpec,
+                                enumerate_space, resolve_storage)
+
+__all__ = [
+    "autotune", "Recommendation", "WorkloadSpec", "EnvSpec", "Candidate",
+    "enumerate_space", "resolve_storage", "screen", "predict",
+    "Prediction", "ScreenResult", "best_predicted_qps",
+    "successive_halving", "EvalBudget", "EvalOutcome", "default_budget",
+    "pareto_frontier", "hypervolume",
+]

@@ -1,0 +1,79 @@
+"""CLI entry: ``python -m repro.tuning`` → JSON recommendation on stdout.
+
+Example (the paper's agentic-RAG-style workload on cloud object storage):
+
+    python -m repro.tuning --recall 0.95 --concurrency 64 --dim 960 \
+        --storage tos --cache-gb 4
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.tuning.evaluate import EvalBudget
+from repro.tuning.recommend import autotune
+from repro.tuning.space import (STORAGE_ALIASES, EnvSpec, WorkloadSpec,
+                                resolve_storage)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.tuning",
+        description="Auto-tune index class, build/search params and cache "
+                    "policy for a workload + storage environment.")
+    p.add_argument("--n", type=int, default=1_000_000,
+                   help="dataset cardinality (default 1M)")
+    p.add_argument("--dim", type=int, default=960)
+    p.add_argument("--dtype", choices=["float32", "int8"], default="float32")
+    p.add_argument("--recall", type=float, default=0.9,
+                   help="target recall@k")
+    p.add_argument("--concurrency", type=int, default=1)
+    p.add_argument("--dist", choices=["sequential", "zipf"],
+                   default="sequential", help="query distribution")
+    p.add_argument("--zipf-a", type=float, default=1.2)
+    p.add_argument("--k", type=int, default=10)
+    p.add_argument("--storage", default="tos",
+                   help="storage preset: %s or a full preset name"
+                        % "/".join(sorted(STORAGE_ALIASES)))
+    p.add_argument("--cache-gb", type=float, default=0.0,
+                   help="compute-node cache budget in GiB")
+    p.add_argument("--budget", choices=["screen", "quick", "full"],
+                   default="quick",
+                   help="screen = analytic only; quick = small simulation "
+                        "rungs; full = default rungs")
+    p.add_argument("--kinds", default="cluster,graph",
+                   help="comma-separated index kinds to consider")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--compact", action="store_true",
+                   help="single-line JSON output")
+    return p
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    w = WorkloadSpec(n=args.n, dim=args.dim, dtype=args.dtype,
+                     target_recall=args.recall,
+                     concurrency=args.concurrency, query_dist=args.dist,
+                     zipf_a=args.zipf_a, k=args.k)
+    try:
+        storage = resolve_storage(args.storage)
+    except KeyError as e:
+        build_parser().error(str(e.args[0]))
+    env = EnvSpec(storage=storage,
+                  cache_bytes=int(args.cache_gb * 2**30))
+    if args.budget == "screen":
+        budget: EvalBudget | str = "screen"
+    elif args.budget == "quick":
+        rungs = ((400, 20), (800, 32)) if args.dim >= 512 \
+            else ((1200, 32), (2400, 48))
+        budget = EvalBudget(rungs=rungs, max_rung0=10, seed=args.seed)
+    else:
+        budget = None                      # default_budget inside autotune
+    rec = autotune(w, env, budget=budget, kinds=tuple(
+        k.strip() for k in args.kinds.split(",") if k.strip()))
+    print(rec.to_json(indent=None if args.compact else 2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

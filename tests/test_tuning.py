@@ -1,0 +1,168 @@
+"""Tests for the ``repro.tuning`` auto-configuration subsystem."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.cost_model import (ClusterWorkloadPoint, GraphWorkloadPoint,
+                                   cluster_query_cost, graph_query_cost)
+from repro.storage.spec import SSD, TOS
+from repro.tuning import (Candidate, EnvSpec, EvalBudget, WorkloadSpec,
+                          autotune, best_predicted_qps, enumerate_space,
+                          pareto_frontier, predict, resolve_storage, screen)
+
+
+# ------------------------------------------------------------ cost model --
+
+def test_cluster_cost_hit_rate_discounts_monotonically():
+    w = ClusterWorkloadPoint(n_lists=100_000, avg_list_bytes=40_000,
+                             avg_list_len=12, dim=960, nprobe=64)
+    prev = None
+    for hr in [0.0, 0.25, 0.5, 0.75, 1.0]:
+        c = cluster_query_cost(TOS, w, concurrency=8, hit_rate=hr)
+        if prev is not None:
+            assert c["total"] <= prev["total"]
+            assert c["bytes"] <= prev["bytes"]
+            assert c["requests"] <= prev["requests"]
+        prev = c
+    # full hit rate: no storage traffic left
+    assert prev["bytes"] == 0.0 and prev["requests"] == 0.0
+
+
+def test_graph_cost_hit_rate_removes_ttfb_floor():
+    w = GraphWorkloadPoint(roundtrips=20, requests_per_round=16,
+                           node_nbytes=4096, R=64, pq_m=112, dim=960)
+    cold = graph_query_cost(TOS, w, hit_rate=0.0)
+    warm = graph_query_cost(TOS, w, hit_rate=0.5)
+    hot = graph_query_cost(TOS, w, hit_rate=1.0)
+    assert warm["total"] < cold["total"]
+    assert warm["ttfb_total"] == pytest.approx(cold["ttfb_total"] * 0.5)
+    assert hot["bytes"] == 0.0
+    assert hot["total"] < 20 * TOS.ttfb_p50_s  # floor gone
+
+
+def test_hit_rate_zero_matches_legacy_behaviour():
+    w = ClusterWorkloadPoint(n_lists=10_000, avg_list_bytes=64_000,
+                             avg_list_len=40, dim=960, nprobe=32)
+    assert cluster_query_cost(TOS, w) == cluster_query_cost(
+        TOS, w, hit_rate=0.0)
+
+
+# ----------------------------------------------------------------- space --
+
+def test_enumerate_space_policies_follow_cache_budget():
+    w = WorkloadSpec(n=1_000_000, dim=960)
+    no_cache = enumerate_space(w, EnvSpec(storage=TOS, cache_bytes=0))
+    cached = enumerate_space(w, EnvSpec(storage=TOS, cache_bytes=2**30))
+    assert {c.cache_policy for c in no_cache} == {"none"}
+    assert {c.cache_policy for c in cached} == {"none", "slru", "pinned"}
+    assert len(cached) == 3 * len(no_cache)
+
+
+# ---------------------------------------------------------------- screen --
+
+def test_screen_prunes_at_least_90_percent():
+    w = WorkloadSpec(n=1_000_000, dim=960, target_recall=0.9,
+                     concurrency=16)
+    env = EnvSpec(storage=TOS, cache_bytes=4 * 2**30)
+    cands = enumerate_space(w, env)
+    res = screen(w, env, cands)
+    assert res.prune_fraction >= 0.90
+    assert len(res.kept) >= 4
+
+
+def test_screen_monotone_in_recall_target():
+    """A higher recall target can never predict a higher best QPS: the
+    feasible set only shrinks as the target rises."""
+    env = EnvSpec(storage=TOS)
+    prev = float("inf")
+    for target in [0.7, 0.9, 0.95, 0.99, 0.995]:
+        w = WorkloadSpec(n=1_000_000, dim=960, target_recall=target,
+                         concurrency=16)
+        preds = [predict(w, env, c) for c in enumerate_space(w, env)]
+        best = best_predicted_qps(preds)
+        assert best <= prev + 1e-9
+        prev = best
+
+
+def test_screen_recall_priors_monotone_in_knobs():
+    env = EnvSpec(storage=TOS)
+    w = WorkloadSpec(n=1_000_000, dim=960)
+    r_prev = 0.0
+    for nprobe in [8, 32, 128, 512, 2048]:
+        c = Candidate(kind="cluster", nprobe=nprobe)
+        r = predict(w, env, c).pred_recall
+        assert r >= r_prev
+        r_prev = r
+    r_prev = 0.0
+    for L in [20, 80, 320, 640]:
+        c = Candidate(kind="graph", search_len=L)
+        r = predict(w, env, c).pred_recall
+        assert r >= r_prev
+        r_prev = r
+
+
+# ---------------------------------------------------------------- pareto --
+
+def test_pareto_frontier_correctness_on_synthetic_set():
+    pts = [
+        (0.70, 100.0),     # frontier
+        (0.90, 80.0),      # frontier
+        (0.90, 60.0),      # dominated by (0.90, 80)
+        (0.85, 70.0),      # dominated by (0.90, 80)
+        (0.99, 20.0),      # frontier
+        (0.60, 90.0),      # dominated by (0.70, 100)
+        (0.99, 20.0),      # duplicate: collapsed
+    ]
+    front = pareto_frontier(pts, recall_of=lambda p: p[0],
+                            qps_of=lambda p: p[1])
+    assert front == [(0.70, 100.0), (0.90, 80.0), (0.99, 20.0)]
+    # frontier is recall-ascending and qps-descending
+    recalls = [p[0] for p in front]
+    qpss = [p[1] for p in front]
+    assert recalls == sorted(recalls)
+    assert qpss == sorted(qpss, reverse=True)
+
+
+def test_pareto_single_point_and_empty():
+    f = pareto_frontier([(0.5, 1.0)], lambda p: p[0], lambda p: p[1])
+    assert f == [(0.5, 1.0)]
+    assert pareto_frontier([], lambda p: p[0], lambda p: p[1]) == []
+
+
+# -------------------------------------------------------------- autotune --
+
+def test_autotune_screen_budget_emits_json():
+    w = WorkloadSpec(n=1_000_000, dim=960, target_recall=0.9,
+                     concurrency=16)
+    rec = autotune(w, EnvSpec(storage=TOS), budget="screen")
+    blob = json.loads(rec.to_json())
+    assert blob["recommendation"]["kind"] in ("cluster", "graph")
+    assert blob["screen"]["prune_fraction"] >= 0.90
+    assert blob["pareto_frontier"]
+    assert rec.prune_fraction >= 0.90
+
+
+def test_autotune_e2e_graph_for_high_concurrency_high_dim():
+    """Paper rule (RQ2): graph wins the very-high-recall, high-concurrency,
+    high-dim regime on cloud storage."""
+    w = WorkloadSpec(n=1_000_000, dim=960, target_recall=0.995,
+                     concurrency=64)
+    budget = EvalBudget(rungs=((300, 12),), max_rung0=6)
+    rec = autotune(w, EnvSpec(storage=resolve_storage("tos")),
+                   budget=budget)
+    assert rec.config.kind == "graph"
+    assert rec.simulated > 0
+
+
+def test_autotune_e2e_cluster_for_low_recall_ssd():
+    """Paper rule (RQ1/RQ2): cluster wins at low recall on cheap/fast
+    storage."""
+    w = WorkloadSpec(n=10_000_000, dim=96, target_recall=0.7,
+                     concurrency=1)
+    budget = EvalBudget(rungs=((800, 20),), max_rung0=6)
+    rec = autotune(w, EnvSpec(storage=resolve_storage("ssd")),
+                   budget=budget)
+    assert rec.config.kind == "cluster"
+    assert rec.simulated > 0
+    assert rec.feasible

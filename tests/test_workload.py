@@ -1,0 +1,62 @@
+"""Workload-generation tests: determinism and shape of the query streams."""
+import numpy as np
+
+from repro.serving.workload import (perturbed_zipf, sequential,
+                                    zipf_repeated)
+
+
+def _queries(n=32, dim=8, seed=3):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, dim)).astype(np.float32)
+
+
+def test_sequential_identity():
+    q = _queries()
+    out, ids = sequential(q)
+    assert out is q
+    np.testing.assert_array_equal(ids, np.arange(len(q)))
+
+
+def test_zipf_repeated_deterministic_per_seed():
+    q = _queries()
+    out1, ids1 = zipf_repeated(q, n_total=200, seed=7)
+    out2, ids2 = zipf_repeated(q, n_total=200, seed=7)
+    np.testing.assert_array_equal(ids1, ids2)
+    np.testing.assert_array_equal(out1, out2)
+
+
+def test_zipf_repeated_seed_sensitivity():
+    q = _queries()
+    _, ids1 = zipf_repeated(q, n_total=200, seed=7)
+    _, ids2 = zipf_repeated(q, n_total=200, seed=8)
+    assert not np.array_equal(ids1, ids2)
+
+
+def test_zipf_repeated_shape_and_mapping():
+    q = _queries()
+    out, ids = zipf_repeated(q, n_total=150, seed=0)
+    assert out.shape == (150, q.shape[1])
+    assert ids.shape == (150,)
+    assert ids.min() >= 0 and ids.max() < len(q)
+    # each emitted query is exactly the original it claims to be
+    np.testing.assert_array_equal(out, q[ids])
+
+
+def test_zipf_repeated_is_long_tailed():
+    q = _queries(n=64)
+    _, ids = zipf_repeated(q, n_total=2000, a=1.2, seed=1)
+    _, counts = np.unique(ids, return_counts=True)
+    top = np.sort(counts)[::-1]
+    # the hottest query dominates a uniform share by a wide margin
+    assert top[0] > 3 * (2000 / 64)
+
+
+def test_perturbed_zipf_deterministic_and_near_duplicate():
+    q = _queries()
+    out1, ids1 = perturbed_zipf(q, n_total=100, noise=0.01, seed=5)
+    out2, ids2 = perturbed_zipf(q, n_total=100, noise=0.01, seed=5)
+    np.testing.assert_array_equal(ids1, ids2)
+    np.testing.assert_array_equal(out1, out2)
+    base = q[ids1]
+    err = np.abs(out1 - base).mean()
+    assert 0.0 < err < 0.1 * np.abs(base).mean() + 1e-6
