@@ -1,0 +1,165 @@
+"""Fleet serving bench: scaling curves, hedging tails, 1-shard parity.
+
+Three measurements (written to ``BENCH_fleet.json`` at the repo root and
+emitted as CSV rows):
+
+1. **QPS vs shards** — closed-loop aggregate throughput at a fixed recall
+   operating point (fixed nprobe => identical results at every fleet
+   size), shards 1 -> 8 with up-to-2x replication.  Hard check: QPS rises
+   monotonically from 1 to 4 shards.
+2. **Tail latency vs hedging** — under the paper's heavy cold-TTFB tail,
+   sweep the hedge deadline percentile and record p95/p99/p99.9 plus
+   hedge and win rates.
+3. **1-shard parity** — a 1-shard fleet must reproduce the single
+   ``QueryEngine`` report (identical per-query results; QPS within 5%).
+
+    PYTHONPATH=src python benchmarks/fleet_bench.py
+
+Exit status is non-zero if a hard check fails.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+
+import numpy as np
+
+from common import QUICK, emit
+
+from repro.core.cluster_index import ClusterIndex
+from repro.core.flat import exact_topk
+from repro.core.types import ClusterIndexParams, SearchParams
+from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
+from repro.fleet import FleetConfig, run_fleet
+from repro.serving.engine import run_workload
+from repro.storage.spec import TOS
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_fleet.json")
+
+_failures: list[str] = []
+
+
+def _check(name: str, ok: bool, detail: str) -> None:
+    print(f"# [{name}] {'PASS' if ok else 'FAIL'}: {detail}",
+          file=sys.stderr)
+    if not ok:
+        _failures.append(name)
+
+
+def _setup():
+    n, nq = (800, 24) if QUICK else (1500, 48)
+    data, queries = make_dataset(scaled(DEEP_ANALOG, n, nq))
+    gt, _ = exact_topk(data, queries, 10)
+    index = ClusterIndex.build(data, ClusterIndexParams(kmeans_iters=4,
+                                                        seed=0))
+    return index, queries, gt
+
+
+def bench_scaling(index, queries, gt) -> list[dict]:
+    """QPS-vs-shards at fixed recall (R = min(2, shards), po2c routing)."""
+    params = SearchParams(k=10, nprobe=64)
+    rows = []
+    for shards in (1, 2, 4, 8):
+        rep = run_fleet(index, queries, params, FleetConfig(
+            n_shards=shards, replication=min(2, shards), storage=TOS,
+            concurrency=64, shard_concurrency=8, queue_depth=128, seed=1))
+        recall = rep.recall_against(gt)
+        rows.append(dict(shards=shards, replication=min(2, shards),
+                         qps=round(rep.qps, 2),
+                         p99_s=round(rep.latency_percentile(99), 6),
+                         recall=round(recall, 4),
+                         load_imbalance=round(rep.load_imbalance, 4)))
+        emit(f"fleet/scaling-{shards}sh", 1e6 / max(rep.qps, 1e-9),
+             qps=rep.qps, p99_ms=rep.latency_percentile(99) * 1e3,
+             recall=recall, imbalance=rep.load_imbalance)
+    qps = [r["qps"] for r in rows]
+    _check("fleet-scaling-monotonic", qps[0] < qps[1] < qps[2],
+           f"QPS 1->2->4 shards: {qps[0]:.0f} -> {qps[1]:.0f} -> "
+           f"{qps[2]:.0f} (want strictly increasing)")
+    recalls = {r["recall"] for r in rows}
+    _check("fleet-scaling-fixed-recall", len(recalls) == 1,
+           f"recall constant across fleet sizes: {sorted(recalls)}")
+    return rows
+
+
+def bench_hedging(index, queries, gt) -> list[dict]:
+    """Tail latency vs hedge deadline under a heavy cold-TTFB tail."""
+    params = SearchParams(k=10, nprobe=64)
+    heavy = dataclasses.replace(TOS, ttfb_sigma=1.1)
+    rows = []
+    for pct in (None, 90.0, 75.0):
+        cfg = FleetConfig(
+            n_shards=4, replication=2, storage=heavy, concurrency=4,
+            shard_concurrency=8, queue_depth=64, seed=3,
+            hedge=pct is not None, hedge_percentile=pct or 95.0,
+            hedge_min_samples=16)
+        rep = run_fleet(index, queries, params, cfg)
+        label = "off" if pct is None else f"p{pct:.0f}"
+        rows.append(dict(hedge=label,
+                         p95_s=round(rep.latency_percentile(95), 6),
+                         p99_s=round(rep.latency_percentile(99), 6),
+                         p999_s=round(rep.latency_percentile(99.9), 6),
+                         qps=round(rep.qps, 2),
+                         hedge_rate=round(rep.hedge_rate, 4),
+                         hedge_win_rate=round(rep.hedge_win_rate, 4),
+                         recall=round(rep.recall_against(gt), 4)))
+        emit(f"fleet/hedge-{label}", rep.mean_latency * 1e6,
+             p95_ms=rep.latency_percentile(95) * 1e3,
+             p99_ms=rep.latency_percentile(99) * 1e3,
+             hedge_rate=rep.hedge_rate, qps=rep.qps)
+    off_p95 = rows[0]["p95_s"]
+    best_p95 = min(r["p95_s"] for r in rows[1:])
+    _check("fleet-hedging-cuts-tail", best_p95 < off_p95,
+           f"p95 off={off_p95 * 1e3:.1f}ms vs best hedged="
+           f"{best_p95 * 1e3:.1f}ms (want lower)")
+    return rows
+
+
+def bench_parity(index, queries, gt) -> dict:
+    """A 1-shard fleet reproduces the single-engine report."""
+    params = SearchParams(k=10, nprobe=32)
+    mono = run_workload(index, queries, params, TOS, concurrency=8,
+                        seed=0, cache_policy="none")
+    fleet = run_fleet(index, queries, params, FleetConfig(
+        n_shards=1, replication=1, storage=TOS, concurrency=8,
+        shard_concurrency=8, queue_depth=64, seed=0))
+    by_qid = {r.qid: r for r in mono.records}
+    ids_equal = all(np.array_equal(r.ids, by_qid[r.qid].ids)
+                    for r in fleet.records)
+    rel = abs(fleet.qps - mono.qps) / mono.qps
+    _check("fleet-1shard-parity", ids_equal and rel < 0.05,
+           f"ids_equal={ids_equal}, QPS engine={mono.qps:.1f} vs "
+           f"fleet={fleet.qps:.1f} (rel diff {rel:.4f}, want < 0.05)")
+    emit("fleet/parity-1shard", 1e6 / max(fleet.qps, 1e-9),
+         engine_qps=mono.qps, fleet_qps=fleet.qps, rel_diff=rel)
+    return dict(engine_qps=round(mono.qps, 2),
+                fleet_qps=round(fleet.qps, 2),
+                qps_rel_diff=round(rel, 6), ids_equal=ids_equal)
+
+
+def main() -> int:
+    index, queries, gt = _setup()
+    results = dict(
+        bench="fleet",
+        quick=QUICK,
+        scaling=bench_scaling(index, queries, gt),
+        hedging=bench_hedging(index, queries, gt),
+        parity=bench_parity(index, queries, gt),
+        failures=_failures,
+    )
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {os.path.abspath(OUT_PATH)}", file=sys.stderr)
+    if _failures:
+        print(f"# fleet_bench: FAILED {_failures}", file=sys.stderr)
+        return 1
+    print("# fleet_bench: all fleet checks passed", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

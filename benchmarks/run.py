@@ -7,9 +7,17 @@ Index builds and search traces are cached under benchmarks/.cache.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
+
+# make both import styles work regardless of the caller's cwd:
+# "benchmarks.<mod>" (package) and "from common import emit" (script)
+_HERE = os.path.dirname(os.path.abspath(__file__))
+for _p in (_HERE, os.path.dirname(_HERE)):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 MODULES = [
     "benchmarks.kernel_bench",
@@ -20,6 +28,8 @@ MODULES = [
     "benchmarks.tab4_fig14_16_centroids_replicas",
     "benchmarks.fig17_19_graph_params",
     "benchmarks.fig20_25_caching",
+    "benchmarks.tuner_bench",
+    "benchmarks.fleet_bench",
 ]
 
 
@@ -31,7 +41,9 @@ def main() -> None:
         print(f"# === {modname} ===", file=sys.stderr)
         try:
             mod = __import__(modname, fromlist=["main"])
-            mod.main()
+            if mod.main():                 # rule/fleet benches return 1 on
+                failures.append(modname)   # failed hard checks
+                print(f"# FAILED {modname} (hard check)", file=sys.stderr)
         except Exception:
             failures.append(modname)
             print(f"# FAILED {modname}", file=sys.stderr)

@@ -12,7 +12,30 @@ Capacities are in bytes (cache sizes in the paper are 1/4/8 GB).
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Hashable
+from typing import Hashable, Iterable
+
+CACHE_POLICIES = ("none", "slru", "pinned")
+
+
+def make_cache(policy: str, capacity_bytes: int = 0,
+               pinned_keys: Iterable | None = None):
+    """Instantiate the segment cache for a policy name (or None for no
+    cache).  The single construction point shared by the serving engine and
+    the fleet shard servers — unknown policies fail here, loudly.
+    """
+    if policy == "none":
+        return None
+    if policy == "slru":
+        return SLRUCache(capacity_bytes) if capacity_bytes > 0 else None
+    if policy == "pinned":
+        if pinned_keys is None:
+            raise ValueError(
+                "cache_policy='pinned' requires pinned_keys (a set of "
+                "object keys to pin)")
+        keys = set(pinned_keys)
+        return PinnedCache(keys) if keys else None
+    raise ValueError(
+        f"unknown cache policy {policy!r}; one of {CACHE_POLICIES}")
 
 
 class SLRUCache:

@@ -58,6 +58,60 @@ class ClusterIndexMeta:
         return float(self.list_nbytes.mean())
 
 
+def dedup_topk(ids: np.ndarray, d: np.ndarray, k: int
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """Top-``k`` of (ids, distances) with replica dedup, padded to k.
+
+    Stable distance order + first-occurrence id dedup keeps the nearest
+    copy of every closure-replicated point.  The one kernel behind both
+    the single-node posting-list scan and the fleet's global merge of
+    shard-local top-ks.
+    """
+    order = np.argsort(d, kind="stable")
+    ids_sorted = ids[order]
+    _, first = np.unique(ids_sorted, return_index=True)
+    first.sort()
+    sel = order[first[:k]]
+    # re-sort final k by distance
+    sel = sel[np.argsort(d[sel], kind="stable")]
+    out_ids = ids[sel]
+    out_d = d[sel].astype(np.float32)
+    if len(out_ids) < k:
+        out_ids = np.pad(out_ids, (0, k - len(out_ids)),
+                         constant_values=-1)
+        out_d = np.pad(out_d, (0, k - len(out_d)),
+                       constant_values=np.inf)
+    return out_ids, out_d
+
+
+def scan_posting_lists(q: np.ndarray, payload_items, k: int,
+                       metrics: QueryMetrics) -> SearchResult:
+    """Scan fetched posting lists and return the top-``k``.
+
+    ``payload_items`` is an iterable of ``(ids, vecs)`` posting-list
+    payloads.  Closure-replicated points are deduplicated by keeping the
+    first (nearest) occurrence.  Shared by the single-node plan and the
+    fleet's shard-local scan jobs — a shard scanning its own subset of the
+    probed lists produces a local top-k whose global merge equals the
+    single-node result.
+    """
+    all_ids = []
+    all_vecs = []
+    for ids, vecs in payload_items:
+        if len(ids):
+            all_ids.append(ids)
+            all_vecs.append(vecs)
+    if not all_ids:
+        return SearchResult(np.full(k, -1, np.int64),
+                            np.full(k, np.inf, np.float32), metrics)
+    ids = np.concatenate(all_ids)
+    vecs = np.concatenate(all_vecs)
+    d = np_sq_l2(q, vecs)
+    metrics.dist_comps += len(ids)
+    out_ids, out_d = dedup_topk(ids, d, k)
+    return SearchResult(out_ids, out_d, metrics)
+
+
 class ClusterIndex:
     def __init__(self, meta: ClusterIndexMeta, store: ObjectStore,
                  use_bkt: bool = True):
@@ -150,39 +204,8 @@ class ClusterIndex:
         m.roundtrips += 1
         m.requests += len(reqs)
         m.bytes_read += sum(r.nbytes for r in reqs)
-
-        all_ids = []
-        all_vecs = []
-        for rq in reqs:
-            ids, vecs = payloads[rq.key]
-            if len(ids):
-                all_ids.append(ids)
-                all_vecs.append(vecs)
-        if not all_ids:
-            k = params.k
-            return SearchResult(np.full(k, -1, np.int64),
-                                np.full(k, np.inf, np.float32), m)
-        ids = np.concatenate(all_ids)
-        vecs = np.concatenate(all_vecs)
-        d = np_sq_l2(q, vecs)
-        m.dist_comps += len(ids)
-        # dedup replicated points: order by distance, keep first occurrence
-        order = np.argsort(d, kind="stable")
-        ids_sorted = ids[order]
-        _, first = np.unique(ids_sorted, return_index=True)
-        first.sort()
-        sel = order[first[: params.k]]
-        # re-sort final k by distance
-        sel = sel[np.argsort(d[sel])]
-        out_ids = ids[sel]
-        out_d = d[sel].astype(np.float32)
-        k = params.k
-        if len(out_ids) < k:
-            out_ids = np.pad(out_ids, (0, k - len(out_ids)),
-                             constant_values=-1)
-            out_d = np.pad(out_d, (0, k - len(out_d)),
-                           constant_values=np.inf)
-        return SearchResult(out_ids, out_d, m)
+        return scan_posting_lists(q, (payloads[rq.key] for rq in reqs),
+                                  params.k, m)
 
     def search(self, q: np.ndarray, params: SearchParams) -> SearchResult:
         """Drive search_plan directly against the store (no timing)."""

@@ -35,6 +35,19 @@ class ComputeSpec:
 DEFAULT_COMPUTE = ComputeSpec()
 
 
+def plan_compute_seconds(d_dist: int, d_pq: int, dim: int, pq_m: int,
+                         spec: ComputeSpec = DEFAULT_COMPUTE) -> float:
+    """Price the compute a search plan performed between two yields.
+
+    ``d_dist`` full-precision and ``d_pq`` ADC distance computations since
+    the last checkpoint, priced with the node's :class:`ComputeSpec`.  Both
+    the serving engine and the fleet router charge plan compute through this
+    one function, so a query costs the same wherever its scan runs.
+    """
+    return (d_dist * 2.0 * dim / spec.dist_flops_per_s
+            + d_pq * max(pq_m, 1) * spec.adc_lookup_s)
+
+
 @dataclasses.dataclass(frozen=True)
 class ClusterWorkloadPoint:
     """Index/workload statistics needed by Eq. (1)."""

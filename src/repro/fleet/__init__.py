@@ -1,0 +1,31 @@
+"""``repro.fleet`` — sharded, replicated fleet serving.
+
+The paper analyses one compute node against one storage bucket (§2.1) and
+defers distributed serving to future work; this subsystem is that future
+work: N shard servers (each an independent engine + cache + storage
+simulator) advanced on one shared deterministic virtual clock, with
+
+* ``partition``: posting-list (balanced, replicated) and node-block
+  (hashed, replicated) placement;
+* ``server``: bounded admission queues with shed accounting
+  (backpressure);
+* ``router``: scatter-gather fan-out, power-of-two-choices replica
+  selection, hedged requests, global top-k merge;
+* ``metrics``: :class:`FleetReport` — tail latency (p50/p99/p99.9), load
+  imbalance, hedge and shed rates.
+
+CLI: ``python -m repro.fleet --shards 4 --replicas 2`` emits a
+deterministic JSON report.
+"""
+from repro.fleet.metrics import FleetQueryRecord, FleetReport
+from repro.fleet.partition import (ClusterPartition, GraphPartition,
+                                   partition_for_index)
+from repro.fleet.router import (FleetConfig, FleetRouter, merge_topk,
+                                run_fleet)
+from repro.fleet.server import ShardServer, ShardStats
+
+__all__ = [
+    "FleetConfig", "FleetRouter", "run_fleet", "merge_topk",
+    "FleetReport", "FleetQueryRecord", "ShardServer", "ShardStats",
+    "ClusterPartition", "GraphPartition", "partition_for_index",
+]

@@ -1,0 +1,110 @@
+"""CLI entry: ``python -m repro.fleet`` → JSON fleet report on stdout.
+
+Builds a synthetic workload analogue (``data/synth.py``), builds the
+index, partitions it across the fleet and serves the query set; the
+report is bit-identical for a given ``--seed``.
+
+Examples:
+
+    python -m repro.fleet --shards 4 --replicas 2
+    python -m repro.fleet --shards 8 --replicas 2 --hedge --index graph
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core.cluster_index import ClusterIndex
+from repro.core.flat import exact_topk
+from repro.core.graph_index import GraphIndex
+from repro.core.types import (ClusterIndexParams, GraphIndexParams,
+                              SearchParams)
+from repro.data.synth import DatasetSpec, make_dataset
+from repro.fleet.router import FleetConfig, run_fleet
+from repro.tuning.space import STORAGE_ALIASES, resolve_storage
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.fleet",
+        description="Serve a synthetic workload across a sharded, "
+                    "replicated fleet and report tail latency, balance, "
+                    "hedge and shed rates.")
+    p.add_argument("--shards", type=int, default=4)
+    p.add_argument("--replicas", type=int, default=2,
+                   help="replication factor R (replica shards per segment)")
+    p.add_argument("--index", choices=["cluster", "graph"],
+                   default="cluster")
+    p.add_argument("--n", type=int, default=2000,
+                   help="synthetic dataset cardinality")
+    p.add_argument("--dim", type=int, default=64)
+    p.add_argument("--queries", type=int, default=64)
+    p.add_argument("--k", type=int, default=10)
+    p.add_argument("--nprobe", type=int, default=16)
+    p.add_argument("--search-len", type=int, default=40)
+    p.add_argument("--beamwidth", type=int, default=8)
+    p.add_argument("--storage", default="tos",
+                   help="storage preset: %s or a full preset name"
+                        % "/".join(sorted(STORAGE_ALIASES)))
+    p.add_argument("--concurrency", type=int, default=8,
+                   help="closed-loop outstanding fleet queries")
+    p.add_argument("--shard-concurrency", type=int, default=4)
+    p.add_argument("--queue-depth", type=int, default=16)
+    p.add_argument("--cache-mb", type=float, default=0.0,
+                   help="per-shard SLRU cache budget in MiB")
+    p.add_argument("--hedge", action="store_true",
+                   help="enable hedged requests (needs --replicas >= 2)")
+    p.add_argument("--hedge-percentile", type=float, default=95.0)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--no-recall", action="store_true",
+                   help="skip the exact ground-truth pass")
+    p.add_argument("--compact", action="store_true",
+                   help="single-line JSON output")
+    return p
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        storage = resolve_storage(args.storage)
+    except KeyError as e:
+        build_parser().error(str(e.args[0]))
+
+    spec = DatasetSpec("fleet-analog", args.dim, "float32", args.n,
+                       args.queries, n_clusters=max(8, min(64, args.n // 16)),
+                       intrinsic_dim=min(32, args.dim), seed=args.seed)
+    data, queries = make_dataset(spec)
+    if args.index == "cluster":
+        index = ClusterIndex.build(data, ClusterIndexParams(
+            kmeans_iters=4, seed=args.seed))
+        params = SearchParams(k=args.k, nprobe=args.nprobe)
+    else:
+        from repro.core.pq import default_pq_dims
+        index = GraphIndex.build(data, GraphIndexParams(
+            R=24, L_build=48, build_passes=1,
+            pq_dims=default_pq_dims(args.dim), seed=args.seed))
+        params = SearchParams(k=args.k, search_len=args.search_len,
+                              beamwidth=args.beamwidth)
+
+    cfg = FleetConfig(
+        n_shards=args.shards, replication=args.replicas, storage=storage,
+        concurrency=args.concurrency,
+        shard_concurrency=args.shard_concurrency,
+        queue_depth=args.queue_depth,
+        cache_bytes=int(args.cache_mb * 2**20),
+        cache_policy="slru" if args.cache_mb > 0 else "none",
+        hedge=args.hedge, hedge_percentile=args.hedge_percentile,
+        seed=args.seed)
+    report = run_fleet(index, queries, params, cfg)
+
+    out = dict(config=cfg.to_dict(), index=args.index, report=report.summary())
+    if not args.no_recall:
+        gt, _ = exact_topk(data, queries, args.k)
+        out["recall"] = round(report.recall_against(gt), 4)
+    import json
+    print(json.dumps(out, indent=None if args.compact else 2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

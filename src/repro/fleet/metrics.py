@@ -1,0 +1,151 @@
+"""Fleet-level measurement: tail latency, balance, hedging, backpressure.
+
+Extends the single-node §5.1 instrumentation with the quantities that only
+exist at fleet scale: p99.9 (hedging's target), per-shard load imbalance
+(partitioning quality), hedge rate (how often the tail deadline fired) and
+shed rate (admission-queue backpressure).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.core.types import QueryMetrics
+from repro.fleet.server import ShardStats
+
+
+@dataclasses.dataclass
+class FleetQueryRecord:
+    """One query's fleet-side lifecycle."""
+
+    qid: int
+    start_t: float
+    end_t: float
+    ids: np.ndarray
+    dists: np.ndarray
+    metrics: QueryMetrics          # aggregated over router + shard jobs
+    rounds: int                    # scatter-gather rounds
+    n_jobs: int                    # shard jobs issued (incl. hedges)
+    shards_touched: int
+    hedged: bool = False
+    shed_retries: int = 0
+
+    @property
+    def latency(self) -> float:
+        return self.end_t - self.start_t
+
+
+@dataclasses.dataclass
+class FleetReport:
+    """Aggregates for one fleet run (the fleet analogue of
+    :class:`repro.serving.metrics.WorkloadReport`)."""
+
+    records: list[FleetQueryRecord]
+    shard_stats: list[ShardStats]
+    wall_time_s: float
+    n_shards: int
+    replication: int
+    concurrency: int
+    jobs_total: int                # accepted shard jobs (incl. hedges)
+    hedges_launched: int
+    hedge_wins: int
+    sheds_total: int
+    submissions_total: int         # accepted + shed submission attempts
+
+    # ------------------------------------------------------- throughput --
+    @property
+    def qps(self) -> float:
+        return len(self.records) / max(self.wall_time_s, 1e-12)
+
+    # ---------------------------------------------------------- latency --
+    def latency_percentile(self, p: float) -> float:
+        if not self.records:
+            return 0.0
+        return float(np.percentile([r.latency for r in self.records], p))
+
+    @property
+    def mean_latency(self) -> float:
+        if not self.records:
+            return 0.0
+        return float(np.mean([r.latency for r in self.records]))
+
+    # ---------------------------------------------------------- balance --
+    @property
+    def load_imbalance(self) -> float:
+        """max/mean of per-shard jobs served (1.0 = perfectly even)."""
+        jobs = np.array([s.jobs_done for s in self.shard_stats],
+                        dtype=np.float64)
+        return float(jobs.max() / max(jobs.mean(), 1e-12))
+
+    @property
+    def bytes_imbalance(self) -> float:
+        """max/mean of per-shard bytes actually served from storage."""
+        b = np.array([s.storage_bytes for s in self.shard_stats],
+                     dtype=np.float64)
+        return float(b.max() / max(b.mean(), 1e-12))
+
+    # ------------------------------------------------- hedging/shedding --
+    @property
+    def hedge_rate(self) -> float:
+        return self.hedges_launched / max(1, self.jobs_total)
+
+    @property
+    def hedge_win_rate(self) -> float:
+        return self.hedge_wins / max(1, self.hedges_launched)
+
+    @property
+    def shed_rate(self) -> float:
+        return self.sheds_total / max(1, self.submissions_total)
+
+    # ----------------------------------------------------------- totals --
+    @property
+    def storage_bytes(self) -> int:
+        return sum(s.storage_bytes for s in self.shard_stats)
+
+    @property
+    def storage_requests(self) -> int:
+        return sum(s.storage_requests for s in self.shard_stats)
+
+    @property
+    def hit_rate(self) -> float:
+        hits = sum(r.metrics.cache_hits for r in self.records)
+        lookups = sum(r.metrics.cache_lookups for r in self.records)
+        return hits / lookups if lookups else 0.0
+
+    def recall_against(self, gt_ids: np.ndarray) -> float:
+        from repro.core.types import recall_at_k
+        recs = [recall_at_k(r.ids[r.ids >= 0], gt_ids[r.qid])
+                for r in self.records]
+        return float(np.mean(recs))
+
+    # ------------------------------------------------------------- JSON --
+    def summary(self) -> dict:
+        return dict(
+            n_queries=len(self.records),
+            n_shards=self.n_shards,
+            replication=self.replication,
+            concurrency=self.concurrency,
+            qps=round(self.qps, 4),
+            mean_latency_s=round(self.mean_latency, 9),
+            p50_latency_s=round(self.latency_percentile(50), 9),
+            p99_latency_s=round(self.latency_percentile(99), 9),
+            p999_latency_s=round(self.latency_percentile(99.9), 9),
+            load_imbalance=round(self.load_imbalance, 4),
+            bytes_imbalance=round(self.bytes_imbalance, 4),
+            hedge_rate=round(self.hedge_rate, 4),
+            hedge_win_rate=round(self.hedge_win_rate, 4),
+            shed_rate=round(self.shed_rate, 4),
+            jobs_total=self.jobs_total,
+            hedges_launched=self.hedges_launched,
+            sheds_total=self.sheds_total,
+            storage_bytes=self.storage_bytes,
+            storage_requests=self.storage_requests,
+            hit_rate=round(self.hit_rate, 4),
+            wall_time_s=round(self.wall_time_s, 9),
+            shards=[s.to_dict() for s in self.shard_stats],
+        )
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.summary(), indent=indent)

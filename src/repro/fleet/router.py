@@ -1,0 +1,517 @@
+"""Scatter-gather fleet routing on one shared virtual clock.
+
+The router owns the compute-node-resident index metadata (BKT centroids /
+PQ codes — what the paper's single node caches, §2.1) and drives N
+:class:`ShardServer` engines plus its own event heap on one deterministic
+virtual clock:
+
+* **Cluster queries** — centroid search runs at the router; the selected
+  posting lists scatter to shard-local *scan jobs* (fetch + distance scan
+  + local top-k, priced on the shard's compute), and the router merges the
+  local top-ks into the global result.  One scatter round per query
+  (paper §2.3.1's single dependency-free roundtrip, now fanned out).
+* **Graph queries** — beam-search state stays at the router (the PQ/ADC
+  frontier is metadata-resident); each expansion round's W node-block
+  fetches scatter to the owning shards and gather before the next round,
+  preserving the ``rt × TTFB`` floor per shard.
+
+Routing policies:
+
+* **power-of-two-choices** replica selection: among a key's R replica
+  owners, sample two and pick the shorter queue (queue depth = running +
+  waiting jobs) — the classic load-balance result, and the reason
+  replication pays beyond fault tolerance.
+* **hedged requests**: once enough job latencies are observed, a slot
+  whose job outlives the fleet's p-th latency percentile is re-issued to
+  the other replicas; first completion wins, the loser's work still
+  burns shard resources (hedge_rate / hedge_win_rate in the report).
+* **backpressure**: a shed submission (admission queue full) is retried
+  after ``shed_retry_s`` with fresh replica choice — sheds delay queries
+  and show up in shed_rate, they never drop data.
+
+Determinism: one event heap, stable sequence numbers, per-shard
+sub-generators seeded from (fleet seed, shard id) — identical seeds give
+bit-identical :class:`FleetReport` JSON.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Iterable
+
+import numpy as np
+
+from repro.cache.slru import CACHE_POLICIES
+from repro.core.cluster_index import dedup_topk, scan_posting_lists
+from repro.core.cost_model import ComputeSpec, plan_compute_seconds
+from repro.core.types import (FetchBatch, FetchRequest, QueryMetrics,
+                              SearchParams, SearchResult)
+from repro.fleet.metrics import FleetQueryRecord, FleetReport
+from repro.fleet.partition import partition_for_index
+from repro.fleet.server import ShardServer
+from repro.serving.engine import EngineConfig, JobRecord
+from repro.storage.spec import TOS, StorageSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Everything that defines a serving fleet (the tuner's new axis)."""
+
+    n_shards: int = 4
+    replication: int = 1
+    storage: StorageSpec = TOS
+    concurrency: int = 8           # closed-loop outstanding fleet queries
+    shard_concurrency: int = 4     # jobs executing per shard
+    queue_depth: int = 16          # shard admission queue bound
+    cache_bytes: int = 0           # per-shard segment cache budget
+    cache_policy: str = "none"     # "none" | "slru"
+    hedge: bool = False
+    hedge_percentile: float = 95.0
+    hedge_min_samples: int = 24
+    shed_retry_s: float = 1e-3
+    hit_latency_s: float = 100e-6
+    compute: ComputeSpec = dataclasses.field(default_factory=ComputeSpec)
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if not 1 <= self.replication <= self.n_shards:
+            raise ValueError(
+                f"replication must be in [1, n_shards={self.n_shards}], "
+                f"got {self.replication}")
+        if self.cache_policy not in CACHE_POLICIES or \
+                self.cache_policy == "pinned":
+            raise ValueError(
+                f"fleet cache_policy must be 'none' or 'slru', "
+                f"got {self.cache_policy!r}")
+        if self.concurrency < 1 or self.shard_concurrency < 1:
+            raise ValueError("concurrency and shard_concurrency must be "
+                             ">= 1")
+        if self.queue_depth < 0:
+            raise ValueError(f"queue_depth must be >= 0, got "
+                             f"{self.queue_depth}")
+        if self.hedge and not 50.0 <= self.hedge_percentile < 100.0:
+            raise ValueError(
+                f"hedge_percentile must be in [50, 100), got "
+                f"{self.hedge_percentile}")
+
+    def to_dict(self) -> dict:
+        return dict(n_shards=self.n_shards, replication=self.replication,
+                    storage=self.storage.name,
+                    concurrency=self.concurrency,
+                    shard_concurrency=self.shard_concurrency,
+                    queue_depth=self.queue_depth,
+                    cache_bytes=self.cache_bytes,
+                    cache_policy=self.cache_policy, hedge=self.hedge,
+                    hedge_percentile=self.hedge_percentile, seed=self.seed)
+
+
+def merge_topk(results: list[SearchResult], k: int
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """Global top-k over shard-local top-ks, deduplicating replica ids.
+
+    Every member of the true global top-k is necessarily inside its own
+    shard's local top-k, so the merge is lossless — same kernel as the
+    single-node scan (``dedup_topk``).
+    """
+    ids = np.concatenate([r.ids for r in results])
+    d = np.concatenate([r.dists for r in results])
+    valid = ids >= 0
+    return dedup_topk(ids[valid], d[valid], k)
+
+
+class _Slot:
+    """One shard-destined sub-request of one scatter round."""
+
+    __slots__ = ("slot_id", "reqs", "shard", "done", "hedge_launched",
+                 "outstanding", "collected")
+
+    def __init__(self, slot_id: int, reqs: list[FetchRequest], shard: int):
+        self.slot_id = slot_id
+        self.reqs = reqs
+        self.shard = shard
+        self.done = False
+        self.hedge_launched = False
+        self.outstanding: dict[int, set] = {}     # attempt -> open tags
+        self.collected: dict[int, list] = {}      # attempt -> job results
+
+
+class _FleetQuery:
+    """Router-side state machine for one in-flight query."""
+
+    __slots__ = ("idx", "qid", "q", "k", "kind", "gen", "metrics",
+                 "start_t", "snapshot", "rounds", "n_jobs", "shards",
+                 "hedged", "shed_retries", "slots", "open_slots",
+                 "local_results", "payloads", "done")
+
+    def __init__(self, idx: int, qid: int, q: np.ndarray, kind: str,
+                 k: int, start_t: float):
+        self.idx = idx
+        self.qid = qid
+        self.q = q
+        self.k = k
+        self.kind = kind
+        self.gen = None
+        self.metrics = QueryMetrics()
+        self.start_t = start_t
+        self.snapshot = (0, 0)
+        self.rounds = 0
+        self.n_jobs = 0
+        self.shards: set[int] = set()
+        self.hedged = False
+        self.shed_retries = 0
+        self.slots: dict[int, _Slot] = {}
+        self.open_slots = 0
+        self.local_results: list[SearchResult] = []
+        self.payloads: dict = {}
+        self.done = False
+
+
+def _scan_plan(q: np.ndarray, reqs: list[FetchRequest], k: int,
+               metrics: QueryMetrics):
+    """Shard-local cluster job: fetch my lists, scan, return local top-k."""
+    payloads = yield FetchBatch(list(reqs))
+    metrics.roundtrips += 1
+    metrics.requests += len(reqs)
+    metrics.bytes_read += sum(r.nbytes for r in reqs)
+    return scan_posting_lists(q, (payloads[rq.key] for rq in reqs), k,
+                              metrics)
+
+
+def _fetch_plan(reqs: list[FetchRequest]):
+    """Shard-local graph job: fetch my node blocks, return the payloads."""
+    payloads = yield FetchBatch(list(reqs))
+    return payloads
+
+
+def _merge_metrics(dst: QueryMetrics, src: QueryMetrics) -> None:
+    for f in dataclasses.fields(QueryMetrics):
+        setattr(dst, f.name, getattr(dst, f.name) + getattr(src, f.name))
+
+
+class FleetRouter:
+    """Closed-loop scatter-gather serving over N shard servers."""
+
+    def __init__(self, index, cfg: FleetConfig, partition=None):
+        self.index = index
+        self.cfg = cfg
+        self.partition = partition if partition is not None else \
+            partition_for_index(index, cfg.n_shards, cfg.replication,
+                                seed=cfg.seed)
+        if self.partition.n_shards != cfg.n_shards:
+            raise ValueError(
+                f"partition has {self.partition.n_shards} shards, config "
+                f"says {cfg.n_shards}")
+        self.kind = self.partition.kind
+        self.dim = index.meta.dim
+        pq = getattr(index.meta, "pq", None)
+        self.pq_m = pq.m if pq is not None else 0
+
+    def _shard_engine_cfg(self, shard_id: int) -> EngineConfig:
+        cfg = self.cfg
+        return EngineConfig(
+            storage=cfg.storage, concurrency=1,
+            cache_bytes=cfg.cache_bytes, cache_policy=cfg.cache_policy,
+            hit_latency_s=cfg.hit_latency_s, compute=cfg.compute,
+            seed=cfg.seed + shard_id * 7919)
+
+    # ------------------------------------------------------------- run ---
+    def run(self, queries: np.ndarray, params: SearchParams,
+            query_ids: Iterable[int] | None = None) -> FleetReport:
+        cfg = self.cfg
+        qids = list(query_ids) if query_ids is not None else list(
+            range(len(queries)))
+        self.servers = [
+            ShardServer(s, self._shard_engine_cfg(s), self.index.store,
+                        dim=self.dim, pq_m=self.pq_m,
+                        max_inflight=cfg.shard_concurrency,
+                        queue_depth=cfg.queue_depth,
+                        on_complete=self._job_done)
+            for s in range(cfg.n_shards)]
+        self._events: list = []            # (t, seq, kind, payload)
+        self._seq = 0
+        self._ctx: dict[int, tuple] = {}   # tag -> (query, slot, attempt, t)
+        self._tag_seq = 0
+        self._slot_seq = 0
+        self._lat: deque = deque(maxlen=256)
+        self._rng = np.random.default_rng(cfg.seed ^ 0xF1EE7)
+        self._records: list[FleetQueryRecord] = []
+        self._jobs_total = 0
+        self._hedges = 0
+        self._hedge_wins = 0
+        pending = list(range(len(queries)))
+        pending.reverse()
+
+        def start_next(t: float) -> None:
+            if not pending:
+                return
+            qi = pending.pop()
+            self._begin_query(qi, qids[qi], queries[qi], params, t)
+
+        self._start_next = start_next
+        for _ in range(min(cfg.concurrency, len(pending))):
+            start_next(0.0)
+
+        while True:
+            t_router = self._events[0][0] if self._events else float("inf")
+            t_shard = float("inf")
+            shard = None
+            for srv in self.servers:
+                ts = srv.next_event_time()
+                if ts is not None and ts < t_shard:
+                    t_shard = ts
+                    shard = srv
+            if t_router == float("inf") and shard is None:
+                break
+            if t_router <= t_shard:
+                t, _, kind, payload = heapq.heappop(self._events)
+                self._dispatch(kind, payload, t)
+            else:
+                shard.advance_to(t_shard)
+
+        wall = max((r.end_t for r in self._records), default=0.0)
+        stats = [srv.finalize_stats() for srv in self.servers]
+        return FleetReport(
+            records=self._records, shard_stats=stats, wall_time_s=wall,
+            n_shards=cfg.n_shards, replication=cfg.replication,
+            concurrency=cfg.concurrency, jobs_total=self._jobs_total,
+            hedges_launched=self._hedges, hedge_wins=self._hedge_wins,
+            sheds_total=sum(s.sheds for s in stats),
+            submissions_total=sum(s.submissions for s in stats))
+
+    # ----------------------------------------------------- query driver --
+    def _price(self, fq: _FleetQuery) -> float:
+        """Charge router-side compute since the last checkpoint."""
+        m = fq.metrics
+        d0, p0 = fq.snapshot
+        fq.snapshot = (m.dist_comps, m.pq_dist_comps)
+        return plan_compute_seconds(m.dist_comps - d0,
+                                    m.pq_dist_comps - p0,
+                                    self.dim, self.pq_m, self.cfg.compute)
+
+    def _begin_query(self, idx: int, qid: int, q: np.ndarray,
+                     params: SearchParams, t: float) -> None:
+        fq = _FleetQuery(idx, qid, q, self.kind, params.k, t)
+        meta = self.index.meta
+        if self.kind == "cluster":
+            lids, ndist = self.index.select_lists(q, params.nprobe)
+            fq.metrics.dist_comps += ndist
+            fq.metrics.lists_visited = len(lids)
+            reqs = [FetchRequest(("list", int(i)),
+                                 int(meta.list_nbytes[i])) for i in lids]
+            self._push(t + self._price(fq), "scatter", (fq, reqs))
+        else:
+            fq.gen = self.index.search_plan(q, params, fq.metrics)
+            batch = next(fq.gen)
+            self._push(t + self._price(fq), "scatter",
+                       (fq, list(batch.requests)))
+
+    def _push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self._events, (t, self._seq, kind, payload))
+        self._seq += 1
+
+    def _dispatch(self, kind: str, payload, t: float) -> None:
+        if kind == "scatter":
+            fq, reqs = payload
+            self._scatter(fq, reqs, t)
+        elif kind == "hedge":
+            fq, slot = payload
+            self._maybe_hedge(fq, slot, t)
+        elif kind == "retry":
+            fq, slot = payload
+            self._retry_slot(fq, slot, t)
+
+    # ---------------------------------------------------------- scatter --
+    def _pick_replica(self, owners: tuple[int, ...],
+                      exclude: int | None = None) -> int:
+        """Power-of-two-choices by shard queue depth."""
+        cand = [s for s in owners if s != exclude]
+        if not cand:
+            cand = list(owners)
+        if len(cand) == 1:
+            return cand[0]
+        if len(cand) == 2:
+            a, b = cand
+        else:
+            i, j = self._rng.choice(len(cand), size=2, replace=False)
+            a, b = cand[int(i)], cand[int(j)]
+        la, lb = self.servers[a].load, self.servers[b].load
+        if la != lb:
+            return a if la < lb else b
+        return min(a, b)
+
+    def _scatter(self, fq: _FleetQuery, reqs: list[FetchRequest],
+                 t: float) -> None:
+        """Fan one round's requests out by replica-chosen owner."""
+        fq.rounds += 1
+        fq.slots = {}
+        fq.payloads = {}
+        groups: dict[int, list[FetchRequest]] = {}
+        for rq in reqs:
+            shard = self._pick_replica(self.partition.owners(rq.key))
+            groups.setdefault(shard, []).append(rq)
+        for shard in sorted(groups):
+            slot = _Slot(self._slot_seq, groups[shard], shard)
+            self._slot_seq += 1
+            fq.slots[slot.slot_id] = slot
+        fq.open_slots = len(fq.slots)
+        for slot in fq.slots.values():
+            self._submit_primary(fq, slot, t)
+
+    def _make_plan(self, fq: _FleetQuery, reqs: list[FetchRequest],
+                   metrics: QueryMetrics):
+        if self.kind == "cluster":
+            return _scan_plan(fq.q, reqs, fq.k, metrics)
+        return _fetch_plan(reqs)
+
+    def _retry_slot(self, fq: _FleetQuery, slot: _Slot, t: float) -> None:
+        """A shed slot comes back with fresh per-key replica choice,
+        avoiding the shard that shed (loads have changed meanwhile).
+        Keys that re-group onto several shards split into new slots."""
+        if slot.done or fq.done:
+            return
+        groups: dict[int, list[FetchRequest]] = {}
+        for rq in slot.reqs:
+            owners = self.partition.owners(rq.key)
+            shard = self._pick_replica(
+                owners, exclude=slot.shard if len(owners) > 1 else None)
+            groups.setdefault(shard, []).append(rq)
+        if len(groups) == 1:
+            slot.shard = next(iter(groups))
+            self._submit_primary(fq, slot, t)
+            return
+        del fq.slots[slot.slot_id]
+        fq.open_slots -= 1
+        for shard in sorted(groups):
+            ns = _Slot(self._slot_seq, groups[shard], shard)
+            self._slot_seq += 1
+            fq.slots[ns.slot_id] = ns
+            fq.open_slots += 1
+            self._submit_primary(fq, ns, t)
+
+    def _submit_primary(self, fq: _FleetQuery, slot: _Slot,
+                        t: float) -> None:
+        """Submit a slot to its chosen shard; shed -> backoff retry."""
+        cfg = self.cfg
+        if slot.done or fq.done:
+            return
+        shard = slot.shard
+        metrics = QueryMetrics()
+        tag = self._tag_seq
+        self._tag_seq += 1
+        plan = self._make_plan(fq, slot.reqs, metrics)
+        if self.servers[shard].try_submit(t, plan, metrics, tag):
+            slot.outstanding.setdefault(0, set()).add(tag)
+            slot.collected.setdefault(0, [])
+            self._ctx[tag] = (fq, slot, 0, t)
+            self._jobs_total += 1
+            fq.n_jobs += 1
+            fq.shards.add(shard)
+            if (cfg.hedge and cfg.replication > 1
+                    and not slot.hedge_launched
+                    and len(self._lat) >= cfg.hedge_min_samples):
+                deadline = float(np.percentile(
+                    np.asarray(self._lat), cfg.hedge_percentile))
+                self._push(t + deadline, "hedge", (fq, slot))
+        else:
+            fq.shed_retries += 1
+            self._push(t + cfg.shed_retry_s, "retry", (fq, slot))
+
+    def _maybe_hedge(self, fq: _FleetQuery, slot: _Slot, t: float) -> None:
+        """Deadline fired: re-issue the slot's keys on the other replicas."""
+        if fq.done or slot.done or slot.hedge_launched:
+            return
+        slot.hedge_launched = True
+        groups: dict[int, list[FetchRequest]] = {}
+        for rq in slot.reqs:
+            owners = self.partition.owners(rq.key)
+            alt = [s for s in owners if s != slot.shard]
+            if not alt:
+                return                     # un-hedgeable key (R=1)
+            shard = self._pick_replica(tuple(alt))
+            groups.setdefault(shard, []).append(rq)
+        # hedge only when every target replica would admit the duplicate
+        # right now — a loaded fleet gets no speculative extra work, and
+        # no hedge sub-job is ever orphaned by a partial shed.
+        if any(not self.servers[s].has_capacity for s in groups):
+            return
+        self._hedges += 1
+        fq.hedged = True
+        slot.outstanding[1] = set()
+        slot.collected[1] = []
+        for shard in sorted(groups):
+            metrics = QueryMetrics()
+            tag = self._tag_seq
+            self._tag_seq += 1
+            plan = self._make_plan(fq, groups[shard], metrics)
+            self.servers[shard].try_submit(t, plan, metrics, tag)
+            slot.outstanding[1].add(tag)
+            self._ctx[tag] = (fq, slot, 1, t)
+            self._jobs_total += 1
+            fq.n_jobs += 1
+            fq.shards.add(shard)
+
+    # ----------------------------------------------------------- gather --
+    def _job_done(self, shard_id: int, job: JobRecord) -> None:
+        ctx = self._ctx.pop(job.tag, None)
+        if ctx is None:
+            return
+        fq, slot, attempt, t_submit = ctx
+        self._lat.append(job.end_t - t_submit)
+        _merge_metrics(fq.metrics, job.metrics)
+        if fq.done or slot.done or attempt not in slot.outstanding:
+            return                          # stale (hedge race loser)
+        open_tags = slot.outstanding[attempt]
+        open_tags.discard(job.tag)
+        slot.collected[attempt].append(job.result)
+        if open_tags:
+            return                          # more sub-jobs of this attempt
+        slot.done = True
+        if attempt > 0:
+            self._hedge_wins += 1
+        if self.kind == "cluster":
+            fq.local_results.extend(slot.collected[attempt])
+        else:
+            for payloads in slot.collected[attempt]:
+                fq.payloads.update(payloads)
+        fq.open_slots -= 1
+        if fq.open_slots == 0:
+            self._round_done(fq, job.end_t)
+
+    def _round_done(self, fq: _FleetQuery, t: float) -> None:
+        if self.kind == "cluster":
+            ids, dists = merge_topk(fq.local_results, fq.k)
+            self._finish_query(fq, t, ids, dists)
+            return
+        # graph: resume the beam-search generator with this round's blocks
+        # (router-side snapshot excludes shard-merged counters, so compute
+        # pricing charges only the plan's own ADC/exact work)
+        fq.snapshot = (fq.metrics.dist_comps, fq.metrics.pq_dist_comps)
+        try:
+            batch = fq.gen.send(fq.payloads)
+        except StopIteration as stop:
+            res = stop.value
+            self._finish_query(fq, t + self._price(fq), res.ids, res.dists)
+            return
+        self._push(t + self._price(fq), "scatter",
+                   (fq, list(batch.requests)))
+
+    def _finish_query(self, fq: _FleetQuery, t: float, ids: np.ndarray,
+                      dists: np.ndarray) -> None:
+        fq.done = True
+        self._records.append(FleetQueryRecord(
+            qid=fq.qid, start_t=fq.start_t, end_t=t, ids=ids, dists=dists,
+            metrics=fq.metrics, rounds=fq.rounds, n_jobs=fq.n_jobs,
+            shards_touched=len(fq.shards), hedged=fq.hedged,
+            shed_retries=fq.shed_retries))
+        self._start_next(t)
+
+
+def run_fleet(index, queries: np.ndarray, params: SearchParams,
+              cfg: FleetConfig,
+              query_ids: Iterable[int] | None = None) -> FleetReport:
+    """One-call fleet evaluation (the fleet analogue of run_workload)."""
+    return FleetRouter(index, cfg).run(queries, params,
+                                       query_ids=query_ids)

@@ -1,0 +1,122 @@
+"""Shard server: one compute node of the fleet (paper §2.1's
+one-node-to-one-bucket unit, replicated N times).
+
+Each server owns an independent :class:`SteppableEngine` — its own segment
+cache and its own discrete-event storage simulator (own NIC bandwidth pipe,
+own GET-rate bucket) — but never advances time itself: the fleet router
+drives every server on one shared virtual clock.
+
+Admission control: at most ``max_inflight`` jobs execute concurrently;
+further submissions wait in a bounded FIFO queue; when the queue is full
+the submission is **shed** (rejected back to the router, which retries a
+replica or backs off).  Shed accounting is the backpressure signal the
+fleet report surfaces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+from repro.cache.slru import make_cache
+from repro.serving.engine import EngineConfig, JobRecord, SteppableEngine
+
+
+@dataclasses.dataclass
+class ShardStats:
+    """Per-shard accounting for the fleet report."""
+
+    shard_id: int
+    jobs_done: int = 0
+    submissions: int = 0           # accepted + shed
+    sheds: int = 0
+    peak_queue: int = 0
+    peak_inflight: int = 0
+    busy_s: float = 0.0            # sum of job service times (no queue wait)
+    storage_bytes: int = 0
+    storage_requests: int = 0
+
+    def to_dict(self) -> dict:
+        return dict(shard=self.shard_id, jobs=self.jobs_done,
+                    submissions=self.submissions, sheds=self.sheds,
+                    peak_queue=self.peak_queue,
+                    peak_inflight=self.peak_inflight,
+                    busy_s=round(self.busy_s, 9),
+                    storage_bytes=self.storage_bytes,
+                    storage_requests=self.storage_requests)
+
+
+class ShardServer:
+    """A bounded admission queue in front of one steppable shard engine."""
+
+    def __init__(self, shard_id: int, cfg: EngineConfig, store, *,
+                 dim: int, pq_m: int = 0, max_inflight: int = 4,
+                 queue_depth: int = 16,
+                 on_complete: Callable[[int, JobRecord], None] | None = None):
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        if queue_depth < 0:
+            raise ValueError(f"queue_depth must be >= 0, got {queue_depth}")
+        self.shard_id = shard_id
+        self.max_inflight = max_inflight
+        self.queue_depth = queue_depth
+        self.on_complete = on_complete
+        cache = make_cache(cfg.cache_policy, cfg.cache_bytes,
+                           cfg.pinned_keys)
+        self.engine = SteppableEngine(cfg, store, cache, dim=dim, pq_m=pq_m,
+                                      on_complete=self._job_done)
+        self._queue: deque = deque()       # (plan, metrics, tag)
+        self.stats = ShardStats(shard_id=shard_id)
+
+    # ---------------------------------------------------------- routing --
+    @property
+    def load(self) -> int:
+        """Queue depth the router balances on: running + waiting jobs."""
+        return self.engine.in_flight + len(self._queue)
+
+    @property
+    def has_capacity(self) -> bool:
+        """Would a submission right now be admitted (not shed)?"""
+        return (self.engine.in_flight < self.max_inflight
+                or len(self._queue) < self.queue_depth)
+
+    def try_submit(self, t: float, plan, metrics, tag) -> bool:
+        """Admit a job at virtual time ``t``; False means shed."""
+        self.stats.submissions += 1
+        if self.engine.in_flight < self.max_inflight:
+            self.engine.submit(t, plan, metrics, tag=tag)
+            self.stats.peak_inflight = max(self.stats.peak_inflight,
+                                           self.engine.in_flight)
+            return True
+        if len(self._queue) < self.queue_depth:
+            self._queue.append((plan, metrics, tag))
+            self.stats.peak_queue = max(self.stats.peak_queue,
+                                        len(self._queue))
+            return True
+        self.stats.sheds += 1
+        return False
+
+    def _job_done(self, job: JobRecord) -> None:
+        self.stats.jobs_done += 1
+        self.stats.busy_s += job.latency
+        if self._queue and self.engine.in_flight < self.max_inflight:
+            plan, metrics, tag = self._queue.popleft()
+            self.engine.submit(job.end_t, plan, metrics, tag=tag)
+        if self.on_complete is not None:
+            self.on_complete(self.shard_id, job)
+
+    # ------------------------------------------------------------ clock --
+    def next_event_time(self) -> float | None:
+        return self.engine.next_event_time()
+
+    def advance_to(self, t: float) -> None:
+        self.engine.advance_to(t)
+
+    @property
+    def busy(self) -> bool:
+        return self.engine.busy or bool(self._queue)
+
+    def finalize_stats(self) -> ShardStats:
+        self.stats.storage_bytes = self.engine.sim.total_bytes
+        self.stats.storage_requests = self.engine.sim.total_requests
+        return self.stats

@@ -6,18 +6,29 @@ batches flow through the cache and the discrete-event storage simulator.
 Compute phases are priced from the metrics deltas the plan records
 (distance comps × ComputeSpec) — reproducing the CPU/I/O split of Fig 2/3.
 
+Two layers:
+
+* :class:`SteppableEngine` — the open-loop core.  It executes plan
+  generators against (cache × storage sim) but never advances time on its
+  own: a driver owns the virtual clock through ``next_event_time()`` /
+  ``advance_to()``.  This is what lets ``repro.fleet`` advance N shard
+  engines on one shared clock.
+* :class:`QueryEngine` — the paper's closed-loop driver: a fixed
+  concurrency window over a query queue, drained to completion.
+
 Everything is virtual-time deterministic for a given seed.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Iterable
+from typing import Any, Callable, Iterable
 
 import numpy as np
 
-from repro.cache.slru import PinnedCache, SLRUCache
-from repro.core.cost_model import DEFAULT_COMPUTE, ComputeSpec
+from repro.cache.slru import CACHE_POLICIES, make_cache
+from repro.core.cost_model import (DEFAULT_COMPUTE, ComputeSpec,
+                                   plan_compute_seconds)
 from repro.core.types import QueryMetrics, SearchParams
 from repro.serving.metrics import BatchTrace, QueryRecord, WorkloadReport
 from repro.storage.simulator import StorageSim
@@ -35,10 +46,30 @@ class EngineConfig:
     compute: ComputeSpec = dataclasses.field(default_factory=ComputeSpec)
     seed: int = 0
 
+    def __post_init__(self):
+        if self.cache_policy not in CACHE_POLICIES:
+            raise ValueError(
+                f"unknown cache_policy {self.cache_policy!r}; "
+                f"one of {CACHE_POLICIES}")
+        if self.cache_policy == "pinned" and self.pinned_keys is None:
+            raise ValueError(
+                "cache_policy='pinned' requires pinned_keys (the fixed "
+                "key set to pin; see repro.tuning.evaluate.hot_keys)")
+        if self.cache_policy != "pinned" and self.pinned_keys:
+            raise ValueError(
+                f"pinned_keys given but cache_policy is "
+                f"{self.cache_policy!r} (use cache_policy='pinned')")
+        if self.cache_bytes < 0:
+            raise ValueError(f"cache_bytes must be >= 0, got "
+                             f"{self.cache_bytes}")
+        if self.concurrency < 1:
+            raise ValueError(f"concurrency must be >= 1, got "
+                             f"{self.concurrency}")
+
 
 @dataclasses.dataclass
-class _QueryState:
-    qid: int
+class _JobState:
+    tag: Any
     gen: object
     metrics: QueryMetrics
     start_t: float
@@ -51,162 +82,229 @@ class _QueryState:
     pending_total_bytes: int = 0
 
 
+@dataclasses.dataclass
+class JobRecord:
+    """One completed plan execution on a :class:`SteppableEngine`.
+
+    ``result`` is whatever the plan generator returned — a
+    :class:`SearchResult` for full searches, a payload dict for fleet
+    fetch sub-jobs.
+    """
+
+    tag: Any
+    start_t: float
+    end_t: float
+    result: Any
+    metrics: QueryMetrics
+    batches: list[BatchTrace]
+
+    @property
+    def latency(self) -> float:
+        return self.end_t - self.start_t
+
+
+class SteppableEngine:
+    """Open-loop plan executor on an externally-driven virtual clock.
+
+    ``submit()`` starts a plan generator at virtual time ``t``;
+    ``advance_to(t)`` processes every engine/storage event up to ``t``,
+    invoking ``on_complete(JobRecord)`` synchronously at each job's
+    completion time (so a closed-loop driver can start the next query, or
+    a shard server can pop its admission queue, at exactly that instant).
+    """
+
+    def __init__(self, cfg: EngineConfig, store, cache=None, *,
+                 dim: int, pq_m: int = 0,
+                 on_complete: Callable[[JobRecord], None] | None = None):
+        self.cfg = cfg
+        self.store = store
+        self.cache = cache
+        self.dim = dim
+        self.pq_m = pq_m
+        self.on_complete = on_complete
+        self.sim = StorageSim(cfg.storage, seed=cfg.seed)
+        self._events: list = []        # (time, seq, kind, payload)
+        self._seq = 0
+        self._waiting: dict[int, _JobState] = {}   # batch_id -> job
+        self.in_flight = 0
+        self.jobs_done = 0
+
+    # ------------------------------------------------------------ clock --
+    def next_event_time(self) -> float | None:
+        cands = []
+        if self._events:
+            cands.append(self._events[0][0])
+        ts = self.sim.next_event_time()
+        if ts is not None:
+            cands.append(ts)
+        return min(cands) if cands else None
+
+    @property
+    def busy(self) -> bool:
+        return bool(self._events or self.sim.busy)
+
+    def advance_to(self, t: float) -> None:
+        """Process every event with timestamp <= ``t`` in causal order."""
+        while True:
+            t_engine = self._events[0][0] if self._events else float("inf")
+            t_storage = self.sim.next_event_time()
+            t_storage = t_storage if t_storage is not None else float("inf")
+            nxt = min(t_engine, t_storage)
+            if nxt == float("inf") or nxt > t + 1e-15:
+                break
+            if t_storage < t_engine:
+                for ticket in self.sim.advance_to(t_storage):
+                    st = self._waiting.pop(ticket.batch_id)
+                    self._on_fetched(st, ticket.done_t, ticket.n_requests,
+                                     ticket.nbytes)
+            else:
+                tt, _, kind, payload = heapq.heappop(self._events)
+                self.sim.advance_to(tt)
+                if kind == "submit":
+                    st, batch = payload
+                    self._submit_batch(st, batch, tt)
+                else:                                   # "fetched" (all-hit)
+                    st, t_hit, nreq, nbytes = payload
+                    self._on_fetched(st, t_hit, nreq, nbytes)
+
+    # ------------------------------------------------------------- jobs --
+    def submit(self, t: float, plan, metrics: QueryMetrics,
+               tag: Any = None) -> _JobState:
+        """Start a plan generator at virtual time ``t``."""
+        st = _JobState(tag=tag, gen=plan, metrics=metrics, start_t=t,
+                       batches=[])
+        self.in_flight += 1
+        self._advance_job(st, t, first=True)
+        return st
+
+    def _push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self._events, (t, self._seq, kind, payload))
+        self._seq += 1
+
+    def _compute_seconds(self, st: _JobState) -> float:
+        """Price the compute the plan did since the last yield."""
+        m = st.metrics
+        d0, p0 = st.last_snapshot
+        st.last_snapshot = (m.dist_comps, m.pq_dist_comps)
+        return plan_compute_seconds(m.dist_comps - d0, m.pq_dist_comps - p0,
+                                    self.dim, self.pq_m, self.cfg.compute)
+
+    def _advance_job(self, st: _JobState, t: float, first: bool = False,
+                     payloads: dict | None = None) -> None:
+        """Resume the generator; charge compute; submit the next batch."""
+        try:
+            if first:
+                batch = next(st.gen)
+            else:
+                batch = st.gen.send(payloads)
+        except StopIteration as stop:
+            dt = self._compute_seconds(st)
+            self.in_flight -= 1
+            self.jobs_done += 1
+            record = JobRecord(tag=st.tag, start_t=st.start_t,
+                               end_t=t + dt, result=stop.value,
+                               metrics=st.metrics, batches=st.batches)
+            if self.on_complete is not None:
+                self.on_complete(record)
+            return
+        dt = self._compute_seconds(st)
+        self._push(t + dt, "submit", (st, batch))
+
+    def _submit_batch(self, st: _JobState, batch, t: float) -> None:
+        """Cache-split the batch and route misses to storage."""
+        hits = 0
+        miss_bytes = 0
+        miss_n = 0
+        for rq in batch.requests:
+            st.metrics.cache_lookups += 1
+            if self.cache is not None and self.cache.get(rq.key):
+                hits += 1
+                st.metrics.cache_hits += 1
+            else:
+                miss_bytes += rq.nbytes
+                miss_n += 1
+        st.metrics.bytes_storage += miss_bytes
+        st.pending_batch = batch
+        st.pending_submit_t = t
+        st.pending_hits = hits
+        st.pending_total_bytes = batch.nbytes
+        if miss_n == 0:
+            t_hit = t + self.cfg.hit_latency_s
+            self._push(t_hit, "fetched", (st, t_hit, 0, 0))
+        else:
+            ticket = self.sim.submit_batch(t, miss_bytes, miss_n)
+            self._waiting[ticket.batch_id] = st
+
+    def _on_fetched(self, st: _JobState, t: float, n_storage_req: int,
+                    storage_bytes: int) -> None:
+        batch = st.pending_batch
+        st.batches.append(BatchTrace(
+            round_idx=st.round_idx, submit_t=st.pending_submit_t,
+            done_t=t, n_requests=n_storage_req,
+            n_hits=st.pending_hits, nbytes_storage=storage_bytes,
+            nbytes_total=st.pending_total_bytes))
+        st.round_idx += 1
+        if self.cache is not None:
+            for rq in batch.requests:
+                self.cache.put(rq.key, rq.nbytes)
+        payloads = {rq.key: self.store.get(rq.key) for rq in batch.requests}
+        st.pending_batch = None
+        self._advance_job(st, t, payloads=payloads)
+
+
 class QueryEngine:
+    """Closed-loop driver: a fixed concurrency window over a query queue."""
+
     def __init__(self, index, config: EngineConfig):
         self.index = index
         self.cfg = config
-        self.cache = self._make_cache()
+        self.cache = make_cache(config.cache_policy, config.cache_bytes,
+                                config.pinned_keys)
         # compute-pricing constants from the index
         self.dim = index.meta.dim
         pq = getattr(index.meta, "pq", None)
         self.pq_m = pq.m if pq is not None else 0
 
-    def _make_cache(self):
-        cfg = self.cfg
-        if cfg.cache_policy == "pinned" and cfg.pinned_keys:
-            return PinnedCache(set(cfg.pinned_keys))
-        if cfg.cache_policy == "slru" and cfg.cache_bytes > 0:
-            return SLRUCache(cfg.cache_bytes)
-        return None
-
-    # ------------------------------------------------------------------ --
-    def _compute_seconds(self, st: _QueryState) -> float:
-        """Price the compute the plan did since the last yield."""
-        m = st.metrics
-        d0, p0 = st.last_snapshot
-        dd = m.dist_comps - d0
-        dp = m.pq_dist_comps - p0
-        st.last_snapshot = (m.dist_comps, m.pq_dist_comps)
-        c = self.cfg.compute
-        return (dd * 2.0 * self.dim / c.dist_flops_per_s
-                + dp * max(self.pq_m, 1) * c.adc_lookup_s)
-
     def run(self, queries: np.ndarray, params: SearchParams,
             query_ids: Iterable[int] | None = None) -> WorkloadReport:
         cfg = self.cfg
-        sim = StorageSim(cfg.storage, seed=cfg.seed)
-        store = self.index.store
         qids = list(query_ids) if query_ids is not None else list(
             range(len(queries)))
-
-        # engine event heap: (time, seq, kind, payload)
-        events: list = []
-        seq = 0
-
-        def push(t, kind, payload):
-            nonlocal seq
-            heapq.heappush(events, (t, seq, kind, payload))
-            seq += 1
-
         queue = list(range(len(queries)))
         queue.reverse()                      # pop() serves in order
         records: list[QueryRecord] = []
-        waiting: dict[int, _QueryState] = {}  # batch_id -> state
-        clock = 0.0
+        core = SteppableEngine(cfg, self.index.store, self.cache,
+                               dim=self.dim, pq_m=self.pq_m)
 
-        def start_next_query(t: float):
+        def start_next_query(t: float) -> None:
             if not queue:
                 return
             qi = queue.pop()
             metrics = QueryMetrics()
             gen = self.index.search_plan(queries[qi], params, metrics)
-            st = _QueryState(qid=qids[qi], gen=gen, metrics=metrics,
-                             start_t=t, batches=[])
-            _advance(st, t, first=True)
+            core.submit(t, gen, metrics, tag=qids[qi])
 
-        def _submit(st: _QueryState, batch, t: float):
-            """Cache-split the batch and route misses to storage."""
-            hits = 0
-            miss_bytes = 0
-            miss_n = 0
-            for rq in batch.requests:
-                st.metrics.cache_lookups += 1
-                if self.cache is not None and self.cache.get(rq.key):
-                    hits += 1
-                    st.metrics.cache_hits += 1
-                else:
-                    miss_bytes += rq.nbytes
-                    miss_n += 1
-            st.metrics.bytes_storage += miss_bytes
-            st.pending_batch = batch
-            st.pending_submit_t = t
-            st.pending_hits = hits
-            st.pending_total_bytes = batch.nbytes
-            if miss_n == 0:
-                push(t + cfg.hit_latency_s, "fetched", (st, t + cfg.hit_latency_s, 0, 0))
-            else:
-                ticket = sim.submit_batch(t, miss_bytes, miss_n)
-                waiting[ticket.batch_id] = st
+        def on_complete(job: JobRecord) -> None:
+            res = job.result
+            records.append(QueryRecord(
+                qid=job.tag, start_t=job.start_t, end_t=job.end_t,
+                ids=res.ids, dists=res.dists, metrics=job.metrics,
+                batches=job.batches))
+            start_next_query(job.end_t)
 
-        def _advance(st: _QueryState, t: float, first: bool = False,
-                     payloads: dict | None = None):
-            """Resume the generator; charge compute; submit next batch."""
-            try:
-                if first:
-                    batch = next(st.gen)
-                else:
-                    batch = st.gen.send(payloads)
-            except StopIteration as stop:
-                res = stop.value
-                dt = self._compute_seconds(st)
-                records.append(QueryRecord(
-                    qid=st.qid, start_t=st.start_t, end_t=t + dt,
-                    ids=res.ids, dists=res.dists, metrics=st.metrics,
-                    batches=st.batches))
-                start_next_query(t + dt)
-                return
-            dt = self._compute_seconds(st)
-            push(t + dt, "submit", (st, batch))
+        core.on_complete = on_complete
 
-        def _on_fetched(st: _QueryState, t: float, n_storage_req: int,
-                        storage_bytes: int):
-            batch = st.pending_batch
-            st.batches.append(BatchTrace(
-                round_idx=st.round_idx, submit_t=st.pending_submit_t,
-                done_t=t, n_requests=n_storage_req,
-                n_hits=st.pending_hits, nbytes_storage=storage_bytes,
-                nbytes_total=st.pending_total_bytes))
-            st.round_idx += 1
-            if self.cache is not None:
-                for rq in batch.requests:
-                    self.cache.put(rq.key, rq.nbytes)
-            payloads = {rq.key: store.get(rq.key) for rq in batch.requests}
-            st.pending_batch = None
-            _advance(st, t, payloads=payloads)
-
-        # ---- bootstrap: fill the concurrency window --------------------
+        # ---- bootstrap the concurrency window, then drain ---------------
         for _ in range(min(cfg.concurrency, len(queue))):
             start_next_query(0.0)
-
-        # ---- main interleaved event loop -------------------------------
-        while events or sim.busy:
-            t_engine = events[0][0] if events else float("inf")
-            t_storage = sim.next_event_time()
-            t_storage = t_storage if t_storage is not None else float("inf")
-            if t_storage < t_engine:
-                for ticket in sim.advance_to(t_storage):
-                    st = waiting.pop(ticket.batch_id)
-                    clock = max(clock, ticket.done_t)
-                    _on_fetched(st, ticket.done_t, ticket.n_requests,
-                                ticket.nbytes)
-            elif events:
-                t, _, kind, payload = heapq.heappop(events)
-                sim.advance_to(t)
-                clock = max(clock, t)
-                if kind == "submit":
-                    st, batch = payload
-                    _submit(st, batch, t)
-                elif kind == "fetched":
-                    st, tt, nreq, nbytes = payload
-                    _on_fetched(st, tt, nreq, nbytes)
-            else:
-                break
+        while core.busy:
+            core.advance_to(core.next_event_time())
 
         wall = max((r.end_t for r in records), default=0.0)
         return WorkloadReport(
             records=records, wall_time_s=wall,
-            storage_bytes=sim.total_bytes,
-            storage_requests=sim.total_requests,
+            storage_bytes=core.sim.total_bytes,
+            storage_requests=core.sim.total_requests,
             concurrency=cfg.concurrency)
 
 

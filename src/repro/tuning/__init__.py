@@ -11,6 +11,9 @@ CLI: ``python -m repro.tuning --recall 0.95 --concurrency 64 --dim 960
 """
 from repro.tuning.evaluate import (EvalBudget, EvalOutcome, default_budget,
                                    successive_halving)
+from repro.tuning.fleet import (FleetOutcome, FleetPoint,
+                                FleetRecommendation, evaluate_fleet_point,
+                                tune_fleet)
 from repro.tuning.pareto import hypervolume, pareto_frontier
 from repro.tuning.recommend import Recommendation, autotune
 from repro.tuning.screen import (Prediction, ScreenResult,
@@ -24,4 +27,6 @@ __all__ = [
     "Prediction", "ScreenResult", "best_predicted_qps",
     "successive_halving", "EvalBudget", "EvalOutcome", "default_budget",
     "pareto_frontier", "hypervolume",
+    "FleetPoint", "FleetOutcome", "FleetRecommendation",
+    "evaluate_fleet_point", "tune_fleet",
 ]

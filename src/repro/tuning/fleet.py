@@ -1,0 +1,202 @@
+"""Fleet sizing as a tuning axis: shard count × replication as evaluable
+points (the ROADMAP's "tuner-driven replica/centroid re-partitioning").
+
+The single-node tuner answers *which index and knobs*; this module
+answers *how many shards and how many replicas* once one node isn't
+enough.  Each :class:`FleetPoint` is priced by running the real fleet —
+partition, scatter-gather router, shard engines — on a subsampled
+workload analogue (the same scaling discipline as
+``tuning.evaluate``), and the sweep shares one index build across all
+points because only the *placement* changes.
+
+Selection is cost-first: the smallest fleet (shards × replication =
+machines × stored copies) whose measured speedup over one shard meets
+``target_speedup`` and whose recall meets the workload target.  Replica
+count matters beyond fault tolerance: R >= 2 unlocks
+power-of-two-choices balancing and hedging, at the price of extra
+storage and diluted per-shard cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.core.cluster_index import ClusterIndex
+from repro.core.flat import exact_topk
+from repro.core.types import ClusterIndexParams, SearchParams
+from repro.data.synth import DatasetSpec, make_dataset
+from repro.fleet.partition import ClusterPartition
+from repro.fleet.router import FleetConfig, FleetRouter
+from repro.tuning.space import EnvSpec, WorkloadSpec
+
+SHARD_GRID = (1, 2, 4, 8)
+FLEET_REPLICA_GRID = (1, 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetPoint:
+    """One evaluable fleet configuration (the tuner's new axes)."""
+
+    n_shards: int
+    replication: int = 1
+    hedge: bool = False
+
+    def __post_init__(self):
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if not 1 <= self.replication <= self.n_shards:
+            raise ValueError(
+                f"replication must be in [1, {self.n_shards}], got "
+                f"{self.replication}")
+
+    @property
+    def machines(self) -> int:
+        return self.n_shards
+
+    @property
+    def stored_copies(self) -> int:
+        return self.replication
+
+    def label(self) -> str:
+        h = ",hedge" if self.hedge else ""
+        return f"fleet[S={self.n_shards},R={self.replication}{h}]"
+
+    def to_dict(self) -> dict:
+        return dict(n_shards=self.n_shards, replication=self.replication,
+                    hedge=self.hedge)
+
+
+@dataclasses.dataclass
+class FleetOutcome:
+    """Measured behaviour of one fleet point at eval scale."""
+
+    point: FleetPoint
+    qps: float
+    speedup: float                 # vs the 1-shard baseline of this sweep
+    p99_s: float
+    recall: float
+    load_imbalance: float
+    hedge_rate: float
+    shed_rate: float
+    eval_n: int
+
+    @property
+    def cost_units(self) -> int:
+        """Machines × stored copies — what the fleet bills for."""
+        return self.point.n_shards * self.point.replication
+
+    def to_dict(self) -> dict:
+        return dict(config=self.point.to_dict(),
+                    qps_eval=round(self.qps, 2),
+                    speedup=round(self.speedup, 3),
+                    p99_s=round(self.p99_s, 6),
+                    recall=round(self.recall, 4),
+                    load_imbalance=round(self.load_imbalance, 4),
+                    hedge_rate=round(self.hedge_rate, 4),
+                    shed_rate=round(self.shed_rate, 4),
+                    cost_units=self.cost_units, eval_n=self.eval_n)
+
+
+@dataclasses.dataclass
+class FleetRecommendation:
+    """Sweep result: the cheapest fleet that meets the targets."""
+
+    workload: WorkloadSpec
+    env_storage: str
+    point: FleetPoint
+    speedup: float
+    feasible: bool                 # meets target_speedup AND recall target
+    target_speedup: float
+    outcomes: list[FleetOutcome]
+
+    def to_dict(self) -> dict:
+        return dict(
+            workload=dataclasses.asdict(self.workload),
+            environment=dict(storage=self.env_storage),
+            recommendation=self.point.to_dict(),
+            speedup=round(self.speedup, 3),
+            meets_target=self.feasible,
+            target_speedup=self.target_speedup,
+            sweep=[o.to_dict() for o in self.outcomes])
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+
+def _eval_index(w: WorkloadSpec, eval_n: int, nq: int, seed: int):
+    n = min(eval_n, w.n)
+    spec = DatasetSpec("fleet-analog", w.dim, w.dtype, n, nq,
+                       n_clusters=max(8, min(64, n // 16)),
+                       intrinsic_dim=min(32, w.dim), seed=seed)
+    data, queries = make_dataset(spec)
+    gt, _ = exact_topk(data, queries, w.k)
+    index = ClusterIndex.build(data, ClusterIndexParams(
+        kmeans_iters=4, seed=seed))
+    return index, queries, gt
+
+
+def evaluate_fleet_point(w: WorkloadSpec, env: EnvSpec, point: FleetPoint,
+                         index, queries, gt, *, nprobe: int = 64,
+                         baseline_qps: float | None = None,
+                         seed: int = 0) -> FleetOutcome:
+    """Run one fleet point on the shared eval index and measure it.
+
+    The fleet question only exists under load: the driver holds enough
+    closed-loop queries outstanding to saturate a single shard, so the
+    sweep measures added *capacity*, not an idle latency floor.
+    """
+    params = SearchParams(k=w.k, nprobe=min(nprobe, index.meta.n_lists))
+    # fixed total fleet cache: replication dilutes the per-shard share
+    per_shard_cache = env.cache_bytes // point.n_shards
+    cfg = FleetConfig(
+        n_shards=point.n_shards, replication=point.replication,
+        storage=env.storage, concurrency=max(w.concurrency, 32),
+        shard_concurrency=8, queue_depth=64,
+        cache_bytes=per_shard_cache,
+        cache_policy="slru" if per_shard_cache > 0 else "none",
+        hedge=point.hedge, seed=seed)
+    partition = ClusterPartition.build(index.meta.list_nbytes,
+                                       point.n_shards, point.replication)
+    rep = FleetRouter(index, cfg, partition=partition).run(queries, params)
+    qps = rep.qps
+    return FleetOutcome(
+        point=point, qps=qps,
+        speedup=qps / baseline_qps if baseline_qps else 1.0,
+        p99_s=rep.latency_percentile(99), recall=rep.recall_against(gt),
+        load_imbalance=rep.load_imbalance, hedge_rate=rep.hedge_rate,
+        shed_rate=rep.shed_rate, eval_n=index.meta.n_data)
+
+
+def tune_fleet(w: WorkloadSpec, env: EnvSpec, target_speedup: float = 2.0,
+               shard_grid: tuple[int, ...] = SHARD_GRID,
+               replica_grid: tuple[int, ...] = FLEET_REPLICA_GRID,
+               hedge: bool = False, eval_n: int = 1200, nq: int = 48,
+               nprobe: int = 32, seed: int = 0) -> FleetRecommendation:
+    """Sweep shards × replication; pick the cheapest point meeting the
+    speedup and recall targets (ties: higher QPS)."""
+    index, queries, gt = _eval_index(w, eval_n, nq, seed)
+    base = evaluate_fleet_point(
+        w, env, FleetPoint(1, 1), index, queries, gt, nprobe=nprobe,
+        seed=seed)
+    outcomes = [dataclasses.replace(base, speedup=1.0)]
+    for s in shard_grid:
+        for r in replica_grid:
+            if r > s or (s == 1 and r == 1):
+                continue
+            point = FleetPoint(s, r, hedge=hedge and r > 1)
+            outcomes.append(evaluate_fleet_point(
+                w, env, point, index, queries, gt, nprobe=nprobe,
+                baseline_qps=base.qps, seed=seed))
+    feas = [o for o in outcomes
+            if o.speedup >= target_speedup
+            and o.recall >= w.target_recall - 0.005]
+    if feas:
+        pick = min(feas, key=lambda o: (o.cost_units, -o.qps))
+        feasible = True
+    else:
+        pick = max(outcomes, key=lambda o: (o.speedup, -o.cost_units))
+        feasible = False
+    return FleetRecommendation(
+        workload=w, env_storage=env.storage.name, point=pick.point,
+        speedup=pick.speedup, feasible=feasible,
+        target_speedup=target_speedup, outcomes=outcomes)

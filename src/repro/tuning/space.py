@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.cache.slru import CACHE_POLICIES
 from repro.storage.spec import PRESETS, StorageSpec
 
 # power-of-two sweeps from the paper's §5.1 protocol
@@ -33,7 +34,8 @@ REPLICA_GRID = (4, 8)
 R_GRID = (32, 64, 128)
 BEAMWIDTH_GRID = (4, 8, 16, 32)
 
-CACHE_POLICIES = ("none", "slru", "pinned")
+# cache policies come from the cache layer itself (one source of truth)
+assert CACHE_POLICIES == ("none", "slru", "pinned")
 
 # short CLI aliases for the paper's Table 1 environments
 STORAGE_ALIASES = {

@@ -114,6 +114,26 @@ def test_closed_loop_concurrency_bound(setup):
     assert len(rep.records) == len(queries)
 
 
+def test_engine_config_validation():
+    """Bad cache configurations fail loudly at construction, not deep
+    inside cache assembly."""
+    with pytest.raises(ValueError, match="unknown cache_policy"):
+        EngineConfig(storage=TOS, cache_policy="lru")
+    with pytest.raises(ValueError, match="pinned"):
+        EngineConfig(storage=TOS, cache_policy="pinned")  # no keys
+    with pytest.raises(ValueError, match="pinned_keys"):
+        EngineConfig(storage=TOS, cache_policy="slru",
+                     pinned_keys=frozenset({("list", 0)}))
+    with pytest.raises(ValueError, match="cache_bytes"):
+        EngineConfig(storage=TOS, cache_bytes=-1)
+    with pytest.raises(ValueError, match="concurrency"):
+        EngineConfig(storage=TOS, concurrency=0)
+    # valid corners still construct
+    EngineConfig(storage=TOS, cache_policy="pinned",
+                 pinned_keys=frozenset())
+    EngineConfig(storage=TOS, cache_policy="none")
+
+
 def test_engine_deterministic(setup):
     _, queries, _, ci, _ = setup
     p = SearchParams(k=10, nprobe=16)

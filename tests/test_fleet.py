@@ -1,0 +1,240 @@
+"""Fleet serving: partitioning, routing, hedging, backpressure, scaling."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.cluster_index import ClusterIndex
+from repro.core.flat import exact_topk
+from repro.core.graph_index import GraphIndex
+from repro.core.types import (ClusterIndexParams, GraphIndexParams,
+                              SearchParams)
+from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
+from repro.fleet import (ClusterPartition, FleetConfig, GraphPartition,
+                         merge_topk, partition_for_index, run_fleet)
+from repro.serving.engine import run_workload
+from repro.storage.spec import TOS
+from repro.tuning import (EnvSpec, FleetPoint, WorkloadSpec,
+                          resolve_storage, tune_fleet)
+
+
+def _quiet(spec):
+    return dataclasses.replace(spec, ttfb_sigma=1e-9)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = scaled(DEEP_ANALOG, 1200, 32)
+    data, queries = make_dataset(spec)
+    gt, _ = exact_topk(data, queries, 10)
+    ci = ClusterIndex.build(data, ClusterIndexParams(kmeans_iters=4, seed=0))
+    gi = GraphIndex.build(data, GraphIndexParams(
+        R=24, L_build=48, build_passes=1, pq_dims=24, seed=0))
+    return data, queries, gt, ci, gi
+
+
+# ------------------------------------------------------------ partition --
+
+def test_cluster_partition_balance_and_replication(setup):
+    _, _, _, ci, _ = setup
+    part = ClusterPartition.build(ci.meta.list_nbytes, n_shards=4,
+                                  replication=2)
+    assert part.bytes_imbalance < 1.25          # LPT keeps bytes even
+    for li in range(ci.meta.n_lists):
+        owners = part.owners(("list", li))
+        assert len(owners) == 2
+        assert len(set(owners)) == 2            # replicas on distinct shards
+        assert all(0 <= s < 4 for s in owners)
+    # deterministic
+    part2 = ClusterPartition.build(ci.meta.list_nbytes, 4, 2)
+    np.testing.assert_array_equal(part.owners_arr, part2.owners_arr)
+
+
+def test_graph_partition_spreads_and_replicates(setup):
+    _, _, _, _, gi = setup
+    part = GraphPartition.build(gi.meta.n_data, n_shards=4, replication=2,
+                                seed=0)
+    assert part.bytes_imbalance < 1.2           # hash spreads evenly
+    owners = part.owners(("node", 17))
+    assert len(set(owners)) == 2
+    # seed changes placement
+    part2 = GraphPartition.build(gi.meta.n_data, 4, 2, seed=1)
+    assert not np.array_equal(part.base, part2.base)
+
+
+def test_partition_factory_and_validation(setup):
+    _, _, _, ci, gi = setup
+    assert partition_for_index(ci, 2, 1).kind == "cluster"
+    assert partition_for_index(gi, 2, 1).kind == "graph"
+    with pytest.raises(ValueError):
+        ClusterPartition.build(ci.meta.list_nbytes, 2, 3)  # R > shards
+    with pytest.raises(ValueError):
+        GraphPartition.build(100, 0, 1)
+
+
+# ---------------------------------------------------------------- merge --
+
+def test_merge_topk_equals_global_topk():
+    rng = np.random.default_rng(0)
+    from repro.core.types import QueryMetrics, SearchResult
+    ids = rng.permutation(100)
+    d = rng.uniform(0, 1, 100).astype(np.float32)
+    # split into 3 "shards", each returning its local top-10
+    parts = []
+    for chunk in np.array_split(np.arange(100), 3):
+        o = np.argsort(d[chunk])[:10]
+        parts.append(SearchResult(ids[chunk][o], d[chunk][o],
+                                  QueryMetrics()))
+    got_ids, got_d = merge_topk(parts, 10)
+    order = np.argsort(d)[:10]
+    np.testing.assert_array_equal(got_ids, ids[order])
+    np.testing.assert_allclose(got_d, d[order])
+
+
+# ------------------------------------------------------- single-shard ----
+
+def test_one_shard_fleet_matches_single_engine(setup):
+    """Acceptance: a 1-shard fleet reproduces the single-QueryEngine
+    report (identical results; virtual-time QPS within tolerance)."""
+    _, queries, _, ci, _ = setup
+    p = SearchParams(k=10, nprobe=16)
+    mono = run_workload(ci, queries, p, _quiet(TOS), concurrency=8,
+                        cache_policy="none")
+    fleet = run_fleet(ci, queries, p, FleetConfig(
+        n_shards=1, replication=1, storage=_quiet(TOS), concurrency=8,
+        shard_concurrency=8, queue_depth=64))
+    by_qid = {r.qid: r for r in mono.records}
+    for rec in fleet.records:
+        np.testing.assert_array_equal(rec.ids, by_qid[rec.qid].ids)
+    assert fleet.qps == pytest.approx(mono.qps, rel=0.05)
+    assert fleet.storage_bytes == mono.storage_bytes
+
+
+def test_fleet_results_identical_to_direct_search(setup):
+    """Sharding changes timing and placement, never results."""
+    _, queries, _, ci, gi = setup
+    p = SearchParams(k=10, nprobe=16)
+    rep = run_fleet(ci, queries[:12], p, FleetConfig(
+        n_shards=3, replication=2, storage=_quiet(TOS), concurrency=4))
+    for rec in rep.records:
+        direct = ci.search(queries[rec.qid], p)
+        np.testing.assert_array_equal(rec.ids, direct.ids)
+    pg = SearchParams(k=10, search_len=40, beamwidth=8)
+    rep = run_fleet(gi, queries[:8], pg, FleetConfig(
+        n_shards=3, replication=2, storage=_quiet(TOS), concurrency=4))
+    for rec in rep.records:
+        direct = gi.search(queries[rec.qid], pg)
+        np.testing.assert_array_equal(rec.ids, direct.ids)
+
+
+# ----------------------------------------------------------- behaviour ---
+
+def test_fleet_deterministic(setup):
+    _, queries, _, ci, _ = setup
+    p = SearchParams(k=10, nprobe=32)
+    cfg = FleetConfig(n_shards=4, replication=2, storage=TOS,
+                      concurrency=16, hedge=True, hedge_percentile=75.0,
+                      seed=5)
+    a = run_fleet(ci, queries, p, cfg)
+    b = run_fleet(ci, queries, p, cfg)
+    assert a.to_json() == b.to_json()
+
+
+def test_qps_scales_with_shards(setup):
+    """Acceptance: aggregate QPS rises monotonically 1 -> 4 shards at a
+    fixed recall operating point (fixed nprobe => identical results)."""
+    _, queries, _, ci, _ = setup
+    p = SearchParams(k=10, nprobe=64)
+    qps = []
+    for s in (1, 2, 4):
+        rep = run_fleet(ci, queries, p, FleetConfig(
+            n_shards=s, replication=min(2, s), storage=TOS,
+            concurrency=32, shard_concurrency=8, queue_depth=64, seed=1))
+        qps.append(rep.qps)
+    assert qps[0] < qps[1] < qps[2]
+
+
+def test_backpressure_sheds_and_recovers(setup):
+    """Full admission queues shed submissions; retries mean no query is
+    ever dropped and results stay complete."""
+    _, queries, _, ci, _ = setup
+    p = SearchParams(k=10, nprobe=64)
+    rep = run_fleet(ci, queries, p, FleetConfig(
+        n_shards=2, replication=1, storage=TOS, concurrency=32,
+        shard_concurrency=1, queue_depth=1, seed=1))
+    assert rep.sheds_total > 0
+    assert rep.shed_rate > 0
+    assert len(rep.records) == len(queries)
+    assert all((r.ids >= 0).all() for r in rep.records)
+    assert sum(r.shed_retries for r in rep.records) > 0
+
+
+def test_hedging_fires_and_preserves_results(setup):
+    """With a heavy TTFB tail, hedge timers fire, some hedges win, and
+    results are unchanged (first completion wins, content identical)."""
+    _, queries, gt, ci, _ = setup
+    p = SearchParams(k=10, nprobe=64)
+    heavy = dataclasses.replace(TOS, ttfb_sigma=1.1)
+    base = dict(n_shards=4, replication=2, storage=heavy, concurrency=4,
+                shard_concurrency=8, queue_depth=64, seed=3,
+                hedge_min_samples=16)
+    off = run_fleet(ci, queries, p, FleetConfig(**base))
+    on = run_fleet(ci, queries, p, FleetConfig(
+        hedge=True, hedge_percentile=70.0, **base))
+    assert on.hedges_launched > 0
+    assert 0 <= on.hedge_wins <= on.hedges_launched
+    assert on.recall_against(gt) == off.recall_against(gt)
+    # hedging attacks exactly the slow-replica tail the paper's cold
+    # TTFB distribution produces
+    assert on.latency_percentile(95) < off.latency_percentile(95)
+
+
+def test_fleet_cache_reduces_storage_traffic(setup):
+    _, queries, _, ci, _ = setup
+    p = SearchParams(k=10, nprobe=32)
+    stream = np.concatenate([queries, queries])
+    cold = run_fleet(ci, stream, p, FleetConfig(
+        n_shards=2, replication=1, storage=_quiet(TOS), concurrency=8))
+    warm = run_fleet(ci, stream, p, FleetConfig(
+        n_shards=2, replication=1, storage=_quiet(TOS), concurrency=8,
+        cache_bytes=1 << 30, cache_policy="slru"))
+    assert warm.hit_rate > 0.3
+    assert warm.storage_bytes < cold.storage_bytes
+
+
+def test_fleet_config_validation():
+    with pytest.raises(ValueError):
+        FleetConfig(n_shards=0)
+    with pytest.raises(ValueError):
+        FleetConfig(n_shards=2, replication=3)
+    with pytest.raises(ValueError):
+        FleetConfig(cache_policy="pinned")
+    with pytest.raises(ValueError):
+        FleetConfig(hedge=True, hedge_percentile=30.0)
+
+
+# -------------------------------------------------------------- tuning ---
+
+def test_tune_fleet_picks_larger_fleet_for_higher_target():
+    w = WorkloadSpec(n=1_000_000, dim=96, target_recall=0.9,
+                     concurrency=16)
+    env = EnvSpec(storage=resolve_storage("tos"))
+    modest = tune_fleet(w, env, target_speedup=1.05,
+                        shard_grid=(1, 2, 4), replica_grid=(1, 2),
+                        eval_n=800, nq=32)
+    ambitious = tune_fleet(w, env, target_speedup=1.8,
+                           shard_grid=(1, 2, 4), replica_grid=(1, 2),
+                           eval_n=800, nq=32)
+    assert modest.feasible
+    m = modest.point.n_shards * modest.point.replication
+    a = ambitious.point.n_shards * ambitious.point.replication
+    assert a >= m
+    if ambitious.feasible:
+        assert ambitious.speedup >= 1.8
+
+
+def test_fleet_point_validation():
+    with pytest.raises(ValueError):
+        FleetPoint(0)
+    with pytest.raises(ValueError):
+        FleetPoint(2, replication=4)
