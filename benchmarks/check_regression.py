@@ -1,0 +1,157 @@
+"""Regression gate: compare freshly-produced ``BENCH_*.json`` at the repo
+root against the committed baselines in ``benchmarks/baselines/``.
+
+Every bench metric in this repo is *virtual-time* (deterministic event
+simulation), so fresh numbers should match the committed baseline almost
+exactly on any machine; the tolerance only absorbs numpy/platform float
+wiggle.  A genuine behaviour change (faster, slower, different recall)
+trips the gate and forces a deliberate baseline refresh.
+
+Usage:
+
+    PYTHONPATH=src python benchmarks/run.py          # or a single bench
+    python benchmarks/check_regression.py            # gate
+    python benchmarks/check_regression.py --update   # bless new numbers
+
+Baselines are kept per quick-mode: CI runs with ``REPRO_BENCH_QUICK=1``
+and compares against ``<name>.quick.json``; full runs compare against
+``<name>.json``.  Fresh files with no baseline are reported (add one with
+--update); a fresh file whose ``failures`` list is non-empty always
+fails.
+
+Exit status: 0 clean, 1 on any mismatch/missing baseline/hard failure.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+BASELINE_DIR = os.path.join(HERE, "baselines")
+
+#: Relative tolerance for numeric leaves.  Virtual-time determinism means
+#: the real drift across platforms is ~float-ulp; 2% headroom keeps the
+#: gate quiet across numpy versions while catching any real regression.
+DEFAULT_REL_TOL = float(os.environ.get("REPRO_REGRESSION_REL_TOL", "0.02"))
+DEFAULT_ABS_TOL = float(os.environ.get("REPRO_REGRESSION_ABS_TOL", "1e-9"))
+
+#: Keys whose values are allowed to drift more (percentile estimates over
+#: small samples are the noisiest virtual metrics).
+LOOSE_KEYS = ("p999", "p99", "peak_", "hedge", "sheds", "shed_")
+LOOSE_REL_TOL = float(os.environ.get("REPRO_REGRESSION_LOOSE_TOL", "0.10"))
+
+
+def _tol_for(path: str) -> float:
+    leaf = path.rsplit(".", 1)[-1]
+    if any(marker in leaf for marker in LOOSE_KEYS):
+        return LOOSE_REL_TOL
+    return DEFAULT_REL_TOL
+
+
+def compare(fresh, base, path: str = "") -> list[str]:
+    """Walk both JSON trees; return human-readable mismatch lines."""
+    diffs: list[str] = []
+    if isinstance(base, dict):
+        if not isinstance(fresh, dict):
+            return [f"{path}: type changed ({type(fresh).__name__})"]
+        for key in base:
+            if key not in fresh:
+                diffs.append(f"{path}.{key}: missing from fresh output")
+            else:
+                diffs.extend(compare(fresh[key], base[key],
+                                     f"{path}.{key}" if path else key))
+        return diffs
+    if isinstance(base, list):
+        if not isinstance(fresh, list):
+            return [f"{path}: type changed ({type(fresh).__name__})"]
+        if len(fresh) != len(base):
+            return [f"{path}: length {len(fresh)} != baseline {len(base)}"]
+        for i, (f, b) in enumerate(zip(fresh, base)):
+            diffs.extend(compare(f, b, f"{path}[{i}]"))
+        return diffs
+    if isinstance(base, bool) or base is None or isinstance(base, str):
+        if fresh != base:
+            diffs.append(f"{path}: {fresh!r} != baseline {base!r}")
+        return diffs
+    if isinstance(base, (int, float)):
+        try:
+            fv = float(fresh)
+        except (TypeError, ValueError):
+            return [f"{path}: non-numeric {fresh!r} vs baseline {base!r}"]
+        rel = _tol_for(path)
+        if abs(fv - base) > max(DEFAULT_ABS_TOL, rel * abs(float(base))):
+            diffs.append(f"{path}: {fresh} vs baseline {base} "
+                         f"(rel tol {rel})")
+        return diffs
+    return diffs
+
+
+def baseline_path(fresh_path: str, quick: bool) -> str:
+    name = os.path.basename(fresh_path)
+    if quick:
+        stem, ext = os.path.splitext(name)
+        name = f"{stem}.quick{ext}"
+    return os.path.join(BASELINE_DIR, name)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--update", action="store_true",
+                    help="bless the fresh numbers as the new baselines")
+    ap.add_argument("paths", nargs="*",
+                    help="fresh BENCH_*.json files (default: repo root)")
+    args = ap.parse_args(argv)
+
+    fresh_paths = args.paths or sorted(
+        glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+    if not fresh_paths:
+        print("check_regression: no fresh BENCH_*.json found "
+              "(run the benches first)", file=sys.stderr)
+        return 1
+
+    failed = False
+    for fp in fresh_paths:
+        with open(fp) as f:
+            fresh = json.load(f)
+        quick = bool(fresh.get("quick", False))
+        bp = baseline_path(fp, quick)
+        label = os.path.relpath(fp, ROOT)
+        if fresh.get("failures"):
+            print(f"FAIL {label}: bench hard checks failed: "
+                  f"{fresh['failures']}")
+            failed = True
+            continue
+        if args.update:
+            os.makedirs(BASELINE_DIR, exist_ok=True)
+            shutil.copyfile(fp, bp)
+            print(f"UPDATED {os.path.relpath(bp, ROOT)}")
+            continue
+        if not os.path.exists(bp):
+            print(f"FAIL {label}: no committed baseline at "
+                  f"{os.path.relpath(bp, ROOT)} (run with --update)")
+            failed = True
+            continue
+        with open(bp) as f:
+            base = json.load(f)
+        diffs = compare(fresh, base)
+        if diffs:
+            failed = True
+            print(f"FAIL {label}: {len(diffs)} mismatches vs "
+                  f"{os.path.relpath(bp, ROOT)}")
+            for d in diffs[:20]:
+                print(f"  {d}")
+            if len(diffs) > 20:
+                print(f"  ... and {len(diffs) - 20} more")
+        else:
+            print(f"OK   {label} matches "
+                  f"{os.path.relpath(bp, ROOT)}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

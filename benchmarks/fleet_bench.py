@@ -1,6 +1,7 @@
-"""Fleet serving bench: scaling curves, hedging tails, 1-shard parity.
+"""Fleet serving bench: scaling curves, hedging tails, 1-shard parity,
+open-loop scenarios.
 
-Three measurements (written to ``BENCH_fleet.json`` at the repo root and
+Five measurements (written to ``BENCH_fleet.json`` at the repo root and
 emitted as CSV rows):
 
 1. **QPS vs shards** — closed-loop aggregate throughput at a fixed recall
@@ -12,6 +13,12 @@ emitted as CSV rows):
    hedge and win rates.
 3. **1-shard parity** — a 1-shard fleet must reproduce the single
    ``QueryEngine`` report (identical per-query results; QPS within 5%).
+4. **Open-loop Poisson** — offered vs achieved QPS and goodput under a
+   50ms SLO below and above saturation.  Hard check: underloaded
+   achieved ~ offered; saturated achieved ~ closed-loop capacity.
+5. **Fault injection** — kill 1 of 4 shards (R=2) for half an open-loop
+   run.  Hard checks: recall identical to the clean run; every arrival
+   completes; p99 sojourn degrades.
 
     PYTHONPATH=src python benchmarks/fleet_bench.py
 
@@ -34,6 +41,8 @@ from repro.core.types import ClusterIndexParams, SearchParams
 from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
 from repro.fleet import FleetConfig, run_fleet
 from repro.serving.engine import run_workload
+from repro.sim.arrivals import Poisson
+from repro.sim.faults import FaultSchedule, ShardFault
 from repro.storage.spec import TOS
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
@@ -140,6 +149,90 @@ def bench_parity(index, queries, gt) -> dict:
                 qps_rel_diff=round(rel, 6), ids_equal=ids_equal)
 
 
+def bench_open_loop(index, queries, gt) -> list[dict]:
+    """Offered vs achieved QPS + goodput under a 50ms SLO, below and
+    above the fleet's closed-loop capacity."""
+    params = SearchParams(k=10, nprobe=64)
+    base = dict(n_shards=4, replication=2, storage=TOS, concurrency=24,
+                shard_concurrency=4, queue_depth=32, seed=1)
+    closed = run_fleet(index, queries, params, FleetConfig(**base))
+    rows = []
+    for label, frac in (("under", 0.6), ("saturated", 3.0)):
+        rate = frac * closed.qps
+        rep = run_fleet(index, queries, params, FleetConfig(**base),
+                        arrivals=Poisson(rate_qps=rate,
+                                         n_total=4 * len(queries)),
+                        slo_s=0.05)
+        rows.append(dict(
+            load=label, offered_qps=round(rep.offered_qps, 2),
+            achieved_qps=round(rep.qps, 2),
+            goodput_qps=round(rep.goodput_qps, 2),
+            goodput_frac=round(rep.goodput_frac, 4),
+            p99_sojourn_s=round(rep.sojourn_percentile(99), 6),
+            shed_rate=round(rep.shed_rate, 4),
+            recall=round(rep.recall_against(gt), 4)))
+        emit(f"fleet/openloop-{label}", 1e6 / max(rep.qps, 1e-9),
+             offered_qps=rep.offered_qps, achieved_qps=rep.qps,
+             goodput_frac=rep.goodput_frac,
+             p99_sojourn_ms=rep.sojourn_percentile(99) * 1e3)
+    under, sat = rows
+    _check("fleet-openloop-tracks-offered",
+           abs(under["achieved_qps"] - under["offered_qps"])
+           < 0.2 * under["offered_qps"],
+           f"underloaded achieved {under['achieved_qps']} vs offered "
+           f"{under['offered_qps']} (want within 20%)")
+    _check("fleet-openloop-saturates-at-capacity",
+           abs(sat["achieved_qps"] - closed.qps) < 0.25 * closed.qps,
+           f"saturated achieved {sat['achieved_qps']} vs closed-loop "
+           f"capacity {closed.qps:.1f} (want within 25%)")
+    return rows
+
+
+def bench_faults(index, queries, gt) -> dict:
+    """Kill 1 of 4 shards (R=2) for half an open-loop run: p99 degrades,
+    recall does not, nothing is dropped."""
+    params = SearchParams(k=10, nprobe=64)
+    base = dict(n_shards=4, replication=2, storage=TOS, concurrency=24,
+                shard_concurrency=4, queue_depth=32, seed=2)
+    cal = run_fleet(index, queries, params, FleetConfig(**base))
+    arr = lambda: Poisson(rate_qps=0.85 * cal.qps,
+                          n_total=6 * len(queries))
+    clean = run_fleet(index, queries, params, FleetConfig(**base),
+                      arrivals=arr(), slo_s=0.1)
+    horizon = clean.wall_time_s
+    faults = FaultSchedule((ShardFault(shard=1, t_fail=0.2 * horizon,
+                                       t_recover=0.7 * horizon),))
+    faulty = run_fleet(index, queries, params, FleetConfig(**base),
+                       arrivals=arr(), faults=faults, slo_s=0.1)
+    rec_clean = clean.recall_against(gt)
+    rec_fault = faulty.recall_against(gt)
+    row = dict(
+        fault="shard1-half-run",
+        clean_p99_sojourn_s=round(clean.sojourn_percentile(99), 6),
+        fault_p99_sojourn_s=round(faulty.sojourn_percentile(99), 6),
+        clean_goodput_frac=round(clean.goodput_frac, 4),
+        fault_goodput_frac=round(faulty.goodput_frac, 4),
+        jobs_aborted=sum(e.get("jobs_aborted", 0)
+                         for e in faulty.fault_log),
+        completed=len(faulty.records), arrivals=faulty.n_arrivals,
+        recall_clean=round(rec_clean, 4), recall_fault=round(rec_fault, 4))
+    emit("fleet/fault-shard1", faulty.sojourn_percentile(99) * 1e6,
+         clean_p99_ms=clean.sojourn_percentile(99) * 1e3,
+         fault_p99_ms=faulty.sojourn_percentile(99) * 1e3,
+         recall=rec_fault)
+    _check("fleet-fault-recall-unchanged", rec_fault == rec_clean,
+           f"recall clean={rec_clean:.4f} vs fault={rec_fault:.4f} "
+           f"(want identical, R=2 re-routes losslessly)")
+    _check("fleet-fault-nothing-dropped",
+           len(faulty.records) == faulty.n_arrivals,
+           f"{len(faulty.records)}/{faulty.n_arrivals} arrivals completed")
+    _check("fleet-fault-degrades-p99",
+           row["fault_p99_sojourn_s"] > row["clean_p99_sojourn_s"],
+           f"p99 sojourn clean={row['clean_p99_sojourn_s'] * 1e3:.1f}ms vs "
+           f"fault={row['fault_p99_sojourn_s'] * 1e3:.1f}ms (want higher)")
+    return row
+
+
 def main() -> int:
     index, queries, gt = _setup()
     results = dict(
@@ -148,6 +241,8 @@ def main() -> int:
         scaling=bench_scaling(index, queries, gt),
         hedging=bench_hedging(index, queries, gt),
         parity=bench_parity(index, queries, gt),
+        scenarios=dict(open_loop=bench_open_loop(index, queries, gt),
+                       fault=bench_faults(index, queries, gt)),
         failures=_failures,
     )
     with open(OUT_PATH, "w") as f:

@@ -1,0 +1,100 @@
+"""Shared CLI plumbing for ``python -m repro.fleet`` / ``python -m
+repro.tuning``.
+
+Both CLIs previously duplicated seed/JSON/output handling; with scenario
+serving they also share the whole scenario axis (``--scenario
+{closed,poisson,burst,trace}`` plus rate/duration/SLO knobs, fault
+schedules and autoscaling).  One definition here keeps flags, defaults
+and JSON emission identical across entry points.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.sim.arrivals import ARRIVAL_KINDS, Scenario
+from repro.sim.autoscale import AutoscaleConfig
+from repro.sim.faults import FaultSchedule
+
+
+def add_common_args(p: argparse.ArgumentParser, *, seed: int = 0) -> None:
+    """--seed / --compact / --out: determinism and emission knobs."""
+    p.add_argument("--seed", type=int, default=seed)
+    p.add_argument("--compact", action="store_true",
+                   help="single-line JSON output")
+    p.add_argument("--out", default=None, metavar="PATH",
+                   help="also write the JSON report to PATH")
+
+
+def add_scenario_args(p: argparse.ArgumentParser, *,
+                      faults: bool = True) -> None:
+    """The arrival-scenario axis shared by fleet and tuning.
+
+    ``faults=False`` (the tuner) registers only the arrival/SLO knobs:
+    fault injection and autoscaling act on a single concrete run, which
+    is ``python -m repro.fleet``'s job, not the sizing sweep's.
+    """
+    g = p.add_argument_group("scenario")
+    g.add_argument("--scenario", choices=list(ARRIVAL_KINDS),
+                   default="closed",
+                   help="arrival process: closed (paper harness), poisson "
+                        "(open loop), burst (poisson with a spike), trace "
+                        "(zipf-repeated replay)")
+    g.add_argument("--rate", type=float, default=200.0,
+                   help="offered load in QPS (open-loop scenarios)")
+    g.add_argument("--duration", type=float, default=None,
+                   help="arrival horizon in virtual seconds")
+    g.add_argument("--arrivals", type=int, default=None,
+                   help="cap on total arrivals (cycles the query set)")
+    g.add_argument("--slo-ms", type=float, default=50.0,
+                   help="p99 SLO in milliseconds (goodput / autoscaling)")
+    g.add_argument("--burst-factor", type=float, default=4.0)
+    g.add_argument("--burst-start", type=float, default=0.25,
+                   help="burst window start (virtual seconds)")
+    g.add_argument("--burst-len", type=float, default=0.25)
+    g.add_argument("--trace-zipf-a", type=float, default=1.2,
+                   help="trace popularity skew (zipf exponent)")
+    if not faults:
+        return
+    g.add_argument("--fail", action="append", default=[],
+                   metavar="SHARD:T_FAIL[:T_RECOVER]",
+                   help="kill shard SHARD at T_FAIL (revive at T_RECOVER); "
+                        "repeatable")
+    g.add_argument("--autoscale", action="store_true",
+                   help="enable the SLO-driven instance autoscaler")
+    g.add_argument("--autoscale-max", type=int, default=4,
+                   help="max serving instances per shard")
+    g.add_argument("--series-dt", type=float, default=None,
+                   help="time-series slice width (default 0.05s when a "
+                        "non-closed scenario, fault or autoscaler is on)")
+
+
+def scenario_from_args(args) -> Scenario:
+    return Scenario(
+        kind=args.scenario, rate_qps=args.rate, duration_s=args.duration,
+        n_arrivals=args.arrivals, burst_factor=args.burst_factor,
+        burst_start_s=args.burst_start, burst_len_s=args.burst_len,
+        zipf_a=args.trace_zipf_a, slo_s=args.slo_ms * 1e-3)
+
+
+def faults_from_args(args) -> FaultSchedule | None:
+    return FaultSchedule.parse(args.fail) if args.fail else None
+
+
+def autoscale_from_args(args) -> AutoscaleConfig | None:
+    if not args.autoscale:
+        return None
+    return AutoscaleConfig(slo_p99_s=args.slo_ms * 1e-3,
+                           max_instances=args.autoscale_max)
+
+
+def emit_json(payload: dict, args) -> None:
+    """Print (and optionally persist) the deterministic JSON report."""
+    text = json.dumps(payload, indent=None if args.compact else 2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+            f.write("\n")
+        print(f"# wrote {args.out}", file=sys.stderr)

@@ -17,15 +17,16 @@ simulator) advanced on one shared deterministic virtual clock, with
 CLI: ``python -m repro.fleet --shards 4 --replicas 2`` emits a
 deterministic JSON report.
 """
-from repro.fleet.metrics import FleetQueryRecord, FleetReport
+from repro.fleet.metrics import FleetQueryRecord, FleetReport, FleetSeries
 from repro.fleet.partition import (ClusterPartition, GraphPartition,
                                    partition_for_index)
 from repro.fleet.router import (FleetConfig, FleetRouter, merge_topk,
                                 run_fleet)
-from repro.fleet.server import ShardServer, ShardStats
+from repro.fleet.server import ShardGroup, ShardServer, ShardStats
 
 __all__ = [
     "FleetConfig", "FleetRouter", "run_fleet", "merge_topk",
-    "FleetReport", "FleetQueryRecord", "ShardServer", "ShardStats",
+    "FleetReport", "FleetQueryRecord", "FleetSeries",
+    "ShardGroup", "ShardServer", "ShardStats",
     "ClusterPartition", "GraphPartition", "partition_for_index",
 ]

@@ -1,19 +1,30 @@
 """CLI entry: ``python -m repro.fleet`` → JSON fleet report on stdout.
 
 Builds a synthetic workload analogue (``data/synth.py``), builds the
-index, partitions it across the fleet and serves the query set; the
-report is bit-identical for a given ``--seed``.
+index, partitions it across the fleet and serves the query set under the
+selected scenario; the report is bit-identical for a given ``--seed``.
 
 Examples:
 
     python -m repro.fleet --shards 4 --replicas 2
     python -m repro.fleet --shards 8 --replicas 2 --hedge --index graph
+    # open-loop Poisson at 300 QPS for 2 virtual seconds, 50ms SLO
+    python -m repro.fleet --scenario poisson --rate 300 --duration 2
+    # kill shard 1 mid-run, recover it, watch p99 (recall is unchanged)
+    python -m repro.fleet --scenario poisson --replicas 2 \\
+        --fail 1:0.5:1.5
+    # let the autoscaler defend the SLO through a 4x burst
+    python -m repro.fleet --scenario burst --rate 150 --duration 2 \\
+        --autoscale --slo-ms 80
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
+from repro.cli import (add_common_args, add_scenario_args,
+                       autoscale_from_args, emit_json, faults_from_args,
+                       scenario_from_args)
 from repro.core.cluster_index import ClusterIndex
 from repro.core.flat import exact_topk
 from repro.core.graph_index import GraphIndex
@@ -29,7 +40,9 @@ def build_parser() -> argparse.ArgumentParser:
         prog="python -m repro.fleet",
         description="Serve a synthetic workload across a sharded, "
                     "replicated fleet and report tail latency, balance, "
-                    "hedge and shed rates.")
+                    "hedge and shed rates — under closed-loop or "
+                    "open-loop (poisson/burst/trace) arrivals, with "
+                    "optional fault injection and SLO autoscaling.")
     p.add_argument("--shards", type=int, default=4)
     p.add_argument("--replicas", type=int, default=2,
                    help="replication factor R (replica shards per segment)")
@@ -47,7 +60,7 @@ def build_parser() -> argparse.ArgumentParser:
                    help="storage preset: %s or a full preset name"
                         % "/".join(sorted(STORAGE_ALIASES)))
     p.add_argument("--concurrency", type=int, default=8,
-                   help="closed-loop outstanding fleet queries")
+                   help="in-service fleet queries (admission window)")
     p.add_argument("--shard-concurrency", type=int, default=4)
     p.add_argument("--queue-depth", type=int, default=16)
     p.add_argument("--cache-mb", type=float, default=0.0,
@@ -55,11 +68,10 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--hedge", action="store_true",
                    help="enable hedged requests (needs --replicas >= 2)")
     p.add_argument("--hedge-percentile", type=float, default=95.0)
-    p.add_argument("--seed", type=int, default=0)
     p.add_argument("--no-recall", action="store_true",
                    help="skip the exact ground-truth pass")
-    p.add_argument("--compact", action="store_true",
-                   help="single-line JSON output")
+    add_scenario_args(p)
+    add_common_args(p)
     return p
 
 
@@ -69,6 +81,22 @@ def main(argv: list[str] | None = None) -> int:
         storage = resolve_storage(args.storage)
     except KeyError as e:
         build_parser().error(str(e.args[0]))
+    try:
+        scenario = scenario_from_args(args)
+        faults = faults_from_args(args)
+        autoscale = autoscale_from_args(args)
+    except ValueError as e:
+        build_parser().error(str(e))
+    if autoscale is not None and scenario.kind == "closed":
+        build_parser().error(
+            "--autoscale needs an open-loop --scenario (poisson/burst/"
+            "trace): closed-loop sojourns measure drain position, which "
+            "would pin the SLO controller at permanent scale-up")
+    if faults is not None:
+        bad = [f.shard for f in faults.faults if f.shard >= args.shards]
+        if bad:
+            build_parser().error(f"--fail shard(s) {bad} out of range for "
+                                 f"--shards {args.shards}")
 
     spec = DatasetSpec("fleet-analog", args.dim, "float32", args.n,
                        args.queries, n_clusters=max(8, min(64, args.n // 16)),
@@ -95,14 +123,26 @@ def main(argv: list[str] | None = None) -> int:
         cache_policy="slru" if args.cache_mb > 0 else "none",
         hedge=args.hedge, hedge_percentile=args.hedge_percentile,
         seed=args.seed)
-    report = run_fleet(index, queries, params, cfg)
+    arrivals = scenario.make_arrivals(len(queries), cfg.concurrency,
+                                      seed=args.seed)
+    # closed-loop sojourns measure drain position, not service time —
+    # goodput-vs-SLO is only meaningful for open-loop arrivals
+    slo_s = scenario.slo_s if scenario.kind != "closed" else None
+    report = run_fleet(index, queries, params, cfg,
+                       arrivals=arrivals, faults=faults,
+                       autoscale=autoscale, slo_s=slo_s,
+                       series_dt=args.series_dt)
 
-    out = dict(config=cfg.to_dict(), index=args.index, report=report.summary())
+    out = dict(config=cfg.to_dict(), index=args.index,
+               scenario=scenario.to_dict(), report=report.summary())
+    if faults is not None:
+        out["fault_schedule"] = faults.to_dicts()
+    if autoscale is not None:
+        out["autoscale_config"] = autoscale.to_dict()
     if not args.no_recall:
         gt, _ = exact_topk(data, queries, args.k)
         out["recall"] = round(report.recall_against(gt), 4)
-    import json
-    print(json.dumps(out, indent=None if args.compact else 2))
+    emit_json(out, args)
     return 0
 
 

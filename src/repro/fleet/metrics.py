@@ -1,9 +1,13 @@
-"""Fleet-level measurement: tail latency, balance, hedging, backpressure.
+"""Fleet-level measurement: tail latency, balance, hedging, backpressure,
+and — under open-loop scenarios — offered-vs-achieved load, goodput,
+queue depth and capacity over time.
 
 Extends the single-node §5.1 instrumentation with the quantities that only
 exist at fleet scale: p99.9 (hedging's target), per-shard load imbalance
-(partitioning quality), hedge rate (how often the tail deadline fired) and
-shed rate (admission-queue backpressure).
+(partitioning quality), hedge rate (how often the tail deadline fired),
+shed rate (admission-queue backpressure), and the scenario axes: a
+time-sliced :class:`FleetSeries` (achieved vs offered QPS, goodput, queue
+depth, instance count) plus shards·seconds cost when the autoscaler runs.
 """
 from __future__ import annotations
 
@@ -21,7 +25,7 @@ class FleetQueryRecord:
     """One query's fleet-side lifecycle."""
 
     qid: int
-    start_t: float
+    start_t: float                 # service start (left the router backlog)
     end_t: float
     ids: np.ndarray
     dists: np.ndarray
@@ -31,10 +35,53 @@ class FleetQueryRecord:
     shards_touched: int
     hedged: bool = False
     shed_retries: int = 0
+    arrive_t: float | None = None  # open-loop arrival (None => start_t)
 
     @property
     def latency(self) -> float:
         return self.end_t - self.start_t
+
+    @property
+    def sojourn(self) -> float:
+        """Arrival-to-completion time (includes router backlog wait)."""
+        t0 = self.start_t if self.arrive_t is None else self.arrive_t
+        return self.end_t - t0
+
+
+@dataclasses.dataclass
+class FleetSeries:
+    """Per-slice counters sampled by the fleet's monitor process."""
+
+    dt: float
+    t: list = dataclasses.field(default_factory=list)
+    arrived: list = dataclasses.field(default_factory=list)
+    completed: list = dataclasses.field(default_factory=list)
+    good: list = dataclasses.field(default_factory=list)
+    queue_depth: list = dataclasses.field(default_factory=list)
+    instances: list = dataclasses.field(default_factory=list)
+
+    def append(self, *, t: float, arrived: int, completed: int, good: int,
+               queue_depth: int, instances: int) -> None:
+        self.t.append(round(t, 9))
+        self.arrived.append(arrived)
+        self.completed.append(completed)
+        self.good.append(good)
+        self.queue_depth.append(queue_depth)
+        self.instances.append(instances)
+
+    def to_dict(self) -> dict:
+        """Per-slice rates (QPS) alongside the raw counters."""
+        dts = np.diff([0.0] + self.t)
+        dts = np.maximum(dts, 1e-12)
+        return dict(
+            dt=self.dt, t=self.t,
+            offered_qps=[round(a / d, 3)
+                         for a, d in zip(self.arrived, dts)],
+            achieved_qps=[round(c / d, 3)
+                          for c, d in zip(self.completed, dts)],
+            goodput_qps=[round(g / d, 3) for g, d in zip(self.good, dts)],
+            queue_depth=self.queue_depth,
+            instances=self.instances)
 
 
 @dataclasses.dataclass
@@ -53,17 +100,46 @@ class FleetReport:
     hedge_wins: int
     sheds_total: int
     submissions_total: int         # accepted + shed submission attempts
+    # -------------------------------------------------- scenario fields --
+    scenario: str = "closed"
+    n_arrivals: int = 0
+    offered_qps: float = 0.0       # arrival rate (== qps when closed-loop)
+    slo_s: float | None = None
+    good_total: int | None = None  # completions with sojourn <= slo
+    series: FleetSeries | None = None
+    shards_seconds: float | None = None   # ∫ active instances dt (cost)
+    scale_events: list | None = None      # autoscaler decision log
+    fault_log: list | None = None         # fail/recover events observed
 
     # ------------------------------------------------------- throughput --
     @property
     def qps(self) -> float:
         return len(self.records) / max(self.wall_time_s, 1e-12)
 
+    @property
+    def goodput_qps(self) -> float:
+        """Completions that met the SLO, per second of wall time."""
+        if self.good_total is None:
+            return self.qps
+        return self.good_total / max(self.wall_time_s, 1e-12)
+
+    @property
+    def goodput_frac(self) -> float:
+        """Fraction of arrivals served within the SLO."""
+        if self.good_total is None or not self.n_arrivals:
+            return 1.0
+        return self.good_total / self.n_arrivals
+
     # ---------------------------------------------------------- latency --
     def latency_percentile(self, p: float) -> float:
         if not self.records:
             return 0.0
         return float(np.percentile([r.latency for r in self.records], p))
+
+    def sojourn_percentile(self, p: float) -> float:
+        if not self.records:
+            return 0.0
+        return float(np.percentile([r.sojourn for r in self.records], p))
 
     @property
     def mean_latency(self) -> float:
@@ -122,7 +198,7 @@ class FleetReport:
 
     # ------------------------------------------------------------- JSON --
     def summary(self) -> dict:
-        return dict(
+        out = dict(
             n_queries=len(self.records),
             n_shards=self.n_shards,
             replication=self.replication,
@@ -146,6 +222,32 @@ class FleetReport:
             wall_time_s=round(self.wall_time_s, 9),
             shards=[s.to_dict() for s in self.shard_stats],
         )
+        if self.scenario != "closed" or self.slo_s is not None:
+            out["scenario"] = dict(
+                kind=self.scenario,
+                n_arrivals=self.n_arrivals,
+                offered_qps=round(self.offered_qps, 4),
+                achieved_qps=round(self.qps, 4),
+                p50_sojourn_s=round(self.sojourn_percentile(50), 9),
+                p99_sojourn_s=round(self.sojourn_percentile(99), 9))
+            if self.slo_s is not None:
+                out["scenario"].update(
+                    slo_s=self.slo_s,
+                    goodput_qps=round(self.goodput_qps, 4),
+                    goodput_frac=round(self.goodput_frac, 4))
+        if self.series is not None:
+            out["series"] = self.series.to_dict()
+        if self.shards_seconds is not None:
+            out["shards_seconds"] = round(self.shards_seconds, 6)
+        if self.scale_events is not None:
+            out["autoscale"] = dict(
+                events=self.scale_events,
+                final_instances=(self.series.instances[-1]
+                                 if self.series and self.series.instances
+                                 else None))
+        if self.fault_log is not None:
+            out["faults"] = self.fault_log
+        return out
 
     def to_json(self, indent: int | None = 2) -> str:
         return json.dumps(self.summary(), indent=indent)

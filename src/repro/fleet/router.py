@@ -1,9 +1,9 @@
-"""Scatter-gather fleet routing on one shared virtual clock.
+"""Scatter-gather fleet routing on one shared event kernel.
 
 The router owns the compute-node-resident index metadata (BKT centroids /
-PQ codes — what the paper's single node caches, §2.1) and drives N
-:class:`ShardServer` engines plus its own event heap on one deterministic
-virtual clock:
+PQ codes — what the paper's single node caches, §2.1) and serves queries
+across N :class:`ShardGroup` s, all registered on one deterministic
+:class:`repro.sim.Kernel`:
 
 * **Cluster queries** — centroid search runs at the router; the selected
   posting lists scatter to shard-local *scan jobs* (fetch + distance scan
@@ -17,26 +17,37 @@ virtual clock:
 
 Routing policies:
 
-* **power-of-two-choices** replica selection: among a key's R replica
-  owners, sample two and pick the shorter queue (queue depth = running +
-  waiting jobs) — the classic load-balance result, and the reason
-  replication pays beyond fault tolerance.
+* **power-of-two-choices** replica selection: among a key's R live
+  replica owners, sample two and pick the shorter queue — the classic
+  load-balance result, and the reason replication pays beyond fault
+  tolerance.
 * **hedged requests**: once enough job latencies are observed, a slot
   whose job outlives the fleet's p-th latency percentile is re-issued to
-  the other replicas; first completion wins, the loser's work still
-  burns shard resources (hedge_rate / hedge_win_rate in the report).
+  the other replicas; first completion wins (kernel timers, cancellable).
 * **backpressure**: a shed submission (admission queue full) is retried
   after ``shed_retry_s`` with fresh replica choice — sheds delay queries
   and show up in shed_rate, they never drop data.
 
-Determinism: one event heap, stable sequence numbers, per-shard
-sub-generators seeded from (fleet seed, shard id) — identical seeds give
-bit-identical :class:`FleetReport` JSON.
+Scenario axes (all deterministic for a given seed):
+
+* **arrivals** (:mod:`repro.sim.arrivals`): closed loop (default — the
+  regime under which this file reproduces the pre-kernel reports
+  exactly), open-loop Poisson with diurnal/burst modulation, or trace
+  replay.  Open-loop arrivals queue in a router backlog behind a window
+  of ``concurrency`` in-service queries.
+* **faults** (:mod:`repro.sim.faults`): shard kill/revive schedules; the
+  victims' jobs are re-routed to surviving replica owners (recall is
+  unchanged when R >= 2); unroutable keys back off until recovery.
+* **autoscaling** (:mod:`repro.sim.autoscale`): an SLO controller adds /
+  drains shard instances; the report prices the run in shards·seconds.
+
+Determinism: one event kernel, (time, seq) total order, per-component
+seeded RNG streams — identical seeds give bit-identical
+:class:`FleetReport` JSON.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from collections import deque
 from typing import Iterable
 
@@ -47,11 +58,19 @@ from repro.core.cluster_index import dedup_topk, scan_posting_lists
 from repro.core.cost_model import ComputeSpec, plan_compute_seconds
 from repro.core.types import (FetchBatch, FetchRequest, QueryMetrics,
                               SearchParams, SearchResult)
-from repro.fleet.metrics import FleetQueryRecord, FleetReport
+from repro.fleet.metrics import FleetQueryRecord, FleetReport, FleetSeries
 from repro.fleet.partition import partition_for_index
-from repro.fleet.server import ShardServer
+from repro.fleet.server import ShardGroup, ShardServer
 from repro.serving.engine import EngineConfig, JobRecord
+from repro.sim.arrivals import ArrivalProcess, ClosedLoop, offered_rate
+from repro.sim.autoscale import AutoscaleConfig, Autoscaler
+from repro.sim.faults import FaultSchedule
+from repro.sim.kernel import Kernel
 from repro.storage.spec import TOS, StorageSpec
+
+#: A slot that cannot be routed (all owners down) retries on a backoff
+#: timer; past this many retries the scenario is declared unservable.
+RETRY_LIMIT = 100_000
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,7 +80,7 @@ class FleetConfig:
     n_shards: int = 4
     replication: int = 1
     storage: StorageSpec = TOS
-    concurrency: int = 8           # closed-loop outstanding fleet queries
+    concurrency: int = 8           # in-service fleet queries (window)
     shard_concurrency: int = 4     # jobs executing per shard
     queue_depth: int = 16          # shard admission queue bound
     cache_bytes: int = 0           # per-shard segment cache budget
@@ -142,12 +161,12 @@ class _FleetQuery:
     """Router-side state machine for one in-flight query."""
 
     __slots__ = ("idx", "qid", "q", "k", "kind", "gen", "metrics",
-                 "start_t", "snapshot", "rounds", "n_jobs", "shards",
-                 "hedged", "shed_retries", "slots", "open_slots",
+                 "start_t", "arrive_t", "snapshot", "rounds", "n_jobs",
+                 "shards", "hedged", "shed_retries", "slots", "open_slots",
                  "local_results", "payloads", "done")
 
     def __init__(self, idx: int, qid: int, q: np.ndarray, kind: str,
-                 k: int, start_t: float):
+                 k: int, start_t: float, arrive_t: float):
         self.idx = idx
         self.qid = qid
         self.q = q
@@ -156,6 +175,7 @@ class _FleetQuery:
         self.gen = None
         self.metrics = QueryMetrics()
         self.start_t = start_t
+        self.arrive_t = arrive_t
         self.snapshot = (0, 0)
         self.rounds = 0
         self.n_jobs = 0
@@ -192,7 +212,7 @@ def _merge_metrics(dst: QueryMetrics, src: QueryMetrics) -> None:
 
 
 class FleetRouter:
-    """Closed-loop scatter-gather serving over N shard servers."""
+    """Scatter-gather serving over N shard groups on one event kernel."""
 
     def __init__(self, index, cfg: FleetConfig, partition=None):
         self.index = index
@@ -209,77 +229,140 @@ class FleetRouter:
         pq = getattr(index.meta, "pq", None)
         self.pq_m = pq.m if pq is not None else 0
 
-    def _shard_engine_cfg(self, shard_id: int) -> EngineConfig:
+    def _shard_engine_cfg(self, shard_id: int, instance: int
+                          ) -> EngineConfig:
         cfg = self.cfg
         return EngineConfig(
             storage=cfg.storage, concurrency=1,
             cache_bytes=cfg.cache_bytes, cache_policy=cfg.cache_policy,
             hit_latency_s=cfg.hit_latency_s, compute=cfg.compute,
-            seed=cfg.seed + shard_id * 7919)
+            seed=cfg.seed + shard_id * 7919 + instance * 104729)
+
+    def _spawn_server(self, shard_id: int, instance: int) -> ShardServer:
+        cfg = self.cfg
+        return ShardServer(
+            shard_id, self._shard_engine_cfg(shard_id, instance),
+            self.index.store, kernel=self.kernel, dim=self.dim,
+            pq_m=self.pq_m, instance=instance,
+            max_inflight=cfg.shard_concurrency,
+            queue_depth=cfg.queue_depth, on_complete=self._job_done)
 
     # ------------------------------------------------------------- run ---
     def run(self, queries: np.ndarray, params: SearchParams,
-            query_ids: Iterable[int] | None = None) -> FleetReport:
+            query_ids: Iterable[int] | None = None, *,
+            arrivals: ArrivalProcess | None = None,
+            faults: FaultSchedule | None = None,
+            autoscale: AutoscaleConfig | None = None,
+            slo_s: float | None = None,
+            series_dt: float | None = None) -> FleetReport:
         cfg = self.cfg
         qids = list(query_ids) if query_ids is not None else list(
             range(len(queries)))
-        self.servers = [
-            ShardServer(s, self._shard_engine_cfg(s), self.index.store,
-                        dim=self.dim, pq_m=self.pq_m,
-                        max_inflight=cfg.shard_concurrency,
-                        queue_depth=cfg.queue_depth,
-                        on_complete=self._job_done)
-            for s in range(cfg.n_shards)]
-        self._events: list = []            # (t, seq, kind, payload)
-        self._seq = 0
+        arr = arrivals if arrivals is not None else ClosedLoop(
+            cfg.concurrency, n_total=len(queries))
+        self.kernel = Kernel(seed=cfg.seed)
+        self.groups = [ShardGroup(s, self._spawn_server)
+                       for s in range(cfg.n_shards)]
+        self._queries = queries
+        self._params = params
+        self._qids = qids
+        self._window = arr.window if arr.window is not None \
+            else cfg.concurrency
+        self._backlog: deque = deque()     # (arrival_idx, workload_idx)
+        self._in_window = 0
+        self._arrive_t: dict[int, float] = {}
+        self._arrivals_total = 0
+        self._last_arrival_t = 0.0
+        self._arrivals_done = False
         self._ctx: dict[int, tuple] = {}   # tag -> (query, slot, attempt, t)
         self._tag_seq = 0
         self._slot_seq = 0
         self._lat: deque = deque(maxlen=256)
-        self._rng = np.random.default_rng(cfg.seed ^ 0xF1EE7)
+        self._rng = self.kernel.rng("router", seed=cfg.seed ^ 0xF1EE7)
         self._records: list[FleetQueryRecord] = []
         self._jobs_total = 0
         self._hedges = 0
         self._hedge_wins = 0
-        pending = list(range(len(queries)))
-        pending.reverse()
+        self._retry_pending = 0
+        self._fault_log: list[dict] = []
+        # SLO / goodput accounting
+        self._slo = autoscale.slo_p99_s if autoscale is not None \
+            and slo_s is None else slo_s
+        self._good_total = 0
+        self.recent_sojourns: deque = deque(
+            maxlen=autoscale.window if autoscale is not None else 256)
+        # monitor + controller processes
+        self._series: FleetSeries | None = None
+        self._monitor = None
+        self._slice_counts = [0, 0, 0]     # arrived, completed, good
+        need_monitor = (series_dt is not None or autoscale is not None
+                        or faults is not None or arr.kind != "closed")
+        if need_monitor:
+            dt = series_dt if series_dt is not None else 0.05
+            self._series = FleetSeries(dt=dt)
+            self._monitor = self.kernel.every(dt, self._sample_slice)
+        self._autoscaler = None
+        if autoscale is not None:
+            self._autoscaler = Autoscaler(autoscale, self)
+            self._autoscaler.start(self.kernel)
+        if faults is not None:
+            faults.install(self.kernel, self)
 
-        def start_next(t: float) -> None:
-            if not pending:
-                return
-            qi = pending.pop()
-            self._begin_query(qi, qids[qi], queries[qi], params, t)
-
-        self._start_next = start_next
-        for _ in range(min(cfg.concurrency, len(pending))):
-            start_next(0.0)
-
-        while True:
-            t_router = self._events[0][0] if self._events else float("inf")
-            t_shard = float("inf")
-            shard = None
-            for srv in self.servers:
-                ts = srv.next_event_time()
-                if ts is not None and ts < t_shard:
-                    t_shard = ts
-                    shard = srv
-            if t_router == float("inf") and shard is None:
-                break
-            if t_router <= t_shard:
-                t, _, kind, payload = heapq.heappop(self._events)
-                self._dispatch(kind, payload, t)
-            else:
-                shard.advance_to(t_shard)
+        arr.start(self.kernel, self._arrive, len(queries),
+                  done=self._arrivals_exhausted)
+        self.kernel.run()
 
         wall = max((r.end_t for r in self._records), default=0.0)
-        stats = [srv.finalize_stats() for srv in self.servers]
+        if self._series is not None:
+            self._flush_slice(wall)
+        stats = [srv.finalize_stats() for g in self.groups
+                 for srv in g.all_servers()]
+        shards_seconds = sum(srv.active_seconds(wall) for g in self.groups
+                             for srv in g.all_servers())
+        offered = offered_rate(self._arrivals_total, self._last_arrival_t,
+                               wall)
         return FleetReport(
             records=self._records, shard_stats=stats, wall_time_s=wall,
             n_shards=cfg.n_shards, replication=cfg.replication,
             concurrency=cfg.concurrency, jobs_total=self._jobs_total,
             hedges_launched=self._hedges, hedge_wins=self._hedge_wins,
             sheds_total=sum(s.sheds for s in stats),
-            submissions_total=sum(s.submissions for s in stats))
+            submissions_total=sum(s.submissions for s in stats),
+            scenario=arr.kind, n_arrivals=self._arrivals_total,
+            offered_qps=offered, slo_s=self._slo,
+            good_total=self._good_total if self._slo is not None else None,
+            series=self._series, shards_seconds=shards_seconds,
+            scale_events=(self._autoscaler.events
+                          if self._autoscaler is not None else None),
+            fault_log=self._fault_log if faults is not None else None)
+
+    # ------------------------------------------------- arrivals / window --
+    def _arrive(self, arrival_idx: int, workload_idx: int) -> None:
+        t = self.kernel.now
+        self._arrivals_total += 1
+        self._last_arrival_t = t
+        self._slice_counts[0] += 1
+        self._arrive_t[arrival_idx] = t
+        if self._in_window < self._window:
+            self._in_window += 1
+            self._begin_query(arrival_idx, workload_idx, t)
+        else:
+            self._backlog.append((arrival_idx, workload_idx))
+
+    def _arrivals_exhausted(self) -> None:
+        self._arrivals_done = True
+        self._maybe_shutdown()
+
+    def _maybe_shutdown(self) -> None:
+        """Stop the monitor/controller tickers once the workload drains —
+        they would otherwise keep the kernel alive forever."""
+        if not (self._arrivals_done and self._in_window == 0
+                and not self._backlog):
+            return
+        if self._monitor is not None:
+            self._monitor.cancel()
+        if self._autoscaler is not None:
+            self._autoscaler.stop()
 
     # ----------------------------------------------------- query driver --
     def _price(self, fq: _FleetQuery) -> float:
@@ -291,45 +374,42 @@ class FleetRouter:
                                     m.pq_dist_comps - p0,
                                     self.dim, self.pq_m, self.cfg.compute)
 
-    def _begin_query(self, idx: int, qid: int, q: np.ndarray,
-                     params: SearchParams, t: float) -> None:
-        fq = _FleetQuery(idx, qid, q, self.kind, params.k, t)
+    def _begin_query(self, arrival_idx: int, workload_idx: int,
+                     t: float) -> None:
+        q = self._queries[workload_idx]
+        fq = _FleetQuery(arrival_idx, self._qids[workload_idx], q,
+                         self.kind, self._params.k, t,
+                         self._arrive_t.pop(arrival_idx))
         meta = self.index.meta
         if self.kind == "cluster":
-            lids, ndist = self.index.select_lists(q, params.nprobe)
+            lids, ndist = self.index.select_lists(q, self._params.nprobe)
             fq.metrics.dist_comps += ndist
             fq.metrics.lists_visited = len(lids)
             reqs = [FetchRequest(("list", int(i)),
                                  int(meta.list_nbytes[i])) for i in lids]
-            self._push(t + self._price(fq), "scatter", (fq, reqs))
+            self.kernel.at(t + self._price(fq), self._scatter, fq, reqs)
         else:
-            fq.gen = self.index.search_plan(q, params, fq.metrics)
+            fq.gen = self.index.search_plan(q, self._params, fq.metrics)
             batch = next(fq.gen)
-            self._push(t + self._price(fq), "scatter",
-                       (fq, list(batch.requests)))
-
-    def _push(self, t: float, kind: str, payload) -> None:
-        heapq.heappush(self._events, (t, self._seq, kind, payload))
-        self._seq += 1
-
-    def _dispatch(self, kind: str, payload, t: float) -> None:
-        if kind == "scatter":
-            fq, reqs = payload
-            self._scatter(fq, reqs, t)
-        elif kind == "hedge":
-            fq, slot = payload
-            self._maybe_hedge(fq, slot, t)
-        elif kind == "retry":
-            fq, slot = payload
-            self._retry_slot(fq, slot, t)
+            self.kernel.at(t + self._price(fq), self._scatter, fq,
+                           list(batch.requests))
 
     # ---------------------------------------------------------- scatter --
+    def _group_has_capacity(self, shard: int) -> bool:
+        srv = self.groups[shard].pick()
+        return srv is not None and srv.has_capacity
+
     def _pick_replica(self, owners: tuple[int, ...],
-                      exclude: int | None = None) -> int:
-        """Power-of-two-choices by shard queue depth."""
-        cand = [s for s in owners if s != exclude]
+                      exclude: int | None = None) -> int | None:
+        """Power-of-two-choices by shard queue depth over live shards.
+
+        Returns None when no owner is alive (the caller backs off and
+        retries — the keys become routable again at recovery)."""
+        cand = [s for s in owners if s != exclude and self.groups[s].alive]
         if not cand:
-            cand = list(owners)
+            cand = [s for s in owners if self.groups[s].alive]
+            if not cand:
+                return None
         if len(cand) == 1:
             return cand[0]
         if len(cand) == 2:
@@ -337,28 +417,34 @@ class FleetRouter:
         else:
             i, j = self._rng.choice(len(cand), size=2, replace=False)
             a, b = cand[int(i)], cand[int(j)]
-        la, lb = self.servers[a].load, self.servers[b].load
+        la, lb = self.groups[a].load, self.groups[b].load
         if la != lb:
             return a if la < lb else b
         return min(a, b)
 
-    def _scatter(self, fq: _FleetQuery, reqs: list[FetchRequest],
-                 t: float) -> None:
+    def _scatter(self, fq: _FleetQuery, reqs: list[FetchRequest]) -> None:
         """Fan one round's requests out by replica-chosen owner."""
+        t = self.kernel.now
         fq.rounds += 1
         fq.slots = {}
         fq.payloads = {}
-        groups: dict[int, list[FetchRequest]] = {}
+        groups: dict[int | None, list[FetchRequest]] = {}
         for rq in reqs:
             shard = self._pick_replica(self.partition.owners(rq.key))
             groups.setdefault(shard, []).append(rq)
-        for shard in sorted(groups):
-            slot = _Slot(self._slot_seq, groups[shard], shard)
+        order = sorted(groups, key=lambda s: (s is None, s))
+        for shard in order:
+            slot = _Slot(self._slot_seq, groups[shard],
+                         shard if shard is not None else -1)
             self._slot_seq += 1
             fq.slots[slot.slot_id] = slot
         fq.open_slots = len(fq.slots)
         for slot in fq.slots.values():
-            self._submit_primary(fq, slot, t)
+            if slot.shard < 0:                 # no live owner right now
+                fq.shed_retries += 1
+                self._schedule_retry(fq, slot)
+            else:
+                self._submit_primary(fq, slot, t)
 
     def _make_plan(self, fq: _FleetQuery, reqs: list[FetchRequest],
                    metrics: QueryMetrics):
@@ -366,10 +452,22 @@ class FleetRouter:
             return _scan_plan(fq.q, reqs, fq.k, metrics)
         return _fetch_plan(reqs)
 
+    def _schedule_retry(self, fq: _FleetQuery, slot: _Slot) -> None:
+        if fq.shed_retries > RETRY_LIMIT:
+            raise RuntimeError(
+                f"query {fq.qid} retried {fq.shed_retries} times — keys "
+                f"unroutable (every replica owner down with no recovery?)")
+        self._retry_pending += 1
+        self.kernel.after(self.cfg.shed_retry_s, self._retry_fire, fq, slot)
+
+    def _retry_fire(self, fq: _FleetQuery, slot: _Slot) -> None:
+        self._retry_pending -= 1
+        self._retry_slot(fq, slot, self.kernel.now)
+
     def _retry_slot(self, fq: _FleetQuery, slot: _Slot, t: float) -> None:
-        """A shed slot comes back with fresh per-key replica choice,
-        avoiding the shard that shed (loads have changed meanwhile).
-        Keys that re-group onto several shards split into new slots."""
+        """A shed or orphaned slot comes back with fresh per-key replica
+        choice, avoiding the shard that rejected (or lost) it.  Keys that
+        re-group onto several shards split into new slots."""
         if slot.done or fq.done:
             return
         groups: dict[int, list[FetchRequest]] = {}
@@ -377,11 +475,19 @@ class FleetRouter:
             owners = self.partition.owners(rq.key)
             shard = self._pick_replica(
                 owners, exclude=slot.shard if len(owners) > 1 else None)
+            if shard is None:                  # every owner is down
+                fq.shed_retries += 1
+                self._schedule_retry(fq, slot)
+                return
             groups.setdefault(shard, []).append(rq)
         if len(groups) == 1:
             slot.shard = next(iter(groups))
             self._submit_primary(fq, slot, t)
             return
+        # The slot splits across shards: retire the old slot object so a
+        # hedge timer still holding it cannot resurrect it (which would
+        # double-decrement open_slots via ghost hedge jobs).
+        slot.done = True
         del fq.slots[slot.slot_id]
         fq.open_slots -= 1
         for shard in sorted(groups):
@@ -398,11 +504,12 @@ class FleetRouter:
         if slot.done or fq.done:
             return
         shard = slot.shard
+        srv = self.groups[shard].pick()
         metrics = QueryMetrics()
         tag = self._tag_seq
         self._tag_seq += 1
         plan = self._make_plan(fq, slot.reqs, metrics)
-        if self.servers[shard].try_submit(t, plan, metrics, tag):
+        if srv is not None and srv.try_submit(t, plan, metrics, tag):
             slot.outstanding.setdefault(0, set()).add(tag)
             slot.collected.setdefault(0, [])
             self._ctx[tag] = (fq, slot, 0, t)
@@ -414,28 +521,32 @@ class FleetRouter:
                     and len(self._lat) >= cfg.hedge_min_samples):
                 deadline = float(np.percentile(
                     np.asarray(self._lat), cfg.hedge_percentile))
-                self._push(t + deadline, "hedge", (fq, slot))
+                self.kernel.at(t + deadline, self._maybe_hedge, fq, slot)
         else:
             fq.shed_retries += 1
-            self._push(t + cfg.shed_retry_s, "retry", (fq, slot))
+            self._schedule_retry(fq, slot)
 
-    def _maybe_hedge(self, fq: _FleetQuery, slot: _Slot, t: float) -> None:
+    def _maybe_hedge(self, fq: _FleetQuery, slot: _Slot) -> None:
         """Deadline fired: re-issue the slot's keys on the other replicas."""
+        t = self.kernel.now
         if fq.done or slot.done or slot.hedge_launched:
             return
         slot.hedge_launched = True
         groups: dict[int, list[FetchRequest]] = {}
         for rq in slot.reqs:
             owners = self.partition.owners(rq.key)
-            alt = [s for s in owners if s != slot.shard]
+            alt = [s for s in owners
+                   if s != slot.shard and self.groups[s].alive]
             if not alt:
-                return                     # un-hedgeable key (R=1)
+                return                     # un-hedgeable key (R=1 / faults)
             shard = self._pick_replica(tuple(alt))
+            if shard is None:
+                return
             groups.setdefault(shard, []).append(rq)
         # hedge only when every target replica would admit the duplicate
         # right now — a loaded fleet gets no speculative extra work, and
         # no hedge sub-job is ever orphaned by a partial shed.
-        if any(not self.servers[s].has_capacity for s in groups):
+        if any(not self._group_has_capacity(s) for s in groups):
             return
         self._hedges += 1
         fq.hedged = True
@@ -446,7 +557,7 @@ class FleetRouter:
             tag = self._tag_seq
             self._tag_seq += 1
             plan = self._make_plan(fq, groups[shard], metrics)
-            self.servers[shard].try_submit(t, plan, metrics, tag)
+            self.groups[shard].pick().try_submit(t, plan, metrics, tag)
             slot.outstanding[1].add(tag)
             self._ctx[tag] = (fq, slot, 1, t)
             self._jobs_total += 1
@@ -454,7 +565,7 @@ class FleetRouter:
             fq.shards.add(shard)
 
     # ----------------------------------------------------------- gather --
-    def _job_done(self, shard_id: int, job: JobRecord) -> None:
+    def _job_done(self, server: ShardServer, job: JobRecord) -> None:
         ctx = self._ctx.pop(job.tag, None)
         if ctx is None:
             return
@@ -495,8 +606,8 @@ class FleetRouter:
             res = stop.value
             self._finish_query(fq, t + self._price(fq), res.ids, res.dists)
             return
-        self._push(t + self._price(fq), "scatter",
-                   (fq, list(batch.requests)))
+        self.kernel.at(t + self._price(fq), self._scatter, fq,
+                       list(batch.requests))
 
     def _finish_query(self, fq: _FleetQuery, t: float, ids: np.ndarray,
                       dists: np.ndarray) -> None:
@@ -505,13 +616,111 @@ class FleetRouter:
             qid=fq.qid, start_t=fq.start_t, end_t=t, ids=ids, dists=dists,
             metrics=fq.metrics, rounds=fq.rounds, n_jobs=fq.n_jobs,
             shards_touched=len(fq.shards), hedged=fq.hedged,
-            shed_retries=fq.shed_retries))
-        self._start_next(t)
+            shed_retries=fq.shed_retries, arrive_t=fq.arrive_t))
+        sojourn = t - fq.arrive_t
+        self.recent_sojourns.append(sojourn)
+        self._slice_counts[1] += 1
+        if self._slo is not None and sojourn <= self._slo:
+            self._good_total += 1
+            self._slice_counts[2] += 1
+        if self._backlog:
+            nai, nwi = self._backlog.popleft()
+            self._begin_query(nai, nwi, t)
+        else:
+            self._in_window -= 1
+            self._maybe_shutdown()
+
+    # ------------------------------------------------- faults / scaling --
+    def fail_shard(self, shard: int) -> None:
+        t = self.kernel.now
+        tags = self.groups[shard].fail_all(t)
+        self._fault_log.append(dict(t=round(t, 6), event="fail",
+                                    shard=shard, jobs_aborted=len(tags)))
+        for tag in tags:
+            self._job_aborted(tag)
+
+    def recover_shard(self, shard: int) -> None:
+        t = self.kernel.now
+        self.groups[shard].recover_all(t)
+        self._fault_log.append(dict(t=round(t, 6), event="recover",
+                                    shard=shard))
+
+    def _job_aborted(self, tag: int) -> None:
+        """A shard died under this sub-job: re-route its slot to the
+        surviving replica owners (or back off until one recovers)."""
+        ctx = self._ctx.pop(tag, None)
+        if ctx is None:
+            return
+        fq, slot, attempt, _ = ctx
+        if fq.done or slot.done:
+            return
+        if attempt not in slot.outstanding:
+            return
+        # The attempt lost one of its sub-jobs, so it can never gather a
+        # complete key set again — drop it wholesale.  Surviving sibling
+        # tags become stale (their completions are ignored in _job_done),
+        # exactly like hedge-race losers; any other attempt still covers
+        # every key of the slot.
+        slot.outstanding.pop(attempt)
+        slot.collected.pop(attempt, None)
+        if not slot.outstanding:           # no live attempt remains
+            self._retry_slot(fq, slot, self.kernel.now)
+
+    @property
+    def total_instances(self) -> int:
+        return sum(len(g.routable) for g in self.groups)
+
+    def scale_up_one(self) -> bool:
+        cfg_as = self._autoscaler.cfg
+        cands = [g for g in self.groups
+                 if g.alive and len(g.routable) < cfg_as.max_instances]
+        if not cands:
+            return False
+        grp = max(cands, key=lambda g: (
+            sum(s.load for s in g.routable) / len(g.routable),
+            -g.shard_id))
+        grp.scale_up()
+        return True
+
+    def scale_down_one(self) -> bool:
+        cfg_as = self._autoscaler.cfg
+        cands = [g for g in self.groups
+                 if len(g.routable) > cfg_as.min_instances]
+        if not cands:
+            return False
+        grp = min(cands, key=lambda g: (
+            sum(s.load for s in g.routable) / len(g.routable),
+            g.shard_id))
+        return grp.begin_drain(self.kernel.now) is not None
+
+    # ----------------------------------------------------------- monitor --
+    def _queue_depth(self) -> int:
+        depth = len(self._backlog) + self._retry_pending
+        for g in self.groups:
+            depth += sum(s.load for s in g.instances)
+        return depth
+
+    def _sample_slice(self, now: float) -> None:
+        self._flush_slice(now)
+
+    def _flush_slice(self, now: float) -> None:
+        a, c, g = self._slice_counts
+        self._slice_counts = [0, 0, 0]
+        self._series.append(t=now, arrived=a, completed=c, good=g,
+                            queue_depth=self._queue_depth(),
+                            instances=self.total_instances)
 
 
 def run_fleet(index, queries: np.ndarray, params: SearchParams,
               cfg: FleetConfig,
-              query_ids: Iterable[int] | None = None) -> FleetReport:
+              query_ids: Iterable[int] | None = None, *,
+              arrivals: ArrivalProcess | None = None,
+              faults: FaultSchedule | None = None,
+              autoscale: AutoscaleConfig | None = None,
+              slo_s: float | None = None,
+              series_dt: float | None = None) -> FleetReport:
     """One-call fleet evaluation (the fleet analogue of run_workload)."""
-    return FleetRouter(index, cfg).run(queries, params,
-                                       query_ids=query_ids)
+    return FleetRouter(index, cfg).run(
+        queries, params, query_ids=query_ids, arrivals=arrivals,
+        faults=faults, autoscale=autoscale, slo_s=slo_s,
+        series_dt=series_dt)

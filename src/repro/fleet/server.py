@@ -1,16 +1,24 @@
-"""Shard server: one compute node of the fleet (paper §2.1's
+"""Shard servers: the compute nodes of the fleet (paper §2.1's
 one-node-to-one-bucket unit, replicated N times).
 
-Each server owns an independent :class:`SteppableEngine` — its own segment
-cache and its own discrete-event storage simulator (own NIC bandwidth pipe,
-own GET-rate bucket) — but never advances time itself: the fleet router
-drives every server on one shared virtual clock.
+Each :class:`ShardServer` is one *instance*: an independent
+:class:`SteppableEngine` — its own segment cache and its own
+discrete-event storage simulator (own NIC bandwidth pipe, own GET-rate
+bucket) — registered on the fleet's shared :class:`repro.sim.Kernel`.
 
 Admission control: at most ``max_inflight`` jobs execute concurrently;
 further submissions wait in a bounded FIFO queue; when the queue is full
 the submission is **shed** (rejected back to the router, which retries a
 replica or backs off).  Shed accounting is the backpressure signal the
 fleet report surfaces.
+
+Because storage is disaggregated, a logical shard can be served by any
+number of stateless instances over the same data.  :class:`ShardGroup`
+holds the instances of one shard: fault injection kills and revives them
+(cold cache on recovery — the re-warm shows up as a hit-rate dip), and
+the autoscaler adds instances under SLO pressure and drains them when
+load subsides.  Per-instance activation intervals price the fleet in
+shards·seconds.
 """
 from __future__ import annotations
 
@@ -18,15 +26,16 @@ import dataclasses
 from collections import deque
 from typing import Callable
 
-from repro.cache.slru import make_cache
 from repro.serving.engine import EngineConfig, JobRecord, SteppableEngine
+from repro.sim.kernel import Kernel
 
 
 @dataclasses.dataclass
 class ShardStats:
-    """Per-shard accounting for the fleet report."""
+    """Per-instance accounting for the fleet report."""
 
     shard_id: int
+    instance: int = 0
     jobs_done: int = 0
     submissions: int = 0           # accepted + shed
     sheds: int = 0
@@ -35,38 +44,51 @@ class ShardStats:
     busy_s: float = 0.0            # sum of job service times (no queue wait)
     storage_bytes: int = 0
     storage_requests: int = 0
+    failures: int = 0
+    jobs_aborted: int = 0
 
     def to_dict(self) -> dict:
-        return dict(shard=self.shard_id, jobs=self.jobs_done,
-                    submissions=self.submissions, sheds=self.sheds,
-                    peak_queue=self.peak_queue,
-                    peak_inflight=self.peak_inflight,
-                    busy_s=round(self.busy_s, 9),
-                    storage_bytes=self.storage_bytes,
-                    storage_requests=self.storage_requests)
+        d = dict(shard=self.shard_id, instance=self.instance,
+                 jobs=self.jobs_done,
+                 submissions=self.submissions, sheds=self.sheds,
+                 peak_queue=self.peak_queue,
+                 peak_inflight=self.peak_inflight,
+                 busy_s=round(self.busy_s, 9),
+                 storage_bytes=self.storage_bytes,
+                 storage_requests=self.storage_requests)
+        if self.failures:
+            d.update(failures=self.failures, jobs_aborted=self.jobs_aborted)
+        return d
 
 
 class ShardServer:
-    """A bounded admission queue in front of one steppable shard engine."""
+    """A bounded admission queue in front of one kernel-resident engine."""
 
     def __init__(self, shard_id: int, cfg: EngineConfig, store, *,
-                 dim: int, pq_m: int = 0, max_inflight: int = 4,
-                 queue_depth: int = 16,
-                 on_complete: Callable[[int, JobRecord], None] | None = None):
+                 kernel: Kernel, dim: int, pq_m: int = 0, instance: int = 0,
+                 max_inflight: int = 4, queue_depth: int = 16,
+                 on_complete: Callable[["ShardServer", JobRecord], None]
+                 | None = None):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         if queue_depth < 0:
             raise ValueError(f"queue_depth must be >= 0, got {queue_depth}")
         self.shard_id = shard_id
+        self.instance = instance
+        self.cfg = cfg
         self.max_inflight = max_inflight
         self.queue_depth = queue_depth
         self.on_complete = on_complete
-        cache = make_cache(cfg.cache_policy, cfg.cache_bytes,
-                           cfg.pinned_keys)
-        self.engine = SteppableEngine(cfg, store, cache, dim=dim, pq_m=pq_m,
+        self.on_retired: Callable[["ShardServer"], None] | None = None
+        self.engine = SteppableEngine(cfg, store, cfg.make_cache(),
+                                      kernel=kernel, dim=dim, pq_m=pq_m,
                                       on_complete=self._job_done)
         self._queue: deque = deque()       # (plan, metrics, tag)
-        self.stats = ShardStats(shard_id=shard_id)
+        self.stats = ShardStats(shard_id=shard_id, instance=instance)
+        self.alive = True
+        self.draining = False
+        # [on, off] activation intervals for shards·seconds pricing
+        self.active_intervals: list[list[float | None]] = [[kernel.now, None]]
 
     # ---------------------------------------------------------- routing --
     @property
@@ -75,16 +97,27 @@ class ShardServer:
         return self.engine.in_flight + len(self._queue)
 
     @property
+    def routable(self) -> bool:
+        return self.alive and not self.draining
+
+    @property
+    def idle(self) -> bool:
+        return self.engine.in_flight == 0 and not self._queue
+
+    @property
     def has_capacity(self) -> bool:
         """Would a submission right now be admitted (not shed)?"""
-        return (self.engine.in_flight < self.max_inflight
-                or len(self._queue) < self.queue_depth)
+        return self.routable and (
+            self.engine.in_flight < self.max_inflight
+            or len(self._queue) < self.queue_depth)
 
     def try_submit(self, t: float, plan, metrics, tag) -> bool:
         """Admit a job at virtual time ``t``; False means shed."""
+        if not self.routable:
+            return False
         self.stats.submissions += 1
         if self.engine.in_flight < self.max_inflight:
-            self.engine.submit(t, plan, metrics, tag=tag)
+            self.engine.submit(plan, metrics, tag=tag, at=t)
             self.stats.peak_inflight = max(self.stats.peak_inflight,
                                            self.engine.in_flight)
             return True
@@ -101,22 +134,136 @@ class ShardServer:
         self.stats.busy_s += job.latency
         if self._queue and self.engine.in_flight < self.max_inflight:
             plan, metrics, tag = self._queue.popleft()
-            self.engine.submit(job.end_t, plan, metrics, tag=tag)
+            self.engine.submit(plan, metrics, tag=tag, at=job.end_t)
         if self.on_complete is not None:
-            self.on_complete(self.shard_id, job)
+            self.on_complete(self, job)
+        if self.draining and self.idle and self.on_retired is not None:
+            self.on_retired(self)
 
-    # ------------------------------------------------------------ clock --
-    def next_event_time(self) -> float | None:
-        return self.engine.next_event_time()
+    # ------------------------------------------------- faults / scaling --
+    def fail(self, t: float) -> list:
+        """The node dies: abort every queued and running job; returns the
+        aborted tags so the router can re-route them to replicas."""
+        if not self.alive:
+            return []
+        self.alive = False
+        self.stats.failures += 1
+        tags = [tag for _, _, tag in self._queue]
+        self._queue.clear()
+        tags = self.engine.abort_all() + tags
+        self.stats.jobs_aborted += len(tags)
+        self._close_interval(t)
+        return tags
 
-    def advance_to(self, t: float) -> None:
-        self.engine.advance_to(t)
+    def recover(self, t: float) -> None:
+        """The node comes back **cold**: its cache restarts empty and
+        re-warms from traffic (the post-recovery hit-rate dip).  An
+        instance that was already draining stays retired — recovery
+        revives capacity, not scale-down decisions."""
+        if self.alive or self.draining:
+            return
+        self.alive = True
+        self.engine.cache = self.cfg.make_cache()
+        self.active_intervals.append([t, None])
 
-    @property
-    def busy(self) -> bool:
-        return self.engine.busy or bool(self._queue)
+    def retire(self, t: float) -> None:
+        """Close the instance's billing interval (autoscale drain done)."""
+        self._close_interval(t)
+
+    def _close_interval(self, t: float) -> None:
+        if self.active_intervals and self.active_intervals[-1][1] is None:
+            self.active_intervals[-1][1] = t
+
+    def active_seconds(self, horizon: float) -> float:
+        """Billed seconds in [0, horizon] (open intervals run to horizon)."""
+        total = 0.0
+        for on, off in self.active_intervals:
+            end = horizon if off is None else min(off, horizon)
+            total += max(0.0, end - on)
+        return total
 
     def finalize_stats(self) -> ShardStats:
         self.stats.storage_bytes = self.engine.sim.total_bytes
         self.stats.storage_requests = self.engine.sim.total_requests
         return self.stats
+
+
+class ShardGroup:
+    """The serving instances of one logical shard.
+
+    Data placement (which shard owns which keys) is the partition's job;
+    this is purely the *capacity* dimension: 1..N stateless instances
+    serving the same keys, each with its own cache and NIC.
+    """
+
+    def __init__(self, shard_id: int,
+                 spawn: Callable[[int, int], ShardServer]):
+        self.shard_id = shard_id
+        self._spawn = spawn
+        self._next_instance = 1
+        self.instances: list[ShardServer] = [spawn(shard_id, 0)]
+        self.retired: list[ShardServer] = []
+
+    # ---------------------------------------------------------- routing --
+    @property
+    def routable(self) -> list[ShardServer]:
+        return [s for s in self.instances if s.routable]
+
+    @property
+    def alive(self) -> bool:
+        return bool(self.routable)
+
+    @property
+    def load(self) -> float:
+        """Best-case admission load (what po2c balances on)."""
+        inst = self.routable
+        return min(s.load for s in inst) if inst else float("inf")
+
+    def pick(self) -> ShardServer | None:
+        """Least-loaded routable instance (ties: oldest instance)."""
+        best = None
+        for s in self.instances:
+            if s.routable and (best is None or s.load < best.load):
+                best = s
+        return best
+
+    # ------------------------------------------------- faults / scaling --
+    def fail_all(self, t: float) -> list:
+        tags = []
+        for s in self.instances:
+            tags.extend(s.fail(t))
+        return tags
+
+    def recover_all(self, t: float) -> None:
+        for s in self.instances:
+            s.recover(t)
+
+    def scale_up(self) -> ShardServer:
+        srv = self._spawn(self.shard_id, self._next_instance)
+        self._next_instance += 1
+        self.instances.append(srv)
+        return srv
+
+    def begin_drain(self, t: float) -> ShardServer | None:
+        """Mark the least-loaded extra instance draining: no new routes;
+        it retires (stops billing) once its queue and engine are idle."""
+        cands = [s for s in self.routable if s.instance != 0]
+        if not cands:
+            return None
+        srv = min(cands, key=lambda s: (s.load, -s.instance))
+        srv.draining = True
+        if srv.idle:
+            self._retire(srv, t)
+        else:
+            srv.on_retired = lambda s: self._retire(s, s.engine.kernel.now)
+        return srv
+
+    def _retire(self, srv: ShardServer, t: float) -> None:
+        srv.retire(t)
+        srv.on_retired = None
+        if srv in self.instances:
+            self.instances.remove(srv)
+            self.retired.append(srv)
+
+    def all_servers(self) -> list[ShardServer]:
+        return self.instances + self.retired

@@ -1,27 +1,29 @@
 """The cloud-native query engine: index × storage simulator × cache.
 
-Closed-loop serving (paper §5.1): ``concurrency`` workers drain the query
-queue; each query runs its index ``search_plan`` generator, whose fetch
-batches flow through the cache and the discrete-event storage simulator.
-Compute phases are priced from the metrics deltas the plan records
-(distance comps × ComputeSpec) — reproducing the CPU/I/O split of Fig 2/3.
+Serving (paper §5.1): each query runs its index ``search_plan``
+generator, whose fetch batches flow through the cache and the
+discrete-event storage simulator.  Compute phases are priced from the
+metrics deltas the plan records (distance comps × ComputeSpec) —
+reproducing the CPU/I/O split of Fig 2/3.
 
-Two layers:
+Two layers, both components of a :class:`repro.sim.Kernel`:
 
-* :class:`SteppableEngine` — the open-loop core.  It executes plan
-  generators against (cache × storage sim) but never advances time on its
-  own: a driver owns the virtual clock through ``next_event_time()`` /
-  ``advance_to()``.  This is what lets ``repro.fleet`` advance N shard
-  engines on one shared clock.
-* :class:`QueryEngine` — the paper's closed-loop driver: a fixed
-  concurrency window over a query queue, drained to completion.
+* :class:`SteppableEngine` — the plan executor.  ``submit()`` starts a
+  plan generator; every subsequent step (compute completion, cache-hit
+  service, storage completion) is a kernel event, so N engines sharing a
+  kernel (``repro.fleet``) interleave exactly by virtual time.
+* :class:`QueryEngine` — the driver process: an admission window of
+  ``concurrency`` jobs over a FIFO backlog, fed by an arrival process
+  (:mod:`repro.sim.arrivals`).  The default :class:`ClosedLoop` arrivals
+  reproduce the paper's fixed-concurrency harness; open-loop processes
+  (Poisson, trace) turn the same engine into an M/G/c-style service.
 
 Everything is virtual-time deterministic for a given seed.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
+from collections import deque
 from typing import Any, Callable, Iterable
 
 import numpy as np
@@ -31,6 +33,8 @@ from repro.core.cost_model import (DEFAULT_COMPUTE, ComputeSpec,
                                    plan_compute_seconds)
 from repro.core.types import QueryMetrics, SearchParams
 from repro.serving.metrics import BatchTrace, QueryRecord, WorkloadReport
+from repro.sim.arrivals import ArrivalProcess, ClosedLoop, offered_rate
+from repro.sim.kernel import Event, Kernel
 from repro.storage.simulator import StorageSim
 from repro.storage.spec import StorageSpec
 
@@ -66,6 +70,14 @@ class EngineConfig:
             raise ValueError(f"concurrency must be >= 1, got "
                              f"{self.concurrency}")
 
+    def make_cache(self):
+        """The single cache construction path for every engine in the
+        system (serving and fleet): policy/pinned validation happened at
+        config construction, so a cache can only be built from a config
+        that passed it."""
+        return make_cache(self.cache_policy, self.cache_bytes,
+                          self.pinned_keys)
+
 
 @dataclasses.dataclass
 class _JobState:
@@ -80,6 +92,8 @@ class _JobState:
     pending_submit_t: float = 0.0
     pending_hits: int = 0
     pending_total_bytes: int = 0
+    pending_ev: Event | None = None     # next engine event for this job
+    alive: bool = True                  # False once aborted (shard death)
 
 
 @dataclasses.dataclass
@@ -104,17 +118,19 @@ class JobRecord:
 
 
 class SteppableEngine:
-    """Open-loop plan executor on an externally-driven virtual clock.
+    """Plan executor registered on a (possibly shared) event kernel.
 
-    ``submit()`` starts a plan generator at virtual time ``t``;
-    ``advance_to(t)`` processes every engine/storage event up to ``t``,
-    invoking ``on_complete(JobRecord)`` synchronously at each job's
-    completion time (so a closed-loop driver can start the next query, or
-    a shard server can pop its admission queue, at exactly that instant).
+    ``submit()`` starts a plan generator (optionally at a virtual time
+    ``at`` >= now — completion chains schedule follow-on work at the
+    completing job's ``end_t``); every fetch round's cache split, storage
+    I/O and compute pricing then advances through kernel events.
+    ``on_complete(JobRecord)`` fires synchronously at each job's
+    completion so a driver can start the next query, or a shard server
+    can pop its admission queue, at exactly that virtual instant.
     """
 
     def __init__(self, cfg: EngineConfig, store, cache=None, *,
-                 dim: int, pq_m: int = 0,
+                 kernel: Kernel | None = None, dim: int, pq_m: int = 0,
                  on_complete: Callable[[JobRecord], None] | None = None):
         self.cfg = cfg
         self.store = store
@@ -122,65 +138,40 @@ class SteppableEngine:
         self.dim = dim
         self.pq_m = pq_m
         self.on_complete = on_complete
-        self.sim = StorageSim(cfg.storage, seed=cfg.seed)
-        self._events: list = []        # (time, seq, kind, payload)
-        self._seq = 0
-        self._waiting: dict[int, _JobState] = {}   # batch_id -> job
+        self.kernel = kernel if kernel is not None else Kernel(seed=cfg.seed)
+        self.sim = StorageSim(cfg.storage, self.kernel, seed=cfg.seed)
+        self._jobs: list[_JobState] = []
         self.in_flight = 0
         self.jobs_done = 0
 
-    # ------------------------------------------------------------ clock --
-    def next_event_time(self) -> float | None:
-        cands = []
-        if self._events:
-            cands.append(self._events[0][0])
-        ts = self.sim.next_event_time()
-        if ts is not None:
-            cands.append(ts)
-        return min(cands) if cands else None
-
-    @property
-    def busy(self) -> bool:
-        return bool(self._events or self.sim.busy)
-
-    def advance_to(self, t: float) -> None:
-        """Process every event with timestamp <= ``t`` in causal order."""
-        while True:
-            t_engine = self._events[0][0] if self._events else float("inf")
-            t_storage = self.sim.next_event_time()
-            t_storage = t_storage if t_storage is not None else float("inf")
-            nxt = min(t_engine, t_storage)
-            if nxt == float("inf") or nxt > t + 1e-15:
-                break
-            if t_storage < t_engine:
-                for ticket in self.sim.advance_to(t_storage):
-                    st = self._waiting.pop(ticket.batch_id)
-                    self._on_fetched(st, ticket.done_t, ticket.n_requests,
-                                     ticket.nbytes)
-            else:
-                tt, _, kind, payload = heapq.heappop(self._events)
-                self.sim.advance_to(tt)
-                if kind == "submit":
-                    st, batch = payload
-                    self._submit_batch(st, batch, tt)
-                else:                                   # "fetched" (all-hit)
-                    st, t_hit, nreq, nbytes = payload
-                    self._on_fetched(st, t_hit, nreq, nbytes)
-
     # ------------------------------------------------------------- jobs --
-    def submit(self, t: float, plan, metrics: QueryMetrics,
-               tag: Any = None) -> _JobState:
-        """Start a plan generator at virtual time ``t``."""
+    def submit(self, plan, metrics: QueryMetrics, tag: Any = None,
+               at: float | None = None) -> _JobState:
+        """Start a plan generator (at virtual time ``at``, default now)."""
+        t = self.kernel.now if at is None else max(at, self.kernel.now)
         st = _JobState(tag=tag, gen=plan, metrics=metrics, start_t=t,
                        batches=[])
+        self._jobs.append(st)
         self.in_flight += 1
         self._advance_job(st, t, first=True)
         return st
 
-    def _push(self, t: float, kind: str, payload) -> None:
-        heapq.heappush(self._events, (t, self._seq, kind, payload))
-        self._seq += 1
+    def abort_all(self) -> list[Any]:
+        """Kill every in-flight job (the node died): cancel their pending
+        events, drop their storage transfers, return the aborted tags."""
+        tags = []
+        for st in self._jobs:
+            st.alive = False
+            if st.pending_ev is not None:
+                self.kernel.cancel(st.pending_ev)
+                st.pending_ev = None
+            tags.append(st.tag)
+        self._jobs.clear()
+        self.sim.abort_all()
+        self.in_flight = 0
+        return tags
 
+    # ---------------------------------------------------------- internal --
     def _compute_seconds(self, st: _JobState) -> float:
         """Price the compute the plan did since the last yield."""
         m = st.metrics
@@ -191,7 +182,7 @@ class SteppableEngine:
 
     def _advance_job(self, st: _JobState, t: float, first: bool = False,
                      payloads: dict | None = None) -> None:
-        """Resume the generator; charge compute; submit the next batch."""
+        """Resume the generator; charge compute; schedule the next batch."""
         try:
             if first:
                 batch = next(st.gen)
@@ -201,6 +192,7 @@ class SteppableEngine:
             dt = self._compute_seconds(st)
             self.in_flight -= 1
             self.jobs_done += 1
+            self._jobs.remove(st)
             record = JobRecord(tag=st.tag, start_t=st.start_t,
                                end_t=t + dt, result=stop.value,
                                metrics=st.metrics, batches=st.batches)
@@ -208,10 +200,12 @@ class SteppableEngine:
                 self.on_complete(record)
             return
         dt = self._compute_seconds(st)
-        self._push(t + dt, "submit", (st, batch))
+        st.pending_ev = self.kernel.at(t + dt, self._submit_batch, st, batch)
 
-    def _submit_batch(self, st: _JobState, batch, t: float) -> None:
+    def _submit_batch(self, st: _JobState, batch) -> None:
         """Cache-split the batch and route misses to storage."""
+        st.pending_ev = None
+        t = self.kernel.now
         hits = 0
         miss_bytes = 0
         miss_n = 0
@@ -229,14 +223,21 @@ class SteppableEngine:
         st.pending_hits = hits
         st.pending_total_bytes = batch.nbytes
         if miss_n == 0:
-            t_hit = t + self.cfg.hit_latency_s
-            self._push(t_hit, "fetched", (st, t_hit, 0, 0))
+            st.pending_ev = self.kernel.at(t + self.cfg.hit_latency_s,
+                                           self._on_fetched, st, 0, 0)
         else:
-            ticket = self.sim.submit_batch(t, miss_bytes, miss_n)
-            self._waiting[ticket.batch_id] = st
+            self.sim.submit_batch(
+                miss_bytes, miss_n,
+                on_done=lambda tk, st=st: self._storage_done(st, tk))
 
-    def _on_fetched(self, st: _JobState, t: float, n_storage_req: int,
+    def _storage_done(self, st: _JobState, ticket) -> None:
+        if st.alive:
+            self._on_fetched(st, ticket.n_requests, ticket.nbytes)
+
+    def _on_fetched(self, st: _JobState, n_storage_req: int,
                     storage_bytes: int) -> None:
+        st.pending_ev = None
+        t = self.kernel.now
         batch = st.pending_batch
         st.batches.append(BatchTrace(
             round_idx=st.round_idx, submit_t=st.pending_submit_t,
@@ -253,59 +254,83 @@ class SteppableEngine:
 
 
 class QueryEngine:
-    """Closed-loop driver: a fixed concurrency window over a query queue."""
+    """Driver process: an admission window over an arrival stream.
+
+    With the default :class:`ClosedLoop` arrivals this is the paper's
+    closed loop (all queries backlogged at t=0, ``concurrency`` in
+    service); with open-loop arrivals queries wait in the backlog when
+    the window is full, and per-query ``arrive_t``/sojourn make
+    queue-delay visible in the report.
+    """
 
     def __init__(self, index, config: EngineConfig):
         self.index = index
         self.cfg = config
-        self.cache = make_cache(config.cache_policy, config.cache_bytes,
-                                config.pinned_keys)
+        self.cache = config.make_cache()
         # compute-pricing constants from the index
         self.dim = index.meta.dim
         pq = getattr(index.meta, "pq", None)
         self.pq_m = pq.m if pq is not None else 0
 
     def run(self, queries: np.ndarray, params: SearchParams,
-            query_ids: Iterable[int] | None = None) -> WorkloadReport:
+            query_ids: Iterable[int] | None = None,
+            arrivals: ArrivalProcess | None = None) -> WorkloadReport:
         cfg = self.cfg
         qids = list(query_ids) if query_ids is not None else list(
             range(len(queries)))
-        queue = list(range(len(queries)))
-        queue.reverse()                      # pop() serves in order
-        records: list[QueryRecord] = []
-        core = SteppableEngine(cfg, self.index.store, self.cache,
-                               dim=self.dim, pq_m=self.pq_m)
+        arr = arrivals if arrivals is not None else ClosedLoop(
+            cfg.concurrency, n_total=len(queries))
+        window = arr.window if arr.window is not None else cfg.concurrency
 
-        def start_next_query(t: float) -> None:
-            if not queue:
-                return
-            qi = queue.pop()
+        kernel = Kernel(seed=cfg.seed)
+        records: list[QueryRecord] = []
+        backlog: deque = deque()               # (arrival_idx, workload_idx)
+        arrive_t: dict[int, float] = {}
+        state = dict(in_window=0, arrivals=0, last_arrival=0.0)
+        core = SteppableEngine(cfg, self.index.store, self.cache,
+                               kernel=kernel, dim=self.dim, pq_m=self.pq_m)
+
+        def start_query(ai: int, wi: int, t: float) -> None:
             metrics = QueryMetrics()
-            gen = self.index.search_plan(queries[qi], params, metrics)
-            core.submit(t, gen, metrics, tag=qids[qi])
+            gen = self.index.search_plan(queries[wi], params, metrics)
+            core.submit(gen, metrics, tag=(ai, qids[wi]), at=t)
+
+        def arrive(ai: int, wi: int) -> None:
+            state["arrivals"] += 1
+            state["last_arrival"] = kernel.now
+            arrive_t[ai] = kernel.now
+            if state["in_window"] < window:
+                state["in_window"] += 1
+                start_query(ai, wi, kernel.now)
+            else:
+                backlog.append((ai, wi))
 
         def on_complete(job: JobRecord) -> None:
+            ai, qid = job.tag
             res = job.result
             records.append(QueryRecord(
-                qid=job.tag, start_t=job.start_t, end_t=job.end_t,
+                qid=qid, start_t=job.start_t, end_t=job.end_t,
                 ids=res.ids, dists=res.dists, metrics=job.metrics,
-                batches=job.batches))
-            start_next_query(job.end_t)
+                batches=job.batches, arrive_t=arrive_t.pop(ai)))
+            if backlog:
+                nai, nwi = backlog.popleft()
+                start_query(nai, nwi, job.end_t)
+            else:
+                state["in_window"] -= 1
 
         core.on_complete = on_complete
-
-        # ---- bootstrap the concurrency window, then drain ---------------
-        for _ in range(min(cfg.concurrency, len(queue))):
-            start_next_query(0.0)
-        while core.busy:
-            core.advance_to(core.next_event_time())
+        arr.start(kernel, arrive, len(queries))
+        kernel.run()
 
         wall = max((r.end_t for r in records), default=0.0)
+        offered = offered_rate(state["arrivals"], state["last_arrival"],
+                               wall)
         return WorkloadReport(
             records=records, wall_time_s=wall,
             storage_bytes=core.sim.total_bytes,
             storage_requests=core.sim.total_requests,
-            concurrency=cfg.concurrency)
+            concurrency=cfg.concurrency, scenario=arr.kind,
+            n_arrivals=state["arrivals"], offered_qps=offered)
 
 
 def run_workload(index, queries: np.ndarray, params: SearchParams,
@@ -314,14 +339,16 @@ def run_workload(index, queries: np.ndarray, params: SearchParams,
                  compute: ComputeSpec = DEFAULT_COMPUTE,
                  cache_policy: str = "slru",
                  pinned_keys: frozenset | None = None,
-                 query_ids: Iterable[int] | None = None) -> WorkloadReport:
+                 query_ids: Iterable[int] | None = None,
+                 arrivals: ArrivalProcess | None = None) -> WorkloadReport:
     """The one-call evaluation hook: run ``queries`` through the engine.
 
     Accepts either a bare :class:`StorageSpec` plus knobs (the benchmark
     harness style) or a fully-formed :class:`EngineConfig` as the fourth
     argument (the ``repro.tuning`` style — every cache/seed/compute knob in
     one value).  ``query_ids`` maps repeated/reordered workload queries
-    back to ground-truth rows (see ``serving.workload``).
+    back to ground-truth rows (see ``serving.workload``); ``arrivals``
+    selects the arrival process (default: the paper's closed loop).
     """
     if isinstance(storage, EngineConfig):
         cfg = storage
@@ -331,4 +358,4 @@ def run_workload(index, queries: np.ndarray, params: SearchParams,
             cache_bytes=cache_bytes, cache_policy=cache_policy,
             pinned_keys=pinned_keys, compute=compute, seed=seed)
     eng = QueryEngine(index, cfg)
-    return eng.run(queries, params, query_ids=query_ids)
+    return eng.run(queries, params, query_ids=query_ids, arrivals=arrivals)

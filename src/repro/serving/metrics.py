@@ -28,16 +28,23 @@ class BatchTrace:
 @dataclasses.dataclass
 class QueryRecord:
     qid: int
-    start_t: float
+    start_t: float                 # service start (window admission)
     end_t: float
     ids: np.ndarray
     dists: np.ndarray
     metrics: QueryMetrics
     batches: list[BatchTrace]
+    arrive_t: float | None = None  # open-loop arrival (None => start_t)
 
     @property
     def latency(self) -> float:
         return self.end_t - self.start_t
+
+    @property
+    def sojourn(self) -> float:
+        """Arrival-to-completion time (includes backlog wait)."""
+        t0 = self.start_t if self.arrive_t is None else self.arrive_t
+        return self.end_t - t0
 
 
 @dataclasses.dataclass
@@ -49,6 +56,9 @@ class WorkloadReport:
     storage_bytes: int
     storage_requests: int
     concurrency: int
+    scenario: str = "closed"       # arrival process kind
+    n_arrivals: int = 0
+    offered_qps: float = 0.0       # arrival rate (== qps when closed-loop)
 
     # ------------------------------------------------ paper metrics ①–⑦ --
     @property
@@ -57,6 +67,12 @@ class WorkloadReport:
 
     def latency_percentile(self, p: float) -> float:          # ②
         return float(np.percentile([r.latency for r in self.records], p))
+
+    def sojourn_percentile(self, p: float) -> float:
+        """Arrival-to-completion percentile — includes backlog wait
+        (closed loop backlogs everything at t=0, so there it measures
+        drain position, not service time; use latency_percentile there)."""
+        return float(np.percentile([r.sojourn for r in self.records], p))
 
     @property
     def mean_latency(self) -> float:

@@ -1,0 +1,14 @@
+"""``repro.sim`` — the discrete-event simulation layer.
+
+* :mod:`repro.sim.kernel` — deterministic event kernel (EventQueue with
+  seq tie-breaking, Clock, timers/Ticker, named RNG streams).  Storage,
+  serving and fleet all run on one kernel per run.
+* :mod:`repro.sim.arrivals` — how queries arrive: closed-loop windows,
+  open-loop Poisson (optionally diurnal/burst-modulated) and trace
+  replay.
+* :mod:`repro.sim.faults` — shard failure/recovery schedules.
+* :mod:`repro.sim.autoscale` — SLO-driven replica autoscaling policy.
+"""
+from repro.sim.kernel import Clock, Event, EventQueue, Kernel, Ticker
+
+__all__ = ["Clock", "Event", "EventQueue", "Kernel", "Ticker"]

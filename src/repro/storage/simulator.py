@@ -13,18 +13,24 @@ Three resources gate every fetch batch:
    transfers progress at ``bandwidth / n_active`` — I/O congestion rises
    with recall × concurrency exactly as in Fig 9.
 
-The simulator is deterministic for a given seed and tracks virtual time;
-batches are the unit of transfer, requests the unit of rate limiting.
+The simulator is a component on the shared :class:`repro.sim.Kernel`: a
+batch's transfer-start and transfer-completion are kernel events, and the
+processor-sharing pipe keeps exactly one completion event scheduled —
+rescheduled whenever pipe membership changes.  Passing no kernel gives the
+sim a private one (standalone use in unit tests and notebooks).
+
+Batches are the unit of transfer, requests the unit of rate limiting;
+everything is deterministic for a given seed.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import math
 from typing import Callable
 
 import numpy as np
 
+from repro.sim.kernel import Event, Kernel
 from repro.storage.spec import StorageSpec
 
 
@@ -72,22 +78,36 @@ class _SharedPipe:
         self._advance(t)
         self.active.pop(tid, None)
 
+    def remove(self, t: float, tid: int) -> None:
+        """Drop a transfer without completing it (fault abort)."""
+        self._advance(t)
+        self.active.pop(tid, None)
+
 
 class StorageSim:
-    """Event-driven storage backend.
+    """Event-driven storage backend on a (possibly shared) kernel.
 
-    Usage (driven by the serving engine): ``submit_batch`` returns a
-    ticket; ``run_until_next_completion`` pops the next finished transfer.
+    ``submit_batch(nbytes, n_requests, on_done)`` admits a batch at the
+    kernel's current virtual time; ``on_done(ticket)`` fires at the
+    batch's completion event.  Without a callback, completed tickets
+    accumulate and :meth:`drain` (standalone kernels only) runs the clock
+    forward and returns them.
     """
 
-    def __init__(self, spec: StorageSpec, seed: int = 0):
+    def __init__(self, spec: StorageSpec, kernel: Kernel | None = None,
+                 *, seed: int = 0):
         self.spec = spec
+        self.kernel = kernel if kernel is not None else Kernel(seed=seed)
         self.pipe = _SharedPipe(spec.bandwidth_Bps)
-        self.rng = np.random.default_rng(seed)
+        self.rng = self.kernel.rng(self.kernel.unique_name("storage"),
+                                   seed=seed)
         self._bucket_vt = 0.0                  # IOPS token-bucket clock
         self._next_id = 0
-        self._pending: list[tuple[float, int]] = []   # (start_t, batch_id)
         self._tickets: dict[int, BatchTicket] = {}
+        self._on_done: dict[int, Callable[[BatchTicket], None] | None] = {}
+        self._start_evs: dict[int, Event] = {}
+        self._completion_ev: Event | None = None
+        self.completed: list[BatchTicket] = []   # callback-less tickets
         # aggregates
         self.total_bytes = 0
         self.total_requests = 0
@@ -98,9 +118,11 @@ class StorageSim:
         mu = math.log(self.spec.ttfb_p50_s)
         return float(np.exp(self.rng.normal(mu, s)))
 
-    def submit_batch(self, t: float, nbytes: int, n_requests: int
+    def submit_batch(self, nbytes: int, n_requests: int,
+                     on_done: Callable[[BatchTicket], None] | None = None
                      ) -> BatchTicket:
-        """Admit a dependency-free batch of GETs at virtual time t."""
+        """Admit a dependency-free batch of GETs at the current time."""
+        t = self.kernel.now
         tid = self._next_id
         self._next_id += 1
         # 1) GET-rate admission: n tokens at get_qps_limit
@@ -112,46 +134,70 @@ class StorageSim:
         ticket = BatchTicket(batch_id=tid, submit_t=t, start_t=start_t,
                              nbytes=nbytes, n_requests=n_requests)
         self._tickets[tid] = ticket
-        heapq.heappush(self._pending, (start_t, tid))
+        self._on_done[tid] = on_done
+        self._start_evs[tid] = self.kernel.at(start_t, self._start, tid)
         self.total_bytes += nbytes
         self.total_requests += n_requests
         return ticket
 
-    # ------------------------------------------------------------- step --
-    def next_event_time(self) -> float | None:
-        """Earliest among pending transfer-starts and pipe completions."""
-        cands = []
-        if self._pending:
-            cands.append(self._pending[0][0])
+    # ------------------------------------------------------------ events --
+    def _start(self, tid: int) -> None:
+        """Transfer-start event: the batch joins the shared pipe."""
+        self._start_evs.pop(tid, None)
+        self.pipe.add(self.kernel.now, tid, self._tickets[tid].nbytes)
+        self._reschedule_completion()
+
+    def _reschedule_completion(self) -> None:
+        """Keep exactly one completion event: pipe membership changed, so
+        the earliest finisher (and its finish time) may have too."""
+        if self._completion_ev is not None:
+            self.kernel.cancel(self._completion_ev)
+            self._completion_ev = None
         nc = self.pipe.next_completion()
         if nc is not None:
-            cands.append(nc[0])
-        return min(cands) if cands else None
+            self._completion_ev = self.kernel.at(
+                max(nc[0], self.kernel.now), self._complete, nc[1])
 
-    def advance_to(self, t: float) -> list[BatchTicket]:
-        """Advance the clock to ``t``; returns batches completed by then."""
-        done: list[BatchTicket] = []
-        while True:
-            nxt = None
-            if self._pending:
-                nxt = ("start", self._pending[0][0])
-            nc = self.pipe.next_completion()
-            if nc is not None and (nxt is None or nc[0] < nxt[1]):
-                nxt = ("done", nc[0], nc[1])
-            if nxt is None or nxt[1] > t + 1e-15:
-                break
-            if nxt[0] == "start":
-                st, tid = heapq.heappop(self._pending)
-                self.pipe.add(st, tid, self._tickets[tid].nbytes)
-            else:
-                _, ct, tid = nxt
-                self.pipe.complete(ct, tid)
-                tk = self._tickets.pop(tid)
-                tk.done_t = ct
-                done.append(tk)
-        self.pipe._advance(t)
-        return done
+    def _complete(self, tid: int) -> None:
+        self._completion_ev = None
+        t = self.kernel.now
+        self.pipe.complete(t, tid)
+        tk = self._tickets.pop(tid)
+        tk.done_t = t
+        cb = self._on_done.pop(tid)
+        self._reschedule_completion()
+        if cb is not None:
+            cb(tk)
+        else:
+            self.completed.append(tk)
 
+    # ------------------------------------------------------------ faults --
+    def abort_all(self) -> None:
+        """Drop every queued and in-flight transfer (the node died).
+
+        Waiters are NOT notified — the failing server reports aborted
+        jobs; storage just forgets the work.
+        """
+        for ev in self._start_evs.values():
+            self.kernel.cancel(ev)
+        self._start_evs.clear()
+        for tid in list(self.pipe.active):
+            self.pipe.remove(self.kernel.now, tid)
+        if self._completion_ev is not None:
+            self.kernel.cancel(self._completion_ev)
+            self._completion_ev = None
+        self._tickets.clear()
+        self._on_done.clear()
+
+    # ----------------------------------------------------------- helpers --
     @property
     def busy(self) -> bool:
-        return bool(self._pending or self.pipe.active)
+        return bool(self._start_evs or self.pipe.active)
+
+    def drain(self) -> list[BatchTicket]:
+        """Standalone helper: run the (private) kernel dry and return the
+        tickets completed without a callback since the last drain."""
+        self.kernel.run()
+        out = self.completed
+        self.completed = []
+        return out

@@ -12,8 +12,10 @@ CLI: ``python -m repro.tuning --recall 0.95 --concurrency 64 --dim 960
 from repro.tuning.evaluate import (EvalBudget, EvalOutcome, default_budget,
                                    successive_halving)
 from repro.tuning.fleet import (FleetOutcome, FleetPoint,
-                                FleetRecommendation, evaluate_fleet_point,
-                                tune_fleet)
+                                FleetRecommendation, LoadOutcome,
+                                LoadRecommendation, evaluate_fleet_load,
+                                evaluate_fleet_point, tune_fleet,
+                                tune_fleet_for_load)
 from repro.tuning.pareto import hypervolume, pareto_frontier
 from repro.tuning.recommend import Recommendation, autotune
 from repro.tuning.screen import (Prediction, ScreenResult,
@@ -29,4 +31,6 @@ __all__ = [
     "pareto_frontier", "hypervolume",
     "FleetPoint", "FleetOutcome", "FleetRecommendation",
     "evaluate_fleet_point", "tune_fleet",
+    "LoadOutcome", "LoadRecommendation", "evaluate_fleet_load",
+    "tune_fleet_for_load",
 ]

@@ -1,16 +1,31 @@
 """CLI entry: ``python -m repro.tuning`` → JSON recommendation on stdout.
 
-Example (the paper's agentic-RAG-style workload on cloud object storage):
+Two modes:
 
-    python -m repro.tuning --recall 0.95 --concurrency 64 --dim 960 \
-        --storage tos --cache-gb 4
+* **index tuning** (default): pick index class, build/search params and
+  cache policy for a workload + storage environment.
+
+      python -m repro.tuning --recall 0.95 --concurrency 64 --dim 960 \\
+          --storage tos --cache-gb 4
+
+* **fleet sizing** (``--fleet``): pick shards × replication.  With the
+  default closed-loop scenario the target is a speedup over one shard;
+  with an open-loop scenario (``--scenario poisson/burst/trace``) the
+  fleet is sized for an **offered load + SLO** — the cheapest fleet whose
+  goodput under ``--slo-ms`` meets ``--goodput``.
+
+      python -m repro.tuning --fleet --scenario poisson --rate 400 \\
+          --duration 1 --slo-ms 50
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
+from repro.cli import (add_common_args, add_scenario_args, emit_json,
+                       scenario_from_args)
 from repro.tuning.evaluate import EvalBudget
+from repro.tuning.fleet import tune_fleet, tune_fleet_for_load
 from repro.tuning.recommend import autotune
 from repro.tuning.space import (STORAGE_ALIASES, EnvSpec, WorkloadSpec,
                                 resolve_storage)
@@ -20,7 +35,9 @@ def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="python -m repro.tuning",
         description="Auto-tune index class, build/search params and cache "
-                    "policy for a workload + storage environment.")
+                    "policy for a workload + storage environment; with "
+                    "--fleet, size a serving fleet (optionally for an "
+                    "open-loop offered load + SLO).")
     p.add_argument("--n", type=int, default=1_000_000,
                    help="dataset cardinality (default 1M)")
     p.add_argument("--dim", type=int, default=960)
@@ -30,7 +47,8 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--concurrency", type=int, default=1)
     p.add_argument("--dist", choices=["sequential", "zipf"],
                    default="sequential", help="query distribution")
-    p.add_argument("--zipf-a", type=float, default=1.2)
+    p.add_argument("--zipf-a", type=float, default=1.2,
+                   help="zipf exponent for --dist zipf")
     p.add_argument("--k", type=int, default=10)
     p.add_argument("--storage", default="tos",
                    help="storage preset: %s or a full preset name"
@@ -43,9 +61,19 @@ def build_parser() -> argparse.ArgumentParser:
                         "rungs; full = default rungs")
     p.add_argument("--kinds", default="cluster,graph",
                    help="comma-separated index kinds to consider")
-    p.add_argument("--seed", type=int, default=0)
-    p.add_argument("--compact", action="store_true",
-                   help="single-line JSON output")
+    # fleet sizing mode
+    p.add_argument("--fleet", action="store_true",
+                   help="size a fleet (shards x replication) instead of "
+                        "tuning index knobs")
+    p.add_argument("--target-speedup", type=float, default=2.0,
+                   help="closed-loop fleet target: speedup over 1 shard")
+    p.add_argument("--goodput", type=float, default=0.99,
+                   help="open-loop fleet target: min fraction of arrivals "
+                        "served within the SLO")
+    p.add_argument("--hedge", action="store_true",
+                   help="consider hedged fleets (R >= 2 points)")
+    add_scenario_args(p, faults=False)
+    add_common_args(p)
     return p
 
 
@@ -61,6 +89,22 @@ def main(argv: list[str] | None = None) -> int:
         build_parser().error(str(e.args[0]))
     env = EnvSpec(storage=storage,
                   cache_bytes=int(args.cache_gb * 2**30))
+
+    if args.fleet:
+        try:
+            scenario = scenario_from_args(args)
+        except ValueError as e:
+            build_parser().error(str(e))
+        if scenario.kind == "closed":
+            rec = tune_fleet(w, env, target_speedup=args.target_speedup,
+                             hedge=args.hedge, seed=args.seed)
+        else:
+            rec = tune_fleet_for_load(w, env, scenario,
+                                      goodput_target=args.goodput,
+                                      hedge=args.hedge, seed=args.seed)
+        emit_json(rec.to_dict(), args)
+        return 0
+
     if args.budget == "screen":
         budget: EvalBudget | str = "screen"
     elif args.budget == "quick":
@@ -71,7 +115,7 @@ def main(argv: list[str] | None = None) -> int:
         budget = None                      # default_budget inside autotune
     rec = autotune(w, env, budget=budget, kinds=tuple(
         k.strip() for k in args.kinds.split(",") if k.strip()))
-    print(rec.to_json(indent=None if args.compact else 2))
+    emit_json(rec.to_dict(), args)
     return 0
 
 

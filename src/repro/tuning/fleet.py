@@ -27,6 +27,7 @@ from repro.core.types import ClusterIndexParams, SearchParams
 from repro.data.synth import DatasetSpec, make_dataset
 from repro.fleet.partition import ClusterPartition
 from repro.fleet.router import FleetConfig, FleetRouter
+from repro.sim.arrivals import Scenario
 from repro.tuning.space import EnvSpec, WorkloadSpec
 
 SHARD_GRID = (1, 2, 4, 8)
@@ -200,3 +201,129 @@ def tune_fleet(w: WorkloadSpec, env: EnvSpec, target_speedup: float = 2.0,
         workload=w, env_storage=env.storage.name, point=pick.point,
         speedup=pick.speedup, feasible=feasible,
         target_speedup=target_speedup, outcomes=outcomes)
+
+
+# ------------------------------------------------- scenario-driven sizing --
+
+@dataclasses.dataclass
+class LoadOutcome:
+    """One fleet point measured under an open-loop scenario."""
+
+    point: FleetPoint
+    offered_qps: float
+    achieved_qps: float
+    goodput_frac: float            # arrivals served within the SLO
+    p99_sojourn_s: float           # arrival-to-completion p99
+    recall: float
+    shed_rate: float
+    eval_n: int
+
+    @property
+    def cost_units(self) -> int:
+        return self.point.n_shards * self.point.replication
+
+    def to_dict(self) -> dict:
+        return dict(config=self.point.to_dict(),
+                    offered_qps=round(self.offered_qps, 2),
+                    achieved_qps=round(self.achieved_qps, 2),
+                    goodput_frac=round(self.goodput_frac, 4),
+                    p99_sojourn_s=round(self.p99_sojourn_s, 6),
+                    recall=round(self.recall, 4),
+                    shed_rate=round(self.shed_rate, 4),
+                    cost_units=self.cost_units, eval_n=self.eval_n)
+
+
+@dataclasses.dataclass
+class LoadRecommendation:
+    """The cheapest fleet that serves an offered load within its SLO."""
+
+    workload: WorkloadSpec
+    env_storage: str
+    scenario: Scenario
+    point: FleetPoint
+    feasible: bool
+    goodput_target: float
+    outcomes: list[LoadOutcome]
+
+    def to_dict(self) -> dict:
+        return dict(
+            workload=dataclasses.asdict(self.workload),
+            environment=dict(storage=self.env_storage),
+            scenario=self.scenario.to_dict(),
+            recommendation=self.point.to_dict(),
+            meets_slo=self.feasible,
+            goodput_target=self.goodput_target,
+            sweep=[o.to_dict() for o in self.outcomes])
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+
+def evaluate_fleet_load(w: WorkloadSpec, env: EnvSpec, point: FleetPoint,
+                        scenario: Scenario, index, queries, gt, *,
+                        nprobe: int = 32, seed: int = 0) -> LoadOutcome:
+    """Run one fleet point under an open-loop scenario and measure
+    whether it keeps up: achieved vs offered QPS, goodput under the SLO
+    and p99 sojourn (arrival -> completion, backlog wait included)."""
+    params = SearchParams(k=w.k, nprobe=min(nprobe, index.meta.n_lists))
+    per_shard_cache = env.cache_bytes // point.n_shards
+    cfg = FleetConfig(
+        n_shards=point.n_shards, replication=point.replication,
+        storage=env.storage, concurrency=max(w.concurrency, 32),
+        shard_concurrency=8, queue_depth=64,
+        cache_bytes=per_shard_cache,
+        cache_policy="slru" if per_shard_cache > 0 else "none",
+        hedge=point.hedge, seed=seed)
+    partition = ClusterPartition.build(index.meta.list_nbytes,
+                                       point.n_shards, point.replication)
+    arrivals = scenario.make_arrivals(len(queries), cfg.concurrency,
+                                      seed=seed)
+    rep = FleetRouter(index, cfg, partition=partition).run(
+        queries, params, arrivals=arrivals, slo_s=scenario.slo_s)
+    return LoadOutcome(
+        point=point, offered_qps=rep.offered_qps, achieved_qps=rep.qps,
+        goodput_frac=rep.goodput_frac,
+        p99_sojourn_s=rep.sojourn_percentile(99),
+        recall=rep.recall_against(gt), shed_rate=rep.shed_rate,
+        eval_n=index.meta.n_data)
+
+
+def tune_fleet_for_load(w: WorkloadSpec, env: EnvSpec, scenario: Scenario,
+                        goodput_target: float = 0.99,
+                        shard_grid: tuple[int, ...] = SHARD_GRID,
+                        replica_grid: tuple[int, ...] = FLEET_REPLICA_GRID,
+                        hedge: bool = False, eval_n: int = 1200,
+                        nq: int = 48, nprobe: int = 32,
+                        seed: int = 0) -> LoadRecommendation:
+    """Size the fleet for an **offered load + SLO** instead of a speedup
+    target: sweep shards × replication under the open-loop scenario and
+    pick the cheapest point whose goodput (fraction of arrivals served
+    within ``scenario.slo_s``) meets ``goodput_target`` at the workload's
+    recall target.  Ties: lower p99 sojourn."""
+    if scenario.kind == "closed":
+        raise ValueError(
+            "tune_fleet_for_load needs an open-loop scenario (poisson/"
+            "burst/trace); use tune_fleet for closed-loop speedup targets")
+    index, queries, gt = _eval_index(w, eval_n, nq, seed)
+    outcomes = []
+    for s in shard_grid:
+        for r in replica_grid:
+            if r > s:
+                continue
+            point = FleetPoint(s, r, hedge=hedge and r > 1)
+            outcomes.append(evaluate_fleet_load(
+                w, env, point, scenario, index, queries, gt,
+                nprobe=nprobe, seed=seed))
+    feas = [o for o in outcomes
+            if o.goodput_frac >= goodput_target
+            and o.recall >= w.target_recall - 0.005]
+    if feas:
+        pick = min(feas, key=lambda o: (o.cost_units, o.p99_sojourn_s))
+        feasible = True
+    else:
+        pick = max(outcomes, key=lambda o: (o.goodput_frac, -o.cost_units))
+        feasible = False
+    return LoadRecommendation(
+        workload=w, env_storage=env.storage.name, scenario=scenario,
+        point=pick.point, feasible=feasible,
+        goodput_target=goodput_target, outcomes=outcomes)

@@ -1,0 +1,36 @@
+"""Shared test configuration.
+
+Per-test timeout: an event-kernel scheduling bug would present as a test
+that never finishes; rather than stalling CI for the job-level timeout,
+every test gets a SIGALRM watchdog (default 120s, override with
+REPRO_TEST_TIMEOUT_S; 0 disables).  POSIX main-thread only — elsewhere
+the fixture is a no-op.
+"""
+import os
+import signal
+import threading
+
+import pytest
+
+_TIMEOUT_S = int(os.environ.get("REPRO_TEST_TIMEOUT_S", "120"))
+
+
+@pytest.fixture(autouse=True)
+def _per_test_timeout(request):
+    if (_TIMEOUT_S <= 0 or not hasattr(signal, "SIGALRM")
+            or threading.current_thread() is not threading.main_thread()):
+        yield
+        return
+
+    def _alarm(signum, frame):
+        raise TimeoutError(
+            f"{request.node.nodeid} exceeded {_TIMEOUT_S}s "
+            f"(REPRO_TEST_TIMEOUT_S) — suspected event-loop hang")
+
+    old_handler = signal.signal(signal.SIGALRM, _alarm)
+    signal.alarm(_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old_handler)

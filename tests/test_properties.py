@@ -60,11 +60,8 @@ def test_storage_sim_conservation_and_ordering(sizes, seed):
     total wall time is at least total_bytes / bandwidth."""
     sim = StorageSim(TOS, seed=seed)
     for i, s in enumerate(sizes):
-        sim.submit_batch(0.0, s, 1)
-    done = []
-    while sim.busy:
-        t = sim.next_event_time()
-        done.extend(sim.advance_to(t))
+        sim.submit_batch(s, 1)
+    done = sim.drain()
     assert len(done) == len(sizes)
     assert sim.total_bytes == sum(sizes)
     end = max(d.done_t for d in done)

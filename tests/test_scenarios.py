@@ -1,0 +1,318 @@
+"""Scenario serving on the event kernel: equivalence with the
+pre-refactor reports, open-loop arrivals, fault injection, autoscaling."""
+import dataclasses
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.cluster_index import ClusterIndex
+from repro.core.flat import exact_topk
+from repro.core.types import ClusterIndexParams, SearchParams
+from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
+from repro.fleet import FleetConfig, run_fleet
+from repro.serving.engine import run_workload
+from repro.sim.arrivals import Poisson, Scenario, zipf_trace
+from repro.sim.autoscale import AutoscaleConfig
+from repro.sim.faults import FaultSchedule, ShardFault
+from repro.storage.spec import TOS
+from repro.tuning import (EnvSpec, WorkloadSpec, resolve_storage,
+                          tune_fleet_for_load)
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
+                           "golden_fleet_prerefactor.json")
+
+
+def _quiet(spec):
+    return dataclasses.replace(spec, ttfb_sigma=1e-9)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = scaled(DEEP_ANALOG, 1200, 32)
+    data, queries = make_dataset(spec)
+    gt, _ = exact_topk(data, queries, 10)
+    ci = ClusterIndex.build(data, ClusterIndexParams(kmeans_iters=4, seed=0))
+    return data, queries, gt, ci
+
+
+# ------------------------------------------------------ golden equivalence --
+
+def _ids_sha256(report) -> str:
+    h = hashlib.sha256()
+    for r in sorted(report.records, key=lambda r: r.qid):
+        h.update(np.asarray(r.qid).tobytes())
+        h.update(np.asarray(r.ids, dtype=np.int64).tobytes())
+    return h.hexdigest()
+
+
+def test_kernel_fleet_reproduces_prerefactor_reports(setup):
+    """Acceptance: under closed-loop arrivals the kernel-based fleet
+    reproduces the pre-refactor FleetReport — virtual time within 1e-9
+    relative (exact in practice) and identical per-query results — for
+    both the 1-shard config and a 4-shard replicated+hedged config.
+
+    The golden file was captured from the pre-kernel implementation
+    (four hand-rolled clock loops) immediately before the refactor.
+    """
+    _, queries, _, ci = setup
+    golden = json.load(open(GOLDEN_PATH))
+    p = SearchParams(k=golden["params"]["k"],
+                     nprobe=golden["params"]["nprobe"])
+    configs = dict(
+        one_shard=FleetConfig(n_shards=1, replication=1, concurrency=8,
+                              shard_concurrency=8, queue_depth=64, seed=0),
+        four_shard=FleetConfig(n_shards=4, replication=2, concurrency=16,
+                               shard_concurrency=4, queue_depth=16,
+                               hedge=True, hedge_percentile=75.0, seed=5))
+    for name, cfg in configs.items():
+        rep = run_fleet(ci, queries, p, cfg)
+        g = golden[name]
+        assert rep.wall_time_s == pytest.approx(g["wall_time_s"],
+                                                rel=1e-9, abs=1e-12)
+        assert rep.qps == pytest.approx(g["qps"], rel=1e-9)
+        assert _ids_sha256(rep) == g["ids_sha256"]   # recall identical
+
+
+def test_one_shard_closed_loop_matches_query_engine(setup):
+    """The fleet and the single engine share one kernel architecture:
+    a 1-shard closed-loop fleet equals the QueryEngine report."""
+    _, queries, _, ci = setup
+    p = SearchParams(k=10, nprobe=16)
+    mono = run_workload(ci, queries, p, _quiet(TOS), concurrency=8,
+                        cache_policy="none")
+    fleet = run_fleet(ci, queries, p, FleetConfig(
+        n_shards=1, replication=1, storage=_quiet(TOS), concurrency=8,
+        shard_concurrency=8, queue_depth=64))
+    by_qid = {r.qid: r for r in mono.records}
+    for rec in fleet.records:
+        np.testing.assert_array_equal(rec.ids, by_qid[rec.qid].ids)
+    assert fleet.qps == pytest.approx(mono.qps, rel=0.05)
+
+
+# ------------------------------------------------------------- open loop --
+
+def test_poisson_at_saturation_matches_closed_loop_throughput(setup):
+    """Acceptance (satellite): open-loop Poisson far above capacity
+    saturates the same window, so achieved QPS reproduces the
+    closed-loop WorkloadReport within tolerance — and the backlog shows
+    up as sojourn >> service latency."""
+    _, queries, _, ci = setup
+    p = SearchParams(k=10, nprobe=16)
+    closed = run_workload(ci, queries, p, _quiet(TOS), concurrency=8,
+                          cache_policy="none", seed=0)
+    open_rep = run_workload(
+        ci, queries, p, _quiet(TOS), concurrency=8, cache_policy="none",
+        seed=0,
+        arrivals=Poisson(rate_qps=20 * closed.qps,
+                         n_total=2 * len(queries)))
+    assert open_rep.scenario == "poisson"
+    assert open_rep.n_arrivals == 2 * len(queries)
+    assert open_rep.qps == pytest.approx(closed.qps, rel=0.15)
+    assert open_rep.offered_qps > 5 * open_rep.qps       # truly saturated
+    # queueing delay dominates: p50 sojourn far above p50 service latency
+    assert open_rep.sojourn_percentile(50) > \
+        3 * open_rep.latency_percentile(50)
+
+
+def test_underloaded_open_loop_tracks_offered_rate(setup):
+    """Below capacity the fleet serves what arrives: achieved ~ offered,
+    goodput ~ 1."""
+    _, queries, _, ci = setup
+    p = SearchParams(k=10, nprobe=16)
+    rep = run_fleet(ci, queries, p, FleetConfig(
+        n_shards=2, replication=2, storage=TOS, concurrency=16, seed=0),
+        arrivals=Poisson(rate_qps=100.0, duration_s=1.0), slo_s=0.25)
+    assert rep.scenario == "poisson"
+    assert rep.n_arrivals == len(rep.records)        # everything completed
+    assert rep.qps == pytest.approx(rep.offered_qps, rel=0.2)
+    assert rep.goodput_frac > 0.95
+    assert rep.series is not None
+    assert sum(rep.series.arrived) == rep.n_arrivals
+    assert sum(rep.series.completed) == len(rep.records)
+
+
+def test_open_loop_fleet_deterministic(setup):
+    """Identical seeds give bit-identical open-loop JSON, burst incl."""
+    _, queries, _, ci = setup
+    p = SearchParams(k=10, nprobe=16)
+    scenario = Scenario(kind="burst", rate_qps=150.0, duration_s=0.8,
+                        burst_factor=4.0, slo_s=0.05)
+    cfg = FleetConfig(n_shards=2, replication=2, storage=TOS,
+                      concurrency=16, seed=9)
+
+    def run_once():
+        arr = scenario.make_arrivals(len(queries), cfg.concurrency, seed=9)
+        return run_fleet(ci, queries, p, cfg, arrivals=arr,
+                         slo_s=scenario.slo_s).to_json()
+
+    assert run_once() == run_once()
+
+
+def test_trace_replay_serves_zipf_workload(setup):
+    """Trace arrivals cycle the query set with zipf popularity; every
+    arrival is served and hot repeats make a shard cache pay."""
+    _, queries, gt, ci = setup
+    p = SearchParams(k=10, nprobe=16)
+    trace = zipf_trace(len(queries), rate_qps=300.0, n_total=150, seed=3)
+    rep = run_fleet(ci, queries, p, FleetConfig(
+        n_shards=2, replication=1, storage=_quiet(TOS), concurrency=16,
+        cache_bytes=1 << 30, cache_policy="slru", seed=3),
+        arrivals=trace)
+    assert rep.scenario == "trace"
+    assert len(rep.records) == 150
+    assert rep.hit_rate > 0.2
+    assert rep.recall_against(gt) == 1.0
+
+
+# ----------------------------------------------------------------- faults --
+
+def test_shard_failure_recovers_on_replicas_with_recall_unchanged(setup):
+    """Acceptance: killing a shard mid-run degrades p99 sojourn but not
+    recall when replication >= 2 — its jobs re-route to surviving
+    replica owners and every arrival still completes."""
+    _, queries, gt, ci = setup
+    p = SearchParams(k=10, nprobe=64)
+    base = dict(n_shards=4, replication=2, storage=TOS, concurrency=24,
+                shard_concurrency=4, queue_depth=32, seed=2)
+    # calibrate offered load to ~85% of the 4-shard closed-loop capacity
+    cal = run_fleet(ci, queries, p, FleetConfig(**base))
+    rate = 0.85 * cal.qps
+    arr = lambda: Poisson(rate_qps=rate, n_total=6 * len(queries))
+    slo = 0.1
+
+    clean = run_fleet(ci, queries, p, FleetConfig(**base),
+                      arrivals=arr(), slo_s=slo)
+    horizon = clean.wall_time_s
+    faults = FaultSchedule((ShardFault(
+        shard=1, t_fail=0.2 * horizon, t_recover=0.7 * horizon),))
+    faulty = run_fleet(ci, queries, p, FleetConfig(**base),
+                       arrivals=arr(), faults=faults, slo_s=slo)
+
+    assert faulty.fault_log is not None
+    assert [e["event"] for e in faulty.fault_log] == ["fail", "recover"]
+    # no query lost, results exact, recall identical to the clean run
+    assert len(faulty.records) == faulty.n_arrivals == clean.n_arrivals
+    assert all((r.ids >= 0).all() for r in faulty.records)
+    assert faulty.recall_against(gt) == clean.recall_against(gt)
+    # a quarter of capacity vanished under ~85% load: the tail degrades
+    assert faulty.sojourn_percentile(99) > clean.sojourn_percentile(99)
+
+
+def test_fault_during_hedged_run_keeps_results_complete(setup):
+    """A fault that kills one sub-job of a multi-shard hedge attempt must
+    not let the surviving hedge tags complete the slot with a partial
+    key set: the wounded attempt is dropped wholesale and results stay
+    exact."""
+    _, queries, gt, ci = setup
+    p = SearchParams(k=10, nprobe=64)
+    heavy = dataclasses.replace(TOS, ttfb_sigma=1.1)   # hedges fire a lot
+    base = dict(n_shards=4, replication=2, storage=heavy, concurrency=8,
+                shard_concurrency=8, queue_depth=64, seed=3,
+                hedge=True, hedge_percentile=70.0, hedge_min_samples=16)
+    arr = lambda: Poisson(rate_qps=120.0, n_total=4 * len(queries))
+    clean = run_fleet(ci, queries, p, FleetConfig(**base), arrivals=arr())
+    assert clean.hedges_launched > 0
+    faults = FaultSchedule(tuple(
+        ShardFault(shard=s, t_fail=0.15 * clean.wall_time_s * (s + 1),
+                   t_recover=0.15 * clean.wall_time_s * (s + 1) + 0.2)
+        for s in range(4)))                            # rolling failures
+    faulty = run_fleet(ci, queries, p, FleetConfig(**base),
+                       arrivals=arr(), faults=faults)
+    assert faulty.hedges_launched > 0
+    assert len(faulty.records) == faulty.n_arrivals
+    assert all((r.ids >= 0).all() for r in faulty.records)
+    assert faulty.recall_against(gt) == clean.recall_against(gt)
+
+
+def test_failure_without_replication_backs_off_until_recovery(setup):
+    """R=1: the dead shard's keys are unroutable until it recovers, but
+    recovery drains the backlog and nothing is dropped."""
+    _, queries, gt, ci = setup
+    p = SearchParams(k=10, nprobe=32)
+    faults = FaultSchedule((ShardFault(shard=0, t_fail=0.05,
+                                       t_recover=0.35),))
+    rep = run_fleet(ci, queries, p, FleetConfig(
+        n_shards=2, replication=1, storage=TOS, concurrency=8, seed=4),
+        arrivals=Poisson(rate_qps=150.0, duration_s=0.5), faults=faults)
+    assert len(rep.records) == rep.n_arrivals
+    assert rep.recall_against(gt) == 1.0
+    assert sum(r.shed_retries for r in rep.records) > 0   # backed off
+
+
+def test_fault_spec_parsing_and_validation():
+    f = ShardFault.parse("2:0.5:1.5")
+    assert (f.shard, f.t_fail, f.t_recover) == (2, 0.5, 1.5)
+    assert ShardFault.parse("0:1.0").t_recover is None
+    with pytest.raises(ValueError):
+        ShardFault.parse("nope")
+    with pytest.raises(ValueError):
+        ShardFault(shard=0, t_fail=1.0, t_recover=0.5)
+    sched = FaultSchedule.parse(["0:0.1:0.2", "1:0.3"])
+    assert len(sched.faults) == 2
+
+
+# -------------------------------------------------------------- autoscale --
+
+def test_autoscaler_defends_slo_and_reports_cost(setup):
+    """Under a saturating open-loop load the SLO controller adds shard
+    instances (shards·seconds cost rises vs the fixed fleet) and lifts
+    goodput."""
+    _, queries, _, ci = setup
+    p = SearchParams(k=10, nprobe=64)
+    base = dict(n_shards=2, replication=1, storage=TOS, concurrency=32,
+                shard_concurrency=4, queue_depth=32, seed=6)
+    cal = run_fleet(ci, queries, p, FleetConfig(**base))
+    rate = 1.6 * cal.qps                       # well beyond fixed capacity
+    slo = 0.08
+    arr = lambda: Poisson(rate_qps=rate, n_total=5 * len(queries))
+
+    fixed = run_fleet(ci, queries, p, FleetConfig(**base),
+                      arrivals=arr(), slo_s=slo)
+    scaled_rep = run_fleet(
+        ci, queries, p, FleetConfig(**base), arrivals=arr(), slo_s=slo,
+        autoscale=AutoscaleConfig(slo_p99_s=slo, check_interval_s=0.05,
+                                  cooldown_s=0.1, max_instances=4))
+
+    assert scaled_rep.scale_events is not None
+    assert any(e["action"] == "up" for e in scaled_rep.scale_events)
+    assert max(scaled_rep.series.instances) > 2
+    assert scaled_rep.shards_seconds > 0
+    # capacity added: faster drain and better goodput than the fixed fleet
+    assert scaled_rep.goodput_frac > fixed.goodput_frac
+    assert scaled_rep.wall_time_s < fixed.wall_time_s
+    # cost is honest: more than the always-2-instances baseline would
+    # bill over the same (shorter) wall, less than max_instances forever
+    assert scaled_rep.shards_seconds > 2 * scaled_rep.wall_time_s
+    assert scaled_rep.shards_seconds < 8 * scaled_rep.wall_time_s
+
+
+def test_autoscale_config_validation():
+    with pytest.raises(ValueError):
+        AutoscaleConfig(slo_p99_s=0.0)
+    with pytest.raises(ValueError):
+        AutoscaleConfig(slo_p99_s=0.1, down_error=0.5, up_error=0.0)
+    with pytest.raises(ValueError):
+        AutoscaleConfig(slo_p99_s=0.1, min_instances=3, max_instances=2)
+
+
+# ------------------------------------------------------- tuning scenario --
+
+def test_tune_fleet_for_load_picks_bigger_fleet_for_harder_slo():
+    w = WorkloadSpec(n=1_000_000, dim=96, target_recall=0.9,
+                     concurrency=16)
+    env = EnvSpec(storage=resolve_storage("tos"))
+    mk = lambda rate: Scenario(kind="poisson", rate_qps=rate,
+                               duration_s=0.5, slo_s=0.06)
+    easy = tune_fleet_for_load(w, env, mk(150.0), shard_grid=(1, 2, 4),
+                               replica_grid=(1, 2), eval_n=800, nq=32)
+    hard = tune_fleet_for_load(w, env, mk(900.0), shard_grid=(1, 2, 4),
+                               replica_grid=(1, 2), eval_n=800, nq=32)
+    assert easy.feasible
+    e = easy.point.n_shards * easy.point.replication
+    h = hard.point.n_shards * hard.point.replication
+    assert h >= e
+    with pytest.raises(ValueError, match="open-loop"):
+        tune_fleet_for_load(w, env, Scenario(kind="closed"))

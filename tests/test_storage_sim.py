@@ -1,3 +1,10 @@
+"""Storage simulator invariants on the event kernel.
+
+The sim is now a kernel component: submissions happen at the kernel's
+current virtual time and completions are kernel events.  ``drain()``
+runs a standalone sim's private kernel dry; stepped advancement goes
+through ``sim.kernel.run_until``.
+"""
 import numpy as np
 import pytest
 
@@ -11,22 +18,27 @@ def _quiet(spec: StorageSpec) -> StorageSpec:
     return dataclasses.replace(spec, ttfb_sigma=1e-9)
 
 
-def _drain(sim: StorageSim):
-    done = []
-    while sim.busy:
-        t = sim.next_event_time()
-        done.extend(sim.advance_to(t))
-    return done
-
-
 def test_single_fetch_time():
     spec = _quiet(TOS)
     sim = StorageSim(spec, seed=0)
     nbytes = 10_000_000
-    sim.submit_batch(0.0, nbytes, 1)
-    (tk,) = _drain(sim)
+    sim.submit_batch(nbytes, 1)
+    (tk,) = sim.drain()
     expect = spec.ttfb_p50_s + nbytes / spec.bandwidth_Bps + 1 / spec.get_qps_limit
     assert tk.done_t == pytest.approx(expect, rel=0.05)
+
+
+def test_completion_callback_fires_at_done_time():
+    """on_done fires at the completion event, at the ticket's done_t."""
+    spec = _quiet(TOS)
+    sim = StorageSim(spec, seed=0)
+    seen = []
+    sim.submit_batch(1_000_000, 1,
+                     on_done=lambda tk: seen.append((sim.kernel.now, tk)))
+    sim.kernel.run()
+    ((t_cb, tk),) = seen
+    assert t_cb == tk.done_t
+    assert not sim.completed                 # callback tickets don't pile up
 
 
 def test_bandwidth_sharing_congestion():
@@ -34,13 +46,13 @@ def test_bandwidth_sharing_congestion():
     spec = _quiet(TOS)
     nbytes = 50_000_000
     sim1 = StorageSim(spec, seed=0)
-    sim1.submit_batch(0.0, nbytes, 1)
-    (solo,) = _drain(sim1)
+    sim1.submit_batch(nbytes, 1)
+    (solo,) = sim1.drain()
 
     sim2 = StorageSim(spec, seed=0)
-    sim2.submit_batch(0.0, nbytes, 1)
-    sim2.submit_batch(0.0, nbytes, 1)
-    both = _drain(sim2)
+    sim2.submit_batch(nbytes, 1)
+    sim2.submit_batch(nbytes, 1)
+    both = sim2.drain()
     t_solo = solo.done_t
     t_both = max(tk.done_t for tk in both)
     assert t_both > 1.7 * t_solo
@@ -51,8 +63,8 @@ def test_iops_throttling():
     spec = _quiet(TOS)
     sim = StorageSim(spec, seed=0)
     n_req = 40_000                       # 2 seconds worth at 20k QPS
-    sim.submit_batch(0.0, 1000, n_req)
-    (tk,) = _drain(sim)
+    sim.submit_batch(1000, n_req)
+    (tk,) = sim.drain()
     assert tk.done_t >= n_req / spec.get_qps_limit
 
 
@@ -62,8 +74,8 @@ def test_iops_vs_ssd():
     t = {}
     for spec in [_quiet(TOS), _quiet(SSD)]:
         sim = StorageSim(spec, seed=0)
-        sim.submit_batch(0.0, 1000, n_req)
-        (tk,) = _drain(sim)
+        sim.submit_batch(1000, n_req)
+        (tk,) = sim.drain()
         t[spec.name] = tk.done_t
     assert t["volcano-tos"] > 10 * t["local-ssd"]
 
@@ -72,8 +84,8 @@ def test_ttfb_floor_dominates_small_reads():
     """4KB reads on TOS are TTFB-bound (paper: graph-index regime)."""
     spec = _quiet(TOS)
     sim = StorageSim(spec, seed=0)
-    sim.submit_batch(0.0, 4096, 1)
-    (tk,) = _drain(sim)
+    sim.submit_batch(4096, 1)
+    (tk,) = sim.drain()
     transfer = 4096 / spec.bandwidth_Bps
     assert tk.done_t > 100 * transfer    # latency >> bandwidth term
 
@@ -105,8 +117,8 @@ def test_token_bucket_get_ceiling_under_burst():
     spec = _quiet(TOS)
     sim = StorageSim(spec, seed=0)
     n_req = 100
-    tickets = [sim.submit_batch(0.0, 1000, n_req) for _ in range(50)]
-    _drain(sim)
+    tickets = [sim.submit_batch(1000, n_req) for _ in range(50)]
+    sim.drain()
     # start_t = admission + ttfb (deterministic here) => spacing is pure
     # token-bucket admission
     starts = np.array(sorted(t.start_t for t in tickets))
@@ -124,14 +136,14 @@ def test_processor_sharing_equal_split():
     spec = _quiet(TOS)
     nbytes = 20_000_000
     solo = StorageSim(spec, seed=0)
-    solo.submit_batch(0.0, nbytes, 1)
-    (tk,) = _drain(solo)
+    solo.submit_batch(nbytes, 1)
+    (tk,) = solo.drain()
     t_solo_transfer = nbytes / spec.bandwidth_Bps
     for k in (2, 4):
         sim = StorageSim(spec, seed=0)
         for _ in range(k):
-            sim.submit_batch(0.0, nbytes, 1)
-        done = _drain(sim)
+            sim.submit_batch(nbytes, 1)
+        done = sim.drain()
         # all K share the pipe for the whole transfer -> finish together
         # (modulo the staggered token-bucket admissions at 1/get_qps_limit)
         ends = [t.done_t for t in done]
@@ -142,7 +154,6 @@ def test_processor_sharing_equal_split():
 
 def test_processor_sharing_staggered_arrival():
     """Exact PS arithmetic with a mid-transfer arrival."""
-    from repro.storage.simulator import _SharedPipe
     pipe = _SharedPipe(100.0)
     pipe.add(0.0, 1, 1000.0)          # alone: 0-5s at 100 B/s -> 500 left
     pipe.add(5.0, 2, 500.0)           # now both at 50 B/s
@@ -156,27 +167,25 @@ def test_processor_sharing_staggered_arrival():
 
 def test_advance_cadence_invariance():
     """The same submission schedule produces the same completions (order
-    exactly, times to 1e-9 relative — incremental processor-sharing
-    accounting differs in the last ulp) whether the clock is advanced in
-    one jump or in many small steps (the fleet's shared-clock regime)."""
+    exactly, times to 1e-9 relative) whether the kernel runs dry in one
+    go or is stepped forward in many small run_until increments."""
     spec = TOS                          # noisy TTFB included
     schedule = [(0.0, 3_000_000, 4), (0.001, 500_000, 2),
                 (0.002, 8_000_000, 8), (0.01, 4096, 1)]
 
     def run(step: float | None):
         sim = StorageSim(spec, seed=42)
-        done = []
         for t, nb, nr in schedule:
-            done.extend(sim.advance_to(t))
-            sim.submit_batch(t, nb, nr)
+            sim.kernel.run_until(t)
+            sim.submit_batch(nb, nr)
         if step is None:
-            while sim.busy:
-                done.extend(sim.advance_to(sim.next_event_time()))
+            sim.kernel.run()
         else:
             t = 0.01
             while sim.busy:
                 t += step
-                done.extend(sim.advance_to(t))
+                sim.kernel.run_until(t)
+        done = sim.completed
         return sorted((d.batch_id, d.done_t) for d in done)
 
     coarse = run(None)
@@ -184,6 +193,24 @@ def test_advance_cadence_invariance():
     assert [c[0] for c in coarse] == [f[0] for f in fine]
     for (_, tc), (_, tf) in zip(coarse, fine):
         assert tc == pytest.approx(tf, rel=1e-9)
+
+
+def test_abort_all_drops_inflight_work():
+    """abort_all forgets queued + in-flight transfers; the kernel drains
+    with no completions and later submissions still work."""
+    spec = _quiet(TOS)
+    sim = StorageSim(spec, seed=0)
+    sim.submit_batch(10_000_000, 4)
+    sim.submit_batch(5_000_000, 2)
+    sim.kernel.run_until(spec.ttfb_p50_s * 1.5)   # first transfer started
+    assert sim.busy
+    sim.abort_all()
+    assert not sim.busy
+    sim.kernel.run()
+    assert sim.completed == []
+    sim.submit_batch(1_000_000, 1)
+    (tk,) = sim.drain()
+    assert tk.done_t > sim.kernel.now - 1e-9 or tk.done_t > 0
 
 
 def test_workload_replay_concurrency_invariance():
@@ -213,8 +240,8 @@ def test_deterministic_given_seed():
     for seed in [0, 7]:
         a = StorageSim(TOS, seed=seed)
         b = StorageSim(TOS, seed=seed)
-        a.submit_batch(0.0, 1_000_000, 10)
-        b.submit_batch(0.0, 1_000_000, 10)
-        ta = _drain(a)[0].done_t
-        tb = _drain(b)[0].done_t
+        a.submit_batch(1_000_000, 10)
+        b.submit_batch(1_000_000, 10)
+        ta = a.drain()[0].done_t
+        tb = b.drain()[0].done_t
         assert ta == tb
