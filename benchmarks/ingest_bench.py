@@ -1,0 +1,261 @@
+"""Ingest bench: recall under churn, compaction storms, freshness lag.
+
+Three measurements (written to ``BENCH_ingest.json`` at the repo root
+and emitted as CSV rows), all virtual-time deterministic:
+
+1. **Recall vs write rate** — a closed-loop read stream cycling the
+   query set while an insert/delete stream churns the corpus at 0× /
+   1× / 4× the base write rate.  *Live* recall is measured against the
+   post-churn ground truth, so staleness (updates a query ran too
+   early to see) shows up directly; *settled* recall re-runs the
+   queries after the delta fully compacts.  Hard checks: the
+   zero-write run matches the static index's recall; settled recall
+   stays above 0.85 at every churn rate.
+2. **Compaction storm** — the same read load with and without a heavy
+   write stream through a deliberately small delta tier.  Compaction
+   reads/writes share the serving sims' NIC/IOPS budget, so the storm
+   must lengthen the run and show a during-compaction p99.  Hard
+   checks: queries overlapped compaction; churn wall > quiet wall.
+3. **Freshness vs delta capacity** — seal lag (arrival → folded into
+   sealed objects) for a small vs large memtable.  Hard check: the
+   larger delta seals later (or never flushes inside the run).
+
+    PYTHONPATH=src python benchmarks/ingest_bench.py
+
+Exit status is non-zero if a hard check fails.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+from common import QUICK, emit
+
+from repro.core.cluster_index import ClusterIndex
+from repro.core.flat import exact_topk
+from repro.core.types import ClusterIndexParams, SearchParams
+from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
+from repro.fleet import FleetConfig, run_fleet
+from repro.ingest import (IngestConfig, churn_ground_truth, make_mutable,
+                          synth_updates)
+from repro.serving.engine import run_workload
+from repro.sim.arrivals import Scenario
+from repro.storage.spec import TOS
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_ingest.json")
+
+_failures: list[str] = []
+
+
+def _check(name: str, ok: bool, detail: str) -> None:
+    print(f"# [{name}] {'PASS' if ok else 'FAIL'}: {detail}",
+          file=sys.stderr)
+    if not ok:
+        _failures.append(name)
+
+
+def _setup():
+    n, nq = (800, 24) if QUICK else (1500, 48)
+    data, queries = make_dataset(scaled(DEEP_ANALOG, n, nq))
+    gt, _ = exact_topk(data, queries, 10)
+    return data, queries, gt
+
+
+def _index(data):
+    return ClusterIndex.build(data, ClusterIndexParams(kmeans_iters=4,
+                                                       seed=0))
+
+
+def _drain(mutable, seed=7):
+    """Force-flush the remaining delta (post-run settlement)."""
+    from repro.core.cost_model import ComputeSpec
+    from repro.ingest import IngestAgent, IngestReport
+    from repro.sim.kernel import Kernel
+    from repro.storage.simulator import StorageSim
+    kernel = Kernel(seed=seed)
+    sim = StorageSim(TOS, kernel, seed=seed)
+    for sid in sorted(mutable.sites):
+        IngestAgent(mutable, site_id=sid, kernel=kernel,
+                    cfg=IngestConfig(), compute=ComputeSpec(),
+                    sim_provider=lambda: sim,
+                    report=IngestReport()).flush_now()
+    kernel.run()
+
+
+def bench_recall_vs_write_rate(data, queries, gt) -> list[dict]:
+    params = SearchParams(k=10, nprobe=32)
+    base_rate = 400.0 if QUICK else 800.0
+    n_up = 120 if QUICK else 300
+    arrivals = 3 * len(queries)
+    static = run_workload(_index(data), queries, params, TOS,
+                          concurrency=8, seed=1,
+                          arrivals=Scenario(
+                              kind="closed",
+                              n_arrivals=arrivals).make_arrivals(
+                                  len(queries), 8))
+    static_recall = static.recall_against(gt)
+    rows = []
+    for mult in (0.0, 1.0, 4.0):
+        rate = mult * base_rate
+        stream = (synth_updates(data, rate, int(n_up * mult),
+                                delete_frac=0.25, seed=2)
+                  if rate > 0 else None)
+        index = make_mutable(_index(data))
+        rep = run_workload(
+            index, queries, params, TOS,
+            concurrency=8, seed=1,
+            arrivals=Scenario(kind="rw",
+                              n_arrivals=arrivals).make_arrivals(
+                                  len(queries), 8),
+            updates=stream,
+            ingest=IngestConfig(delta_cap_bytes=32 * 1024))
+        g = churn_ground_truth(data, stream, queries, 10) \
+            if stream is not None else gt
+        recall_live = float(np.mean(
+            [np.isin(r.ids[r.ids >= 0],
+                     g[r.qid % len(queries)]).sum() / 10.0
+             for r in rep.records]))
+        if stream is not None:
+            _drain(index)
+            settled = [index.search(q, params) for q in queries]
+            recall_settled = float(np.mean(
+                [np.isin(r.ids[r.ids >= 0], g[i]).sum() / 10.0
+                 for i, r in enumerate(settled)]))
+        else:
+            recall_settled = recall_live
+        ing = rep.ingest or {}
+        rows.append(dict(
+            write_rate=rate, recall_live=round(recall_live, 4),
+            recall_settled=round(recall_settled, 4),
+            qps=round(rep.qps, 2),
+            p99_s=round(rep.latency_percentile(99), 6),
+            write_amplification=ing.get("write_amplification", 0.0),
+            seal_p99_s=(ing.get("seal_lag", {}) or {}).get("p99_s", 0.0),
+            visibility_p99_s=(ing.get("visibility_lag", {})
+                              or {}).get("p99_s", 0.0),
+            flushes=ing.get("flushes", 0)))
+        emit(f"ingest/recall-wr{mult:g}x", 1e6 / max(rep.qps, 1e-9),
+             write_rate=rate, recall_live=recall_live,
+             recall_settled=recall_settled, qps=rep.qps,
+             wa=ing.get("write_amplification", 0.0))
+    _check("ingest-zero-write-matches-static",
+           abs(rows[0]["recall_live"] - static_recall) < 1e-9,
+           f"write-rate-0 recall {rows[0]['recall_live']:.4f} vs static "
+           f"{static_recall:.4f} (want identical)")
+    _check("ingest-settled-recall-floor",
+           min(r["recall_settled"] for r in rows) > 0.85,
+           f"worst settled recall "
+           f"{min(r['recall_settled'] for r in rows):.4f} (want > 0.85)")
+    return rows
+
+
+def bench_compaction_storm(data, queries, gt) -> dict:
+    params = SearchParams(k=10, nprobe=32)
+    cfg = FleetConfig(n_shards=2, replication=1, storage=TOS,
+                      concurrency=8, seed=2)
+    arrivals = 4 * len(queries)
+    mk_arr = lambda: Scenario(kind="rw",
+                              n_arrivals=arrivals).make_arrivals(
+                                  len(queries), cfg.concurrency)
+    rate = 1500.0 if QUICK else 3000.0
+    n_up = 300 if QUICK else 600
+    quiet = run_fleet(make_mutable(_index(data)), queries, params, cfg,
+                      arrivals=mk_arr())
+    stream = synth_updates(data, rate, n_up, delete_frac=0.2, seed=5)
+    churn = run_fleet(make_mutable(_index(data)), queries, params, cfg,
+                      arrivals=mk_arr(), updates=stream,
+                      ingest=IngestConfig(delta_cap_bytes=16 * 1024,
+                                          recluster=False))
+    ing = churn.ingest
+    row = dict(
+        quiet_wall_s=round(quiet.wall_time_s, 6),
+        churn_wall_s=round(churn.wall_time_s, 6),
+        quiet_p99_s=round(quiet.latency_percentile(99), 6),
+        churn_p99_s=round(churn.latency_percentile(99), 6),
+        queries_during_compaction=ing["queries_during_compaction"],
+        p50_during_s=ing["query_p50_during_compaction_s"],
+        p99_during_s=ing["query_p99_during_compaction_s"],
+        p50_outside_s=ing["query_p50_outside_compaction_s"],
+        p99_outside_s=ing["query_p99_outside_compaction_s"],
+        write_amplification=ing["write_amplification"],
+        compaction_busy_s=ing["compaction_busy_s"],
+        flushes=ing["flushes"])
+    emit("ingest/storm", churn.latency_percentile(99) * 1e6,
+         quiet_p99_ms=quiet.latency_percentile(99) * 1e3,
+         churn_p99_ms=churn.latency_percentile(99) * 1e3,
+         during_p99_ms=row["p99_during_s"] * 1e3,
+         wa=row["write_amplification"])
+    _check("ingest-storm-overlaps-queries",
+           row["queries_during_compaction"] > 0,
+           f"{row['queries_during_compaction']} queries overlapped "
+           f"compaction (want > 0)")
+    _check("ingest-storm-steals-bandwidth",
+           row["churn_wall_s"] > row["quiet_wall_s"],
+           f"wall quiet={row['quiet_wall_s']:.4f}s vs "
+           f"churn={row['churn_wall_s']:.4f}s (want longer)")
+    return row
+
+
+def bench_freshness(data, queries, gt) -> list[dict]:
+    params = SearchParams(k=10, nprobe=16)
+    rate = 600.0 if QUICK else 1000.0
+    n_up = 150 if QUICK else 250
+    rows = []
+    for label, cap in (("small", 8 * 1024), ("large", 96 * 1024)):
+        stream = synth_updates(data, rate, n_up, delete_frac=0.2, seed=6)
+        rep = run_workload(
+            make_mutable(_index(data)), queries, params, TOS,
+            concurrency=8, seed=3, updates=stream,
+            ingest=IngestConfig(delta_cap_bytes=cap))
+        ing = rep.ingest
+        rows.append(dict(
+            delta=label, delta_cap_bytes=cap,
+            sealed=ing["seal_lag"]["n"], unsealed=ing["unsealed"],
+            seal_mean_s=ing["seal_lag"]["mean_s"],
+            seal_p99_s=ing["seal_lag"]["p99_s"],
+            visibility_p99_s=ing["visibility_lag"]["p99_s"],
+            flushes=ing["flushes"],
+            write_amplification=ing["write_amplification"]))
+        emit(f"ingest/freshness-{label}",
+             ing["seal_lag"]["mean_s"] * 1e6 or 1.0,
+             sealed=ing["seal_lag"]["n"], unsealed=ing["unsealed"],
+             seal_p99_ms=ing["seal_lag"]["p99_s"] * 1e3)
+    small, large = rows
+    later = (large["sealed"] == 0
+             or large["seal_mean_s"] > small["seal_mean_s"])
+    _check("ingest-freshness-tracks-delta-capacity",
+           small["sealed"] > 0 and later,
+           f"small-delta mean seal {small['seal_mean_s']:.4f}s vs large "
+           f"{large['seal_mean_s']:.4f}s (sealed {large['sealed']}) — "
+           f"want the larger delta to seal later (or not at all)")
+    return rows
+
+
+def main() -> int:
+    data, queries, gt = _setup()
+    results = dict(
+        bench="ingest",
+        quick=QUICK,
+        recall_vs_write_rate=bench_recall_vs_write_rate(data, queries,
+                                                        gt),
+        compaction_storm=bench_compaction_storm(data, queries, gt),
+        freshness=bench_freshness(data, queries, gt),
+        failures=_failures,
+    )
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {os.path.abspath(OUT_PATH)}", file=sys.stderr)
+    if _failures:
+        print(f"# ingest_bench: FAILED {_failures}", file=sys.stderr)
+        return 1
+    print("# ingest_bench: all ingest checks passed", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

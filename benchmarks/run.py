@@ -30,6 +30,7 @@ MODULES = [
     "benchmarks.fig20_25_caching",
     "benchmarks.tuner_bench",
     "benchmarks.fleet_bench",
+    "benchmarks.ingest_bench",
 ]
 
 

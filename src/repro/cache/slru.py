@@ -115,6 +115,29 @@ class SLRUCache:
             _, s = self.probation.popitem(last=False)
             self.probation_bytes -= s
 
+    # ----------------------------------------------------- invalidation --
+    def remove(self, key: Hashable) -> int:
+        """Drop ``key`` from whichever segment holds it (compaction
+        rewrote the object, so the cached copy is stale).  Returns the
+        bytes freed (0 when the key was not cached); byte accounting is
+        adjusted on the segment the entry actually occupied."""
+        if key in self.protected:
+            size = self.protected.pop(key)
+            self.protected_bytes -= size
+            return size
+        if key in self.probation:
+            size = self.probation.pop(key)
+            self.probation_bytes -= size
+            return size
+        return 0
+
+    def invalidate(self, key: Hashable) -> bool:
+        """``remove`` as a hit/miss predicate (True when a stale copy
+        was actually dropped)."""
+        present = key in self
+        self.remove(key)
+        return present
+
 
 class PinnedCache:
     """Fixed-content cache: always hits on the pinned key set.
@@ -154,3 +177,15 @@ class PinnedCache:
 
     def put(self, key, nbytes: int) -> None:
         pass                     # contents are fixed
+
+    # ----------------------------------------------------- invalidation --
+    def remove(self, key) -> int:
+        """Un-pin a rewritten object: its pinned copy is stale and the
+        policy cannot refresh content, so the key stops hitting."""
+        self.keys.discard(key)
+        return 0                 # pinned bookkeeping carries no bytes
+
+    def invalidate(self, key) -> bool:
+        present = key in self.keys
+        self.keys.discard(key)
+        return present

@@ -55,6 +55,20 @@ def add_scenario_args(p: argparse.ArgumentParser, *,
     g.add_argument("--burst-len", type=float, default=0.25)
     g.add_argument("--trace-zipf-a", type=float, default=1.2,
                    help="trace popularity skew (zipf exponent)")
+    w = p.add_argument_group("read-write mix (--scenario rw)")
+    w.add_argument("--write-rate", type=float, default=0.0,
+                   help="update arrivals per virtual second (0 = pure "
+                        "query run, bit-identical to --scenario closed)")
+    w.add_argument("--n-updates", type=int, default=None,
+                   help="cap on total updates (default: write rate x 1s)")
+    w.add_argument("--delete-frac", type=float, default=0.2,
+                   help="delete share of the update stream")
+    w.add_argument("--delta-kb", type=float, default=256.0,
+                   help="delta-tier (memtable) capacity per site, KiB")
+    w.add_argument("--flush-frac", type=float, default=0.5,
+                   help="flush trigger as a fraction of the delta cap")
+    w.add_argument("--compaction-par", type=int, default=1,
+                   help="concurrent background compaction jobs per site")
     if not faults:
         return
     g.add_argument("--fail", action="append", default=[],
@@ -75,7 +89,19 @@ def scenario_from_args(args) -> Scenario:
         kind=args.scenario, rate_qps=args.rate, duration_s=args.duration,
         n_arrivals=args.arrivals, burst_factor=args.burst_factor,
         burst_start_s=args.burst_start, burst_len_s=args.burst_len,
-        zipf_a=args.trace_zipf_a, slo_s=args.slo_ms * 1e-3)
+        zipf_a=args.trace_zipf_a, slo_s=args.slo_ms * 1e-3,
+        write_rate_qps=getattr(args, "write_rate", 0.0),
+        n_updates=getattr(args, "n_updates", None),
+        delete_frac=getattr(args, "delete_frac", 0.2))
+
+
+def ingest_from_args(args):
+    """The compaction knobs (only consulted on rw runs)."""
+    from repro.ingest.compaction import IngestConfig
+    return IngestConfig(
+        delta_cap_bytes=int(args.delta_kb * 1024),
+        flush_frac=args.flush_frac,
+        compaction_parallelism=args.compaction_par)
 
 
 def faults_from_args(args) -> FaultSchedule | None:

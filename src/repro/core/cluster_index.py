@@ -85,7 +85,8 @@ def dedup_topk(ids: np.ndarray, d: np.ndarray, k: int
 
 
 def scan_posting_lists(q: np.ndarray, payload_items, k: int,
-                       metrics: QueryMetrics) -> SearchResult:
+                       metrics: QueryMetrics,
+                       exclude: set | None = None) -> SearchResult:
     """Scan fetched posting lists and return the top-``k``.
 
     ``payload_items`` is an iterable of ``(ids, vecs)`` posting-list
@@ -93,7 +94,9 @@ def scan_posting_lists(q: np.ndarray, payload_items, k: int,
     first (nearest) occurrence.  Shared by the single-node plan and the
     fleet's shard-local scan jobs — a shard scanning its own subset of the
     probed lists produces a local top-k whose global merge equals the
-    single-node result.
+    single-node result.  ``exclude`` (a set or int64 array) drops
+    tombstoned ids (live-ingest deletes not yet compacted out of the
+    sealed lists).
     """
     all_ids = []
     all_vecs = []
@@ -106,6 +109,14 @@ def scan_posting_lists(q: np.ndarray, payload_items, k: int,
                             np.full(k, np.inf, np.float32), metrics)
     ids = np.concatenate(all_ids)
     vecs = np.concatenate(all_vecs)
+    if exclude is not None and len(exclude):
+        excl = exclude if isinstance(exclude, np.ndarray) else \
+            np.fromiter(exclude, dtype=np.int64)
+        keep = ~np.isin(ids, excl)
+        ids, vecs = ids[keep], vecs[keep]
+        if not len(ids):
+            return SearchResult(np.full(k, -1, np.int64),
+                                np.full(k, np.inf, np.float32), metrics)
     d = np_sq_l2(q, vecs)
     metrics.dist_comps += len(ids)
     out_ids, out_d = dedup_topk(ids, d, k)

@@ -329,6 +329,11 @@ class GraphIndex:
                 new_nbrs.append(nbrs)
             if new_nbrs:
                 nn = np.unique(np.concatenate(new_nbrs))
+                # snapshot isolation under live ingest: nodes stitched in
+                # after this plan started (id >= the entry-time n_data)
+                # are invisible to it — the merged-search delta scan
+                # covers them until the next query.
+                nn = nn[nn < len(visited)]
                 nn = nn[~visited[nn] & ~in_cand[nn]]
             else:
                 nn = np.zeros(0, dtype=np.int64)

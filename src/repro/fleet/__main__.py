@@ -16,6 +16,9 @@ Examples:
     # let the autoscaler defend the SLO through a 4x burst
     python -m repro.fleet --scenario burst --rate 150 --duration 2 \\
         --autoscale --slo-ms 80
+    # read-write mix: live inserts/deletes + background compaction
+    python -m repro.fleet --scenario rw --write-rate 400 \\
+        --n-updates 200 --delta-kb 64
 """
 from __future__ import annotations
 
@@ -24,7 +27,7 @@ import sys
 
 from repro.cli import (add_common_args, add_scenario_args,
                        autoscale_from_args, emit_json, faults_from_args,
-                       scenario_from_args)
+                       ingest_from_args, scenario_from_args)
 from repro.core.cluster_index import ClusterIndex
 from repro.core.flat import exact_topk
 from repro.core.graph_index import GraphIndex
@@ -125,13 +128,24 @@ def main(argv: list[str] | None = None) -> int:
         seed=args.seed)
     arrivals = scenario.make_arrivals(len(queries), cfg.concurrency,
                                       seed=args.seed)
+    updates = None
+    ingest_cfg = None
+    if scenario.kind == "rw":
+        protected = frozenset([index.meta.medoid]) \
+            if args.index == "graph" else None
+        updates = scenario.make_updates(data, seed=args.seed,
+                                        protected=protected)
+        ingest_cfg = ingest_from_args(args)
     # closed-loop sojourns measure drain position, not service time —
-    # goodput-vs-SLO is only meaningful for open-loop arrivals
-    slo_s = scenario.slo_s if scenario.kind != "closed" else None
+    # goodput-vs-SLO is only meaningful for open-loop arrivals (rw runs
+    # its queries closed-loop too)
+    slo_s = scenario.slo_s if scenario.kind not in ("closed", "rw") \
+        else None
     report = run_fleet(index, queries, params, cfg,
                        arrivals=arrivals, faults=faults,
                        autoscale=autoscale, slo_s=slo_s,
-                       series_dt=args.series_dt)
+                       series_dt=args.series_dt,
+                       updates=updates, ingest=ingest_cfg)
 
     out = dict(config=cfg.to_dict(), index=args.index,
                scenario=scenario.to_dict(), report=report.summary())
@@ -139,8 +153,17 @@ def main(argv: list[str] | None = None) -> int:
         out["fault_schedule"] = faults.to_dicts()
     if autoscale is not None:
         out["autoscale_config"] = autoscale.to_dict()
+    if scenario.kind == "rw":
+        out["ingest_config"] = ingest_cfg.to_dict()
+        if updates is not None:
+            out["update_stream"] = updates.to_dict()
     if not args.no_recall:
-        gt, _ = exact_topk(data, queries, args.k)
+        if updates is not None:
+            from repro.ingest.stream import churn_ground_truth
+            gt = churn_ground_truth(data, queries=queries, k=args.k,
+                                    stream=updates)
+        else:
+            gt, _ = exact_topk(data, queries, args.k)
         out["recall"] = round(report.recall_against(gt), 4)
     emit_json(out, args)
     return 0

@@ -110,6 +110,7 @@ class FleetReport:
     shards_seconds: float | None = None   # ∫ active instances dt (cost)
     scale_events: list | None = None      # autoscaler decision log
     fault_log: list | None = None         # fail/recover events observed
+    ingest: dict | None = None            # repro.ingest accounting (rw)
 
     # ------------------------------------------------------- throughput --
     @property
@@ -247,6 +248,8 @@ class FleetReport:
                                  else None))
         if self.fault_log is not None:
             out["faults"] = self.fault_log
+        if self.ingest is not None:
+            out["ingest"] = self.ingest
         return out
 
     def to_json(self, indent: int | None = 2) -> str:

@@ -85,6 +85,19 @@ class ClusterPartition:
         _, li = key
         return tuple(int(s) for s in self.owners_arr[li])
 
+    def inherit(self, new_li: int, parent_li: int) -> None:
+        """A re-cluster split ``parent_li``: the new list keeps the
+        parent's replica owners (the data stays where it already lives —
+        a split moves no bytes between shards)."""
+        if new_li < len(self.owners_arr):
+            return                       # already registered
+        if new_li != len(self.owners_arr):
+            raise ValueError(
+                f"non-contiguous list id {new_li} "
+                f"(have {len(self.owners_arr)})")
+        self.owners_arr = np.vstack(
+            [self.owners_arr, self.owners_arr[parent_li][None]])
+
     @property
     def bytes_imbalance(self) -> float:
         """max/mean stored bytes across shards (1.0 = perfectly even)."""
@@ -100,6 +113,7 @@ class GraphPartition:
     n_shards: int
     replication: int
     base: np.ndarray              # (n_nodes,) int32 primary shard per node
+    seed: int = 0
 
     @staticmethod
     def build(n_nodes: int, n_shards: int, replication: int,
@@ -110,11 +124,16 @@ class GraphPartition:
              % n_shards for i in range(n_nodes)),
             dtype=np.int32, count=n_nodes)
         return GraphPartition(n_shards=n_shards, replication=replication,
-                              base=base)
+                              base=base, seed=seed)
 
     def owners(self, key) -> tuple[int, ...]:
         _, node = key
-        b = int(self.base[node])
+        if node < len(self.base):
+            b = int(self.base[node])
+        else:                         # a node stitched in by live ingest
+            b = _splitmix64(
+                node ^ (self.seed * 0x9E3779B97F4A7C15 & _MASK64)
+            ) % self.n_shards
         return tuple((b + r) % self.n_shards for r in range(self.replication))
 
     @property

@@ -62,7 +62,8 @@ from repro.fleet.metrics import FleetQueryRecord, FleetReport, FleetSeries
 from repro.fleet.partition import partition_for_index
 from repro.fleet.server import ShardGroup, ShardServer
 from repro.serving.engine import EngineConfig, JobRecord
-from repro.sim.arrivals import ArrivalProcess, ClosedLoop, offered_rate
+from repro.sim.admission import AdmissionWindow
+from repro.sim.arrivals import ArrivalProcess, ClosedLoop
 from repro.sim.autoscale import AutoscaleConfig, Autoscaler
 from repro.sim.faults import FaultSchedule
 from repro.sim.kernel import Kernel
@@ -190,14 +191,25 @@ class _FleetQuery:
 
 
 def _scan_plan(q: np.ndarray, reqs: list[FetchRequest], k: int,
-               metrics: QueryMetrics):
-    """Shard-local cluster job: fetch my lists, scan, return local top-k."""
+               metrics: QueryMetrics, delta_fn=None, dead_fn=None):
+    """Shard-local cluster job: fetch my lists, scan, return local top-k.
+
+    ``delta_fn``/``dead_fn`` (live-ingest runs) are evaluated at scan
+    time — after the fetch completes — so the job sees the shard's delta
+    points for the probed lists and its tombstones *as of the scan
+    instant*, not as of scatter: freshness is measured where it happens.
+    """
     payloads = yield FetchBatch(list(reqs))
     metrics.roundtrips += 1
     metrics.requests += len(reqs)
     metrics.bytes_read += sum(r.nbytes for r in reqs)
-    return scan_posting_lists(q, (payloads[rq.key] for rq in reqs), k,
-                              metrics)
+    items = [payloads[rq.key] for rq in reqs]
+    if delta_fn is not None:
+        ids, vecs = delta_fn()
+        if len(ids):
+            items.append((ids, vecs))
+    exclude = dead_fn() if dead_fn is not None else None
+    return scan_posting_lists(q, items, k, metrics, exclude=exclude)
 
 
 def _fetch_plan(reqs: list[FetchRequest]):
@@ -228,6 +240,8 @@ class FleetRouter:
         self.dim = index.meta.dim
         pq = getattr(index.meta, "pq", None)
         self.pq_m = pq.m if pq is not None else 0
+        self._ingest_agents: dict[int, object] = {}
+        self._ingest_report = None
 
     def _shard_engine_cfg(self, shard_id: int, instance: int
                           ) -> EngineConfig:
@@ -254,7 +268,16 @@ class FleetRouter:
             faults: FaultSchedule | None = None,
             autoscale: AutoscaleConfig | None = None,
             slo_s: float | None = None,
-            series_dt: float | None = None) -> FleetReport:
+            series_dt: float | None = None,
+            updates=None, ingest=None) -> FleetReport:
+        """``updates`` (an :class:`repro.ingest.stream.UpdateStream`)
+        turns the run into a read-write workload: the router forwards
+        each update to the shard groups owning its keys, every owner
+        group ingests independently (its own delta tier, freshness lag
+        and compaction schedule, with compaction I/O charged to its own
+        instances' storage sims), and rewritten objects are invalidated
+        from every instance cache.  With no updates the run is
+        byte-identical to the pure-query path."""
         cfg = self.cfg
         qids = list(query_ids) if query_ids is not None else list(
             range(len(queries)))
@@ -268,12 +291,9 @@ class FleetRouter:
         self._qids = qids
         self._window = arr.window if arr.window is not None \
             else cfg.concurrency
-        self._backlog: deque = deque()     # (arrival_idx, workload_idx)
-        self._in_window = 0
-        self._arrive_t: dict[int, float] = {}
-        self._arrivals_total = 0
-        self._last_arrival_t = 0.0
-        self._arrivals_done = False
+        self._adm = AdmissionWindow(
+            self.kernel, self._window,
+            lambda item, t: self._begin_query(item[0], item[1], t))
         self._ctx: dict[int, tuple] = {}   # tag -> (query, slot, attempt, t)
         self._tag_seq = 0
         self._slot_seq = 0
@@ -307,6 +327,11 @@ class FleetRouter:
             self._autoscaler.start(self.kernel)
         if faults is not None:
             faults.install(self.kernel, self)
+        self._ingest_agents: dict[int, object] = {}
+        self._ingest_report = None
+        if updates is not None and len(updates):
+            self._setup_ingest(ingest)
+            updates.start(self.kernel, self._deliver_update)
 
         arr.start(self.kernel, self._arrive, len(queries),
                   done=self._arrivals_exhausted)
@@ -319,8 +344,12 @@ class FleetRouter:
                  for srv in g.all_servers()]
         shards_seconds = sum(srv.active_seconds(wall) for g in self.groups
                              for srv in g.all_servers())
-        offered = offered_rate(self._arrivals_total, self._last_arrival_t,
-                               wall)
+        offered = self._adm.offered_qps(wall)
+        ingest_dict = None
+        if self._ingest_report is not None:
+            for agent in self._ingest_agents.values():
+                agent.finalize()
+            ingest_dict = self._ingest_report.to_dict(self._records)
         return FleetReport(
             records=self._records, shard_stats=stats, wall_time_s=wall,
             n_shards=cfg.n_shards, replication=cfg.replication,
@@ -328,36 +357,110 @@ class FleetRouter:
             hedges_launched=self._hedges, hedge_wins=self._hedge_wins,
             sheds_total=sum(s.sheds for s in stats),
             submissions_total=sum(s.submissions for s in stats),
-            scenario=arr.kind, n_arrivals=self._arrivals_total,
+            scenario=arr.kind, n_arrivals=self._adm.arrivals_total,
             offered_qps=offered, slo_s=self._slo,
             good_total=self._good_total if self._slo is not None else None,
             series=self._series, shards_seconds=shards_seconds,
             scale_events=(self._autoscaler.events
                           if self._autoscaler is not None else None),
-            fault_log=self._fault_log if faults is not None else None)
+            fault_log=self._fault_log if faults is not None else None,
+            ingest=ingest_dict)
+
+    # ----------------------------------------------------------- ingest --
+    def _setup_ingest(self, ingest_cfg) -> None:
+        """One :class:`IngestAgent` per shard group: independent delta
+        tier, apply queue and compaction schedule, with compaction I/O
+        charged through the group's live instances' storage sims."""
+        from repro.ingest.compaction import IngestAgent, IngestConfig
+        from repro.ingest.metrics import IngestReport
+        from repro.ingest.mutable import make_mutable
+        self.index = make_mutable(self.index)
+        self._ingest_report = IngestReport()
+        cfg = ingest_cfg if ingest_cfg is not None else IngestConfig()
+        for g in self.groups:
+            owned = None
+            if self.kind == "cluster":
+                owned = {li for li in range(self.index.meta.n_lists)
+                         if g.shard_id in
+                         self.partition.owners(("list", li))}
+
+            def provider(g=g):
+                srv = g.pick()
+                return srv.engine.sim if srv is not None else None
+
+            self._ingest_agents[g.shard_id] = IngestAgent(
+                self.index, site_id=g.shard_id, kernel=self.kernel,
+                cfg=cfg, compute=self.cfg.compute, sim_provider=provider,
+                report=self._ingest_report,
+                invalidate=self._invalidate_key,
+                on_new_list=self._on_new_list, owned_lists=owned)
+
+    def _invalidate_key(self, key) -> None:
+        """Broadcast a rewritten object's staleness to every instance
+        cache (non-owners never cached the key; dropping is a no-op)."""
+        for g in self.groups:
+            for srv in g.all_servers():
+                srv.invalidate(key)
+
+    def _on_new_list(self, new_li: int, parent_li: int) -> None:
+        """A re-cluster split: the new posting list inherits the parent's
+        replica owners (no data movement) and joins owned-list sets."""
+        self.partition.inherit(new_li, parent_li)
+        owners = set(self.partition.owners(("list", new_li)))
+        for sid, agent in self._ingest_agents.items():
+            if agent.owned_lists is not None and sid in owners:
+                agent.owned_lists.add(new_li)
+
+    def _deliver_update(self, op) -> None:
+        """Route one update to the shard groups owning its keys.  Each
+        owner group applies its own copy — delta-tier replication
+        mirroring the sealed replication, so any replica owner can serve
+        a probed list's fresh points."""
+        if self.kind == "cluster":
+            if op.kind == "insert":
+                lists, ndist = self.index.assign_lists(op.vec)
+            else:
+                lists, ndist = self.index.lists_of(op.id), 0
+            owner_set = {s for li in lists
+                         for s in self.partition.owners(("list", li))}
+            if op.kind == "delete":
+                # the victim may still be delta-only on some sites
+                for sid, mem in self.index.sites.items():
+                    if op.id in mem.entries:
+                        owner_set.add(sid)
+                if not owner_set:
+                    # the insert is still in some apply queue (delivered
+                    # but not applied): broadcast — per-site FIFO apply
+                    # order serializes the delete behind its insert at
+                    # the sites that will hold it, and a spurious
+                    # tombstone elsewhere clears at that site's next
+                    # flush
+                    owner_set = set(self._ingest_agents)
+            for s in sorted(owner_set):
+                agent = self._ingest_agents[s]
+                mine = tuple(li for li in lists if agent.owned_lists
+                             is None or li in agent.owned_lists)
+                agent.deliver(op, lists=mine, ndist=ndist)
+        else:
+            # graph delta is single-homed on the primary hash owner; the
+            # router's merged search reads every site, so placement does
+            # not affect visibility.
+            owner = self.partition.owners(("node", op.id))[0]
+            self._ingest_agents[owner].deliver(op, lists=(), ndist=0)
 
     # ------------------------------------------------- arrivals / window --
     def _arrive(self, arrival_idx: int, workload_idx: int) -> None:
-        t = self.kernel.now
-        self._arrivals_total += 1
-        self._last_arrival_t = t
         self._slice_counts[0] += 1
-        self._arrive_t[arrival_idx] = t
-        if self._in_window < self._window:
-            self._in_window += 1
-            self._begin_query(arrival_idx, workload_idx, t)
-        else:
-            self._backlog.append((arrival_idx, workload_idx))
+        self._adm.offer((arrival_idx, workload_idx), key=arrival_idx)
 
     def _arrivals_exhausted(self) -> None:
-        self._arrivals_done = True
+        self._adm.mark_exhausted()
         self._maybe_shutdown()
 
     def _maybe_shutdown(self) -> None:
         """Stop the monitor/controller tickers once the workload drains —
         they would otherwise keep the kernel alive forever."""
-        if not (self._arrivals_done and self._in_window == 0
-                and not self._backlog):
+        if not self._adm.drained:
             return
         if self._monitor is not None:
             self._monitor.cancel()
@@ -379,7 +482,7 @@ class FleetRouter:
         q = self._queries[workload_idx]
         fq = _FleetQuery(arrival_idx, self._qids[workload_idx], q,
                          self.kind, self._params.k, t,
-                         self._arrive_t.pop(arrival_idx))
+                         self._adm.pop_arrive_t(arrival_idx))
         meta = self.index.meta
         if self.kind == "cluster":
             lids, ndist = self.index.select_lists(q, self._params.nprobe)
@@ -447,9 +550,17 @@ class FleetRouter:
                 self._submit_primary(fq, slot, t)
 
     def _make_plan(self, fq: _FleetQuery, reqs: list[FetchRequest],
-                   metrics: QueryMetrics):
+                   metrics: QueryMetrics, shard: int):
         if self.kind == "cluster":
-            return _scan_plan(fq.q, reqs, fq.k, metrics)
+            delta_fn = dead_fn = None
+            if self._ingest_agents:
+                mem = self.index.sites.get(shard)
+                lids = tuple(int(rq.key[1]) for rq in reqs)
+                if mem is not None:
+                    delta_fn = lambda: mem.live_items(lids)  # noqa: E731
+                dead_fn = self.index.deleted_array
+            return _scan_plan(fq.q, reqs, fq.k, metrics,
+                              delta_fn=delta_fn, dead_fn=dead_fn)
         return _fetch_plan(reqs)
 
     def _schedule_retry(self, fq: _FleetQuery, slot: _Slot) -> None:
@@ -508,7 +619,7 @@ class FleetRouter:
         metrics = QueryMetrics()
         tag = self._tag_seq
         self._tag_seq += 1
-        plan = self._make_plan(fq, slot.reqs, metrics)
+        plan = self._make_plan(fq, slot.reqs, metrics, shard)
         if srv is not None and srv.try_submit(t, plan, metrics, tag):
             slot.outstanding.setdefault(0, set()).add(tag)
             slot.collected.setdefault(0, [])
@@ -556,7 +667,7 @@ class FleetRouter:
             metrics = QueryMetrics()
             tag = self._tag_seq
             self._tag_seq += 1
-            plan = self._make_plan(fq, groups[shard], metrics)
+            plan = self._make_plan(fq, groups[shard], metrics, shard)
             self.groups[shard].pick().try_submit(t, plan, metrics, tag)
             slot.outstanding[1].add(tag)
             self._ctx[tag] = (fq, slot, 1, t)
@@ -604,6 +715,10 @@ class FleetRouter:
             batch = fq.gen.send(fq.payloads)
         except StopIteration as stop:
             res = stop.value
+            if self._ingest_agents:
+                # router-side delta merge + tombstone filter: the graph
+                # delta lives in site memtables the beam never traversed
+                res = self.index.merge_result(fq.q, fq.k, res, fq.metrics)
             self._finish_query(fq, t + self._price(fq), res.ids, res.dists)
             return
         self.kernel.at(t + self._price(fq), self._scatter, fq,
@@ -623,11 +738,7 @@ class FleetRouter:
         if self._slo is not None and sojourn <= self._slo:
             self._good_total += 1
             self._slice_counts[2] += 1
-        if self._backlog:
-            nai, nwi = self._backlog.popleft()
-            self._begin_query(nai, nwi, t)
-        else:
-            self._in_window -= 1
+        if not self._adm.release(t):
             self._maybe_shutdown()
 
     # ------------------------------------------------- faults / scaling --
@@ -695,7 +806,7 @@ class FleetRouter:
 
     # ----------------------------------------------------------- monitor --
     def _queue_depth(self) -> int:
-        depth = len(self._backlog) + self._retry_pending
+        depth = self._adm.depth + self._retry_pending
         for g in self.groups:
             depth += sum(s.load for s in g.instances)
         return depth
@@ -718,9 +829,10 @@ def run_fleet(index, queries: np.ndarray, params: SearchParams,
               faults: FaultSchedule | None = None,
               autoscale: AutoscaleConfig | None = None,
               slo_s: float | None = None,
-              series_dt: float | None = None) -> FleetReport:
+              series_dt: float | None = None,
+              updates=None, ingest=None) -> FleetReport:
     """One-call fleet evaluation (the fleet analogue of run_workload)."""
     return FleetRouter(index, cfg).run(
         queries, params, query_ids=query_ids, arrivals=arrivals,
         faults=faults, autoscale=autoscale, slo_s=slo_s,
-        series_dt=series_dt)
+        series_dt=series_dt, updates=updates, ingest=ingest)

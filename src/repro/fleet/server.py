@@ -129,6 +129,11 @@ class ShardServer:
         self.stats.sheds += 1
         return False
 
+    def invalidate(self, key) -> None:
+        """Drop a rewritten object's stale cached copy (compaction)."""
+        if self.engine.cache is not None:
+            self.engine.cache.remove(key)
+
     def _job_done(self, job: JobRecord) -> None:
         self.stats.jobs_done += 1
         self.stats.busy_s += job.latency

@@ -23,7 +23,6 @@ Everything is virtual-time deterministic for a given seed.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Any, Callable, Iterable
 
 import numpy as np
@@ -33,7 +32,8 @@ from repro.core.cost_model import (DEFAULT_COMPUTE, ComputeSpec,
                                    plan_compute_seconds)
 from repro.core.types import QueryMetrics, SearchParams
 from repro.serving.metrics import BatchTrace, QueryRecord, WorkloadReport
-from repro.sim.arrivals import ArrivalProcess, ClosedLoop, offered_rate
+from repro.sim.admission import AdmissionWindow
+from repro.sim.arrivals import ArrivalProcess, ClosedLoop
 from repro.sim.kernel import Event, Kernel
 from repro.storage.simulator import StorageSim
 from repro.storage.spec import StorageSpec
@@ -274,7 +274,16 @@ class QueryEngine:
 
     def run(self, queries: np.ndarray, params: SearchParams,
             query_ids: Iterable[int] | None = None,
-            arrivals: ArrivalProcess | None = None) -> WorkloadReport:
+            arrivals: ArrivalProcess | None = None,
+            updates=None, ingest=None) -> WorkloadReport:
+        """``updates`` (an :class:`repro.ingest.stream.UpdateStream`)
+        interleaves live inserts/deletes with the query stream; the
+        index is wrapped mutable on first use and an
+        :class:`repro.ingest.compaction.IngestAgent` applies the stream
+        and runs background compaction whose I/O contends with query
+        I/O on this engine's storage simulator.  ``ingest`` is its
+        :class:`repro.ingest.compaction.IngestConfig`.  With no updates
+        the run is byte-identical to the pure-query path."""
         cfg = self.cfg
         qids = list(query_ids) if query_ids is not None else list(
             range(len(queries)))
@@ -284,26 +293,16 @@ class QueryEngine:
 
         kernel = Kernel(seed=cfg.seed)
         records: list[QueryRecord] = []
-        backlog: deque = deque()               # (arrival_idx, workload_idx)
-        arrive_t: dict[int, float] = {}
-        state = dict(in_window=0, arrivals=0, last_arrival=0.0)
         core = SteppableEngine(cfg, self.index.store, self.cache,
                                kernel=kernel, dim=self.dim, pq_m=self.pq_m)
 
-        def start_query(ai: int, wi: int, t: float) -> None:
+        def start_query(item: tuple[int, int], t: float) -> None:
+            ai, wi = item
             metrics = QueryMetrics()
             gen = self.index.search_plan(queries[wi], params, metrics)
             core.submit(gen, metrics, tag=(ai, qids[wi]), at=t)
 
-        def arrive(ai: int, wi: int) -> None:
-            state["arrivals"] += 1
-            state["last_arrival"] = kernel.now
-            arrive_t[ai] = kernel.now
-            if state["in_window"] < window:
-                state["in_window"] += 1
-                start_query(ai, wi, kernel.now)
-            else:
-                backlog.append((ai, wi))
+        adm = AdmissionWindow(kernel, window, start_query)
 
         def on_complete(job: JobRecord) -> None:
             ai, qid = job.tag
@@ -311,26 +310,41 @@ class QueryEngine:
             records.append(QueryRecord(
                 qid=qid, start_t=job.start_t, end_t=job.end_t,
                 ids=res.ids, dists=res.dists, metrics=job.metrics,
-                batches=job.batches, arrive_t=arrive_t.pop(ai)))
-            if backlog:
-                nai, nwi = backlog.popleft()
-                start_query(nai, nwi, job.end_t)
-            else:
-                state["in_window"] -= 1
+                batches=job.batches, arrive_t=adm.pop_arrive_t(ai)))
+            adm.release(job.end_t)
 
         core.on_complete = on_complete
-        arr.start(kernel, arrive, len(queries))
+        agent = None
+        if updates is not None and len(updates):
+            from repro.ingest.compaction import IngestAgent, IngestConfig
+            from repro.ingest.metrics import IngestReport
+            from repro.ingest.mutable import make_mutable
+            self.index = make_mutable(self.index)
+            agent = IngestAgent(
+                self.index, site_id=0, kernel=kernel,
+                cfg=ingest if ingest is not None else IngestConfig(),
+                compute=cfg.compute, sim_provider=lambda: core.sim,
+                report=IngestReport(),
+                invalidate=(self.cache.remove if self.cache is not None
+                            else None))
+            updates.start(kernel, agent.deliver)
+        arr.start(kernel, lambda ai, wi: adm.offer((ai, wi), key=ai),
+                  len(queries))
         kernel.run()
 
         wall = max((r.end_t for r in records), default=0.0)
-        offered = offered_rate(state["arrivals"], state["last_arrival"],
-                               wall)
+        ingest_dict = None
+        if agent is not None:
+            agent.finalize()
+            ingest_dict = agent.report.to_dict(records)
         return WorkloadReport(
             records=records, wall_time_s=wall,
             storage_bytes=core.sim.total_bytes,
             storage_requests=core.sim.total_requests,
             concurrency=cfg.concurrency, scenario=arr.kind,
-            n_arrivals=state["arrivals"], offered_qps=offered)
+            n_arrivals=adm.arrivals_total,
+            offered_qps=adm.offered_qps(wall),
+            ingest=ingest_dict)
 
 
 def run_workload(index, queries: np.ndarray, params: SearchParams,
@@ -340,7 +354,8 @@ def run_workload(index, queries: np.ndarray, params: SearchParams,
                  cache_policy: str = "slru",
                  pinned_keys: frozenset | None = None,
                  query_ids: Iterable[int] | None = None,
-                 arrivals: ArrivalProcess | None = None) -> WorkloadReport:
+                 arrivals: ArrivalProcess | None = None,
+                 updates=None, ingest=None) -> WorkloadReport:
     """The one-call evaluation hook: run ``queries`` through the engine.
 
     Accepts either a bare :class:`StorageSpec` plus knobs (the benchmark
@@ -358,4 +373,5 @@ def run_workload(index, queries: np.ndarray, params: SearchParams,
             cache_bytes=cache_bytes, cache_policy=cache_policy,
             pinned_keys=pinned_keys, compute=compute, seed=seed)
     eng = QueryEngine(index, cfg)
-    return eng.run(queries, params, query_ids=query_ids, arrivals=arrivals)
+    return eng.run(queries, params, query_ids=query_ids, arrivals=arrivals,
+                   updates=updates, ingest=ingest)

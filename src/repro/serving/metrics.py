@@ -59,6 +59,7 @@ class WorkloadReport:
     scenario: str = "closed"       # arrival process kind
     n_arrivals: int = 0
     offered_qps: float = 0.0       # arrival rate (== qps when closed-loop)
+    ingest: dict | None = None     # repro.ingest accounting (rw runs)
 
     # ------------------------------------------------ paper metrics ①–⑦ --
     @property
@@ -128,7 +129,7 @@ class WorkloadReport:
         return float(np.mean(recs))
 
     def summary(self) -> dict:
-        return dict(
+        out = dict(
             qps=self.qps,
             mean_latency_s=self.mean_latency,
             p50_latency_s=self.latency_percentile(50),
@@ -141,3 +142,6 @@ class WorkloadReport:
             hit_rate=self.hit_rate,
             storage_requests=self.storage_requests,
         )
+        if self.ingest is not None:
+            out["ingest"] = self.ingest
+        return out

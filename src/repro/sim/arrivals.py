@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.sim.kernel import Kernel
 
-ARRIVAL_KINDS = ("closed", "poisson", "burst", "trace")
+ARRIVAL_KINDS = ("closed", "poisson", "burst", "trace", "rw")
 
 
 def offered_rate(n_arrivals: int, last_arrival_t: float,
@@ -220,7 +220,10 @@ class Scenario:
     """Declarative scenario — what the CLIs and the tuner pass around.
 
     ``kind``: "closed" (paper harness), "poisson" (open loop), "burst"
-    (Poisson with a mid-run spike), "trace" (Zipf-repeated replay).
+    (Poisson with a mid-run spike), "trace" (Zipf-repeated replay),
+    "rw" (closed-loop queries + a live insert/delete stream at
+    ``write_rate_qps`` — the read-write mix ``repro.ingest`` serves).
+    A zero write rate makes "rw" byte-identical to "closed".
     """
 
     kind: str = "closed"
@@ -232,6 +235,9 @@ class Scenario:
     burst_len_s: float = 0.25
     zipf_a: float = 1.2                # trace popularity skew
     slo_s: float = 0.05                # p99 target for goodput/autoscaling
+    write_rate_qps: float = 0.0        # rw: update arrival rate
+    n_updates: int | None = None       # rw: update count cap
+    delete_frac: float = 0.2           # rw: delete share of updates
 
     def __post_init__(self):
         if self.kind not in ARRIVAL_KINDS:
@@ -240,17 +246,25 @@ class Scenario:
                 f"{ARRIVAL_KINDS}")
         if self.slo_s <= 0:
             raise ValueError(f"slo_s must be > 0, got {self.slo_s}")
-        if self.kind != "closed" and self.rate_qps <= 0:
+        if self.kind not in ("closed", "rw") and self.rate_qps <= 0:
             raise ValueError(f"rate_qps must be > 0, got {self.rate_qps}")
         if self.kind == "trace" and self.zipf_a <= 1.0:
             raise ValueError(
                 f"zipf_a must be > 1 (numpy zipf domain), got "
                 f"{self.zipf_a}")
+        if self.write_rate_qps < 0:
+            raise ValueError(f"write_rate_qps must be >= 0, got "
+                             f"{self.write_rate_qps}")
+        if not 0.0 <= self.delete_frac < 1.0:
+            raise ValueError(f"delete_frac must be in [0, 1), got "
+                             f"{self.delete_frac}")
 
     def make_arrivals(self, n_workload: int, concurrency: int,
                       seed: int = 0) -> ArrivalProcess:
-        if self.kind == "closed":
-            return ClosedLoop(concurrency)
+        if self.kind in ("closed", "rw"):
+            # n_arrivals cycles the query set (rw runs use it to keep
+            # read traffic live for the whole write stream)
+            return ClosedLoop(concurrency, n_total=self.n_arrivals)
         n = self.n_arrivals
         dur = self.duration_s
         if n is None and dur is None:
@@ -269,9 +283,25 @@ class Scenario:
         return zipf_trace(n_workload, self.rate_qps, n, a=self.zipf_a,
                           seed=seed)
 
+    def make_updates(self, data, seed: int = 0,
+                     protected: frozenset | None = None):
+        """The rw scenario's write stream (None for read-only kinds or a
+        zero write rate — so a zero-write "rw" run schedules no update
+        events and stays bit-identical to "closed")."""
+        if self.kind != "rw" or self.write_rate_qps <= 0:
+            return None
+        from repro.ingest.stream import synth_updates
+        n = self.n_updates
+        if n is None:
+            n = max(1, int(round(self.write_rate_qps
+                                 * (self.duration_s or 1.0))))
+        return synth_updates(data, self.write_rate_qps, n,
+                             delete_frac=self.delete_frac, seed=seed,
+                             protected=protected)
+
     def to_dict(self) -> dict:
         d = dict(kind=self.kind, slo_s=self.slo_s)
-        if self.kind != "closed":
+        if self.kind not in ("closed", "rw"):
             d.update(rate_qps=self.rate_qps, duration_s=self.duration_s,
                      n_arrivals=self.n_arrivals)
         if self.kind == "burst":
@@ -280,4 +310,8 @@ class Scenario:
                      burst_len_s=self.burst_len_s)
         if self.kind == "trace":
             d.update(zipf_a=self.zipf_a)
+        if self.kind == "rw":
+            d.update(write_rate_qps=self.write_rate_qps,
+                     n_updates=self.n_updates,
+                     delete_frac=self.delete_frac)
         return d

@@ -27,6 +27,12 @@ class ObjectStore:
     def get(self, key: Hashable) -> Any:
         return self._data[key]
 
+    def remove(self, key: Hashable) -> int:
+        """Delete an object (compaction retired it); returns its billable
+        size (0 when absent)."""
+        self._data.pop(key, None)
+        return self._size.pop(key, 0)
+
     def nbytes(self, key: Hashable) -> int:
         return self._size[key]
 

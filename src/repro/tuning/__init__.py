@@ -16,6 +16,11 @@ from repro.tuning.fleet import (FleetOutcome, FleetPoint,
                                 LoadRecommendation, evaluate_fleet_load,
                                 evaluate_fleet_point, tune_fleet,
                                 tune_fleet_for_load)
+from repro.tuning.ingest import (IngestOutcome, IngestPoint,
+                                 IngestPrediction, IngestRecommendation,
+                                 analytic_write_amplification,
+                                 enumerate_ingest_space, screen_ingest,
+                                 tune_ingest)
 from repro.tuning.pareto import hypervolume, pareto_frontier
 from repro.tuning.recommend import Recommendation, autotune
 from repro.tuning.screen import (Prediction, ScreenResult,
@@ -33,4 +38,7 @@ __all__ = [
     "evaluate_fleet_point", "tune_fleet",
     "LoadOutcome", "LoadRecommendation", "evaluate_fleet_load",
     "tune_fleet_for_load",
+    "IngestPoint", "IngestPrediction", "IngestOutcome",
+    "IngestRecommendation", "enumerate_ingest_space", "screen_ingest",
+    "analytic_write_amplification", "tune_ingest",
 ]

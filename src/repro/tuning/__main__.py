@@ -82,7 +82,8 @@ def main(argv: list[str] | None = None) -> int:
     w = WorkloadSpec(n=args.n, dim=args.dim, dtype=args.dtype,
                      target_recall=args.recall,
                      concurrency=args.concurrency, query_dist=args.dist,
-                     zipf_a=args.zipf_a, k=args.k)
+                     zipf_a=args.zipf_a, k=args.k,
+                     write_rate_qps=args.write_rate)
     try:
         storage = resolve_storage(args.storage)
     except KeyError as e:
@@ -115,7 +116,16 @@ def main(argv: list[str] | None = None) -> int:
         budget = None                      # default_budget inside autotune
     rec = autotune(w, env, budget=budget, kinds=tuple(
         k.strip() for k in args.kinds.split(",") if k.strip()))
-    emit_json(rec.to_dict(), args)
+    out = rec.to_dict()
+    if args.write_rate > 0:
+        # the workload churns: also pick the compaction knobs for the
+        # recommended index config (analytic screen; --budget != screen
+        # refines the top points on the real engine)
+        from repro.tuning.ingest import tune_ingest
+        refine = 0 if args.budget == "screen" else 3
+        out["ingest"] = tune_ingest(w, env, rec.config, refine=refine,
+                                    seed=args.seed).to_dict()
+    emit_json(out, args)
     return 0
 
 

@@ -67,6 +67,7 @@ class WorkloadSpec:
     query_dist: str = "sequential"    # "sequential" | "zipf"
     zipf_a: float = 1.2
     k: int = 10
+    write_rate_qps: float = 0.0       # live updates/s (ingest tuning axis)
 
     @property
     def dtype_bytes(self) -> int:
