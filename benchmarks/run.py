@@ -31,6 +31,7 @@ MODULES = [
     "benchmarks.tuner_bench",
     "benchmarks.fleet_bench",
     "benchmarks.ingest_bench",
+    "benchmarks.tenancy_bench",
 ]
 
 

@@ -1,0 +1,208 @@
+"""Multi-tenant cache-sharing bench: policy comparison, interference,
+single-tenant parity, cache-split tuning.
+
+Four measurements (written to ``BENCH_tenancy.json`` at the repo root
+and emitted as CSV rows):
+
+1. **Policy comparison** — the skewed two-tenant scenario (a steady
+   zipf-trace tenant with a hot set vs a bursty wide-scan tenant) under
+   shared / static / weighted cache policies, with per-tenant solo
+   baselines.  Hard checks: the ``weighted`` policy strictly dominates
+   ``static`` on aggregate goodput; the steady tenant's interference
+   ratio under ``weighted`` stays within the documented bound (1.5x
+   solo, docs/tenancy.md) and below the free-sharing ratio; static
+   partitions protect the steady tenant's hit rate vs free sharing.
+2. **Single-tenant parity** — one tenant under ``shared`` reproduces
+   the plain fleet run bit-exactly (ids + wall time), extending the
+   golden-parity chain.
+3. **Cache-split tuning** — ``tune_cache_split`` screens the simplex
+   analytically (Che-approximation miss curves) and refines on real
+   static-policy runs.  Hard check: the recommended split's measured
+   aggregate goodput is the best of the refined candidates.
+
+    PYTHONPATH=src python benchmarks/tenancy_bench.py
+
+Exit status is non-zero if a hard check fails.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+from common import QUICK, emit
+
+from repro.fleet import FleetConfig, run_fleet
+from repro.tenancy import (TENANT_CACHE_POLICIES, Tenant, TenantSpec,
+                           materialize_tenant, run_tenant_fleet)
+from repro.tuning import tune_cache_split
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_tenancy.json")
+
+#: the documented weighted-policy interference bound (docs/tenancy.md)
+WEIGHTED_INTERFERENCE_BOUND = 1.5
+
+_failures: list[str] = []
+
+
+def _check(name: str, ok: bool, detail: str) -> None:
+    print(f"# [{name}] {'PASS' if ok else 'FAIL'}: {detail}",
+          file=sys.stderr)
+    if not ok:
+        _failures.append(name)
+
+
+def _skewed_specs() -> list[TenantSpec]:
+    """The skewed two-tenant scenario: cache-friendly steady traffic vs
+    a cache-polluting burst of wide scans."""
+    n_arr = 64 if QUICK else 128
+    return [
+        TenantSpec(name="steady", n=600, dim=32, n_queries=32, nprobe=8,
+                   scenario="trace", rate_qps=250.0, n_arrivals=n_arr,
+                   zipf_a=1.4, slo_ms=60, weight=1.0),
+        TenantSpec(name="bursty", n=1200, dim=32, n_queries=24,
+                   nprobe=64, scenario="burst", rate_qps=250.0,
+                   n_arrivals=n_arr, burst_factor=10.0,
+                   burst_start_s=0.1, burst_len_s=0.3, slo_ms=150,
+                   weight=1.0),
+    ]
+
+
+def _contended_cfg() -> FleetConfig:
+    return FleetConfig(n_shards=2, replication=2, concurrency=6,
+                       cache_bytes=64 * 1024, cache_policy="slru",
+                       seed=3)
+
+
+def bench_policies() -> dict:
+    cfg = _contended_cfg()
+
+    def mk() -> list[Tenant]:
+        return [materialize_tenant(s, base_seed=cfg.seed, tid=i)
+                for i, s in enumerate(_skewed_specs())]
+
+    steady_solo = materialize_tenant(_skewed_specs()[0],
+                                     base_seed=cfg.seed, tid=0)
+    solo = run_tenant_fleet([steady_solo], cfg, "shared")
+    solo_p99 = solo.tenants[0].sojourn_percentile(99)
+    rows = {}
+    for pol in TENANT_CACHE_POLICIES:
+        rep = run_tenant_fleet(mk(), cfg, pol)
+        rep.tenant("steady").solo_p99_s = solo_p99
+        st = rep.tenant("steady")
+        bu = rep.tenant("bursty")
+        rows[pol] = dict(
+            steady_p99_sojourn_s=round(st.sojourn_percentile(99), 6),
+            steady_hit_rate=round(st.hit_rate, 4),
+            steady_interference=round(st.interference_ratio, 4),
+            bursty_p99_sojourn_s=round(bu.sojourn_percentile(99), 6),
+            bursty_hit_rate=round(bu.hit_rate, 4),
+            aggregate_goodput_qps=round(rep.aggregate_goodput_qps, 2),
+            aggregate_goodput_frac=round(rep.aggregate_goodput_frac, 4),
+            reallocations=rep.reallocations)
+        emit(f"tenancy/policy-{pol}",
+             st.sojourn_percentile(99) * 1e6,
+             steady_p99_ms=st.sojourn_percentile(99) * 1e3,
+             steady_hit=st.hit_rate,
+             interference=st.interference_ratio,
+             agg_goodput=rep.aggregate_goodput_qps)
+    w, s, sh = rows["weighted"], rows["static"], rows["shared"]
+    _check("tenancy-weighted-dominates-static",
+           w["aggregate_goodput_qps"] > s["aggregate_goodput_qps"],
+           f"aggregate goodput weighted={w['aggregate_goodput_qps']} vs "
+           f"static={s['aggregate_goodput_qps']} (want strictly higher)")
+    _check("tenancy-weighted-interference-bounded",
+           w["steady_interference"] <= WEIGHTED_INTERFERENCE_BOUND
+           and w["steady_interference"] < sh["steady_interference"],
+           f"steady interference weighted={w['steady_interference']} "
+           f"(bound {WEIGHTED_INTERFERENCE_BOUND}) vs shared="
+           f"{sh['steady_interference']}")
+    _check("tenancy-static-protects-hit-rate",
+           s["steady_hit_rate"] > sh["steady_hit_rate"],
+           f"steady hit static={s['steady_hit_rate']} vs shared="
+           f"{sh['steady_hit_rate']} (want higher: isolation blocks "
+           f"pollution)")
+    return dict(solo_steady_p99_sojourn_s=round(solo_p99, 6), **rows)
+
+
+def bench_parity() -> dict:
+    """One tenant under ``shared`` == the plain fleet run, bit-exactly."""
+    from repro.core.cluster_index import ClusterIndex
+    from repro.core.types import ClusterIndexParams, SearchParams
+    from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
+    n, nq = (500, 16) if QUICK else (1000, 32)
+    data, queries = make_dataset(scaled(DEEP_ANALOG, n, nq))
+    params = SearchParams(k=10, nprobe=16)
+    cfg = FleetConfig(n_shards=2, replication=2, concurrency=8,
+                      cache_bytes=1 << 20, cache_policy="slru", seed=0)
+
+    def build():
+        return ClusterIndex.build(data, ClusterIndexParams(
+            kmeans_iters=4, seed=0))
+
+    plain = run_fleet(build(), queries, params, cfg)
+    tenant = Tenant(spec=TenantSpec(name="solo"), index=build(),
+                    queries=queries, params=params)
+    ten = run_tenant_fleet([tenant], cfg, "shared")
+    by_qid = {r.qid: r for r in plain.records}
+    ids_equal = all(np.array_equal(r.ids, by_qid[r.qid].ids)
+                    for r in ten.tenants[0].records)
+    wall_equal = ten.fleet.wall_time_s == plain.wall_time_s
+    hit_equal = round(ten.fleet.hit_rate, 12) == round(plain.hit_rate, 12)
+    _check("tenancy-single-tenant-parity",
+           ids_equal and wall_equal and hit_equal,
+           f"ids_equal={ids_equal}, wall {ten.fleet.wall_time_s} vs "
+           f"{plain.wall_time_s}, hit {ten.fleet.hit_rate:.4f} vs "
+           f"{plain.hit_rate:.4f} (want bit-exact)")
+    emit("tenancy/parity-1tenant", 1e6 / max(ten.fleet.qps, 1e-9),
+         fleet_qps=plain.qps, tenant_qps=ten.fleet.qps)
+    return dict(ids_equal=ids_equal, wall_equal=wall_equal,
+                fleet_qps=round(plain.qps, 2),
+                tenant_qps=round(ten.fleet.qps, 2))
+
+
+def bench_tuning() -> dict:
+    cfg = FleetConfig(n_shards=2, replication=1, concurrency=8,
+                      cache_bytes=96 * 1024, cache_policy="slru", seed=0)
+    specs = [TenantSpec(name="hot", n=500, dim=32, n_queries=32,
+                        nprobe=8),
+             TenantSpec(name="cold", n=900, dim=32, n_queries=16,
+                        nprobe=32)]
+    steps, top = (4, 2) if QUICK else (8, 3)
+    rec = tune_cache_split(specs, cfg, steps=steps, refine_top=top)
+    best = max(o.aggregate_goodput_qps for o in rec.outcomes)
+    mine = [o for o in rec.outcomes if o.split == rec.split][0]
+    _check("tenancy-tuner-picks-best-refined",
+           mine.aggregate_goodput_qps >= best - 1e-9,
+           f"recommended split {rec.split.label()} goodput "
+           f"{mine.aggregate_goodput_qps:.2f} vs best {best:.2f}")
+    emit("tenancy/tune-cache-split", mine.aggregate_goodput_qps,
+         split=rec.split.label(), goodput=mine.aggregate_goodput_qps)
+    return rec.to_dict()
+
+
+def main() -> int:
+    results = dict(
+        bench="tenancy",
+        quick=QUICK,
+        policies=bench_policies(),
+        parity=bench_parity(),
+        tuning=bench_tuning(),
+        failures=_failures,
+    )
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {os.path.abspath(OUT_PATH)}", file=sys.stderr)
+    if _failures:
+        print(f"# tenancy_bench: FAILED {_failures}", file=sys.stderr)
+        return 1
+    print("# tenancy_bench: all tenancy checks passed", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,7 @@ Capacities are in bytes (cache sizes in the paper are 1/4/8 GB).
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Hashable, Iterable
+from typing import Callable, Hashable, Iterable
 
 CACHE_POLICIES = ("none", "slru", "pinned")
 
@@ -42,6 +42,7 @@ class SLRUCache:
     def __init__(self, capacity_bytes: int, protected_frac: float = 0.8):
         assert capacity_bytes >= 0
         self.capacity = int(capacity_bytes)
+        self.protected_frac = float(protected_frac)
         self.protected_cap = int(capacity_bytes * protected_frac)
         self.probation: OrderedDict[Hashable, int] = OrderedDict()
         self.protected: OrderedDict[Hashable, int] = OrderedDict()
@@ -49,6 +50,10 @@ class SLRUCache:
         self.protected_bytes = 0
         self.hits = 0
         self.misses = 0
+        #: optional ``fn(key, nbytes)`` fired on every *capacity* eviction
+        #: (not on explicit remove/invalidate) — the hook ghost lists and
+        #: other second-chance structures attach to.
+        self.on_evict: Callable[[Hashable, int], None] | None = None
 
     # ------------------------------------------------------------ stats --
     @property
@@ -112,8 +117,27 @@ class SLRUCache:
 
     def _evict_probation(self) -> None:
         while self.used_bytes > self.capacity and self.probation:
-            _, s = self.probation.popitem(last=False)
+            k, s = self.probation.popitem(last=False)
             self.probation_bytes -= s
+            if self.on_evict is not None:
+                self.on_evict(k, s)
+
+    # ---------------------------------------------------------- resizing --
+    def set_capacity(self, capacity_bytes: int) -> None:
+        """Resize the byte budget in place (the weighted-quota policy's
+        reallocation step).  A shrink demotes protected overflow and then
+        evicts probation LRU-first until the cache fits the new budget;
+        a grow simply raises the ceilings — content is preserved."""
+        if capacity_bytes < 0:
+            raise ValueError(f"capacity must be >= 0, got {capacity_bytes}")
+        self.capacity = int(capacity_bytes)
+        self.protected_cap = int(capacity_bytes * self.protected_frac)
+        while self.protected_bytes > self.protected_cap and self.protected:
+            k, s = self.protected.popitem(last=False)
+            self.protected_bytes -= s
+            self.probation[k] = s
+            self.probation_bytes += s
+        self._evict_probation()
 
     # ----------------------------------------------------- invalidation --
     def remove(self, key: Hashable) -> int:

@@ -19,6 +19,9 @@ Examples:
     # read-write mix: live inserts/deletes + background compaction
     python -m repro.fleet --scenario rw --write-rate 400 \\
         --n-updates 200 --delta-kb 64
+    # multi-tenant: N workloads sharing the fleet's caches + bandwidth
+    python -m repro.fleet --tenants tenants.json --cache-mb 4 \\
+        --cache-policy weighted
 """
 from __future__ import annotations
 
@@ -73,9 +76,134 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--hedge-percentile", type=float, default=95.0)
     p.add_argument("--no-recall", action="store_true",
                    help="skip the exact ground-truth pass")
+    t = p.add_argument_group("tenancy")
+    t.add_argument("--tenants", default=None, metavar="SPEC.JSON",
+                   help="serve N tenant workloads (JSON list of tenant "
+                        "specs; see docs/tenancy.md) over this one fleet")
+    t.add_argument("--cache-policy", default="shared",
+                   choices=["shared", "static", "weighted"],
+                   help="how the per-instance cache budget is split "
+                        "across tenants (--tenants runs only)")
+    t.add_argument("--no-solo", action="store_true",
+                   help="skip the per-tenant solo baseline runs (no "
+                        "interference ratios in the report)")
     add_scenario_args(p)
     add_common_args(p)
     return p
+
+
+def fleet_config_from_args(args, storage) -> FleetConfig:
+    """The one CLI-to-FleetConfig mapping (single- and multi-tenant)."""
+    return FleetConfig(
+        n_shards=args.shards, replication=args.replicas, storage=storage,
+        concurrency=args.concurrency,
+        shard_concurrency=args.shard_concurrency,
+        queue_depth=args.queue_depth,
+        cache_bytes=int(args.cache_mb * 2**20),
+        cache_policy="slru" if args.cache_mb > 0 else "none",
+        hedge=args.hedge, hedge_percentile=args.hedge_percentile,
+        seed=args.seed)
+
+
+def validated_faults(args):
+    """Parse --fail and range-check shard ids against --shards."""
+    try:
+        faults = faults_from_args(args)
+    except ValueError as e:
+        build_parser().error(str(e))
+    if faults is not None:
+        bad = [f.shard for f in faults.faults if f.shard >= args.shards]
+        if bad:
+            build_parser().error(f"--fail shard(s) {bad} out of range for "
+                                 f"--shards {args.shards}")
+    return faults
+
+
+#: single-tenant workload flags that tenant specs own entirely — their
+#: appearing alongside --tenants is a user error, not a silent no-op
+#: (defaults come from the parser itself, so they can never drift)
+_TENANT_OWNED_FLAGS = (
+    "scenario", "rate", "duration", "arrivals", "slo_ms",
+    "burst_factor", "burst_start", "burst_len", "trace_zipf_a",
+    "write_rate", "n_updates", "delete_frac",
+    "delta_kb", "flush_frac", "compaction_par",
+    "index", "n", "dim", "queries", "k", "nprobe", "search_len",
+    "beamwidth",
+)
+
+
+def run_tenancy(args, storage) -> int:
+    """The --tenants path: N workloads over one shared fleet."""
+    from repro.core.flat import exact_topk
+    from repro.tenancy import (Tenant, load_tenant_specs,
+                               materialize_tenant, measure_interference,
+                               run_tenant_fleet)
+    parser = build_parser()
+    dead = [name for name in _TENANT_OWNED_FLAGS
+            if getattr(args, name) != parser.get_default(name)]
+    if dead:
+        parser.error(
+            f"--tenants runs take every workload axis from the tenant "
+            f"spec file; --{'/--'.join(d.replace('_', '-') for d in dead)} "
+            f"would be ignored — set it per tenant in the JSON instead")
+    if args.cache_policy != "shared" and args.cache_mb <= 0:
+        parser.error(
+            f"--cache-policy {args.cache_policy} needs a cache budget "
+            f"(--cache-mb > 0); with no cache there is nothing to "
+            f"partition")
+    try:
+        specs = load_tenant_specs(args.tenants)
+    except (OSError, ValueError) as e:
+        build_parser().error(f"--tenants: {e}")
+    faults = validated_faults(args)
+    if args.autoscale:
+        build_parser().error(
+            "--autoscale composes with --tenants only through a fleet-"
+            "wide SLO, which multi-tenant runs don't have (each tenant "
+            "carries its own); drop one of the two flags")
+    cfg = fleet_config_from_args(args, storage)
+
+    def make_tenants() -> list[Tenant]:
+        return [materialize_tenant(s, base_seed=cfg.seed, tid=i)
+                for i, s in enumerate(specs)]
+
+    # ground truth only needs each tenant's data/queries/update stream,
+    # which the serving runs leave intact — keep the first materialised
+    # list instead of paying the index builds a further time for recall
+    first: list[Tenant] = []
+
+    def tenants_once() -> list[Tenant]:
+        made = make_tenants()
+        if not first:
+            first.extend(made)
+        return made
+
+    if args.no_solo or faults is not None:
+        # interference baselines are only meaningful on a healthy fleet
+        rep = run_tenant_fleet(tenants_once(), cfg, args.cache_policy,
+                               faults=faults,
+                               series_dt=args.series_dt)
+    else:
+        rep = measure_interference(tenants_once, cfg, args.cache_policy,
+                                   series_dt=args.series_dt)
+    out = dict(config=cfg.to_dict(), cache_policy=args.cache_policy,
+               tenant_specs=[s.to_dict() for s in specs],
+               report=rep.summary())
+    if faults is not None:
+        out["fault_schedule"] = faults.to_dicts()
+    if not args.no_recall:
+        recalls = {}
+        for sl, t in zip(rep.tenants, first):
+            if t.updates is not None:
+                from repro.ingest.stream import churn_ground_truth
+                gt = churn_ground_truth(t.data, queries=t.queries,
+                                        k=t.spec.k, stream=t.updates)
+            else:
+                gt, _ = exact_topk(t.data, t.queries, t.spec.k)
+            recalls[sl.name] = round(sl.recall_against(gt), 4)
+        out["recall"] = recalls
+    emit_json(out, args)
+    return 0
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -84,22 +212,19 @@ def main(argv: list[str] | None = None) -> int:
         storage = resolve_storage(args.storage)
     except KeyError as e:
         build_parser().error(str(e.args[0]))
+    if args.tenants is not None:
+        return run_tenancy(args, storage)
     try:
         scenario = scenario_from_args(args)
-        faults = faults_from_args(args)
         autoscale = autoscale_from_args(args)
     except ValueError as e:
         build_parser().error(str(e))
+    faults = validated_faults(args)
     if autoscale is not None and scenario.kind == "closed":
         build_parser().error(
             "--autoscale needs an open-loop --scenario (poisson/burst/"
             "trace): closed-loop sojourns measure drain position, which "
             "would pin the SLO controller at permanent scale-up")
-    if faults is not None:
-        bad = [f.shard for f in faults.faults if f.shard >= args.shards]
-        if bad:
-            build_parser().error(f"--fail shard(s) {bad} out of range for "
-                                 f"--shards {args.shards}")
 
     spec = DatasetSpec("fleet-analog", args.dim, "float32", args.n,
                        args.queries, n_clusters=max(8, min(64, args.n // 16)),
@@ -117,15 +242,7 @@ def main(argv: list[str] | None = None) -> int:
         params = SearchParams(k=args.k, search_len=args.search_len,
                               beamwidth=args.beamwidth)
 
-    cfg = FleetConfig(
-        n_shards=args.shards, replication=args.replicas, storage=storage,
-        concurrency=args.concurrency,
-        shard_concurrency=args.shard_concurrency,
-        queue_depth=args.queue_depth,
-        cache_bytes=int(args.cache_mb * 2**20),
-        cache_policy="slru" if args.cache_mb > 0 else "none",
-        hedge=args.hedge, hedge_percentile=args.hedge_percentile,
-        seed=args.seed)
+    cfg = fleet_config_from_args(args, storage)
     arrivals = scenario.make_arrivals(len(queries), cfg.concurrency,
                                       seed=args.seed)
     updates = None

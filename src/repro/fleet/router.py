@@ -41,6 +41,16 @@ Scenario axes (all deterministic for a given seed):
 * **autoscaling** (:mod:`repro.sim.autoscale`): an SLO controller adds /
   drains shard instances; the report prices the run in shards·seconds.
 
+**Tenancy**: the router serves any number of *tenant contexts*
+(:class:`_TenantCtx`) over the same shard groups — each tenant has its
+own index, partition, arrival process, admission window (its fair share
+of ``concurrency``) and SLO accounting, while caches, NIC bandwidth and
+GET tokens are shared fleet-wide.  Fetch keys are namespaced by tenant
+id, so one instance cache can hold (and a sharing policy can arbitrate)
+every tenant's objects.  The single-tenant :meth:`FleetRouter.run` is
+the degenerate one-context case and reproduces the pre-tenancy reports
+bit-exactly; :mod:`repro.tenancy` builds the N-context runs.
+
 Determinism: one event kernel, (time, seq) total order, per-component
 seeded RNG streams — identical seeds give bit-identical
 :class:`FleetReport` JSON.
@@ -142,6 +152,63 @@ def merge_topk(results: list[SearchResult], k: int
     return dedup_topk(ids[valid], d[valid], k)
 
 
+class _TenantCtx:
+    """One tenant's serving state inside a fleet run.
+
+    The router itself is tenant-agnostic: every query belongs to a
+    context carrying the tenant's index, partition, workload, admission
+    window and SLO bookkeeping.  Fetch keys are namespaced
+    ``(tid, *native_key)`` so stores and caches shared across tenants
+    cannot collide.
+    """
+
+    __slots__ = ("tid", "name", "index", "partition", "kind", "dim",
+                 "pq_m", "queries", "params", "qids", "arrivals", "window",
+                 "weight", "slo_s", "updates", "ingest_cfg", "adm",
+                 "records", "good_total", "ingest_agents", "ingest_report")
+
+    def __init__(self, tid: int, index, partition, queries: np.ndarray,
+                 params: SearchParams, qids: list[int],
+                 arrivals: ArrivalProcess, window: int,
+                 slo_s: float | None = None, weight: float = 1.0,
+                 name: str | None = None, updates=None, ingest_cfg=None):
+        self.tid = tid
+        self.name = name if name is not None else f"tenant{tid}"
+        self.index = index
+        self.partition = partition
+        self.kind = partition.kind
+        self.dim = index.meta.dim
+        pq = getattr(index.meta, "pq", None)
+        self.pq_m = pq.m if pq is not None else 0
+        self.queries = queries
+        self.params = params
+        self.qids = qids
+        self.arrivals = arrivals
+        self.window = window
+        self.weight = weight
+        self.slo_s = slo_s
+        self.updates = updates
+        self.ingest_cfg = ingest_cfg
+        self.adm: AdmissionWindow | None = None
+        self.records: list[FleetQueryRecord] = []
+        self.good_total = 0
+        self.ingest_agents: dict[int, object] = {}
+        self.ingest_report = None
+
+
+class _TenantStore:
+    """Key-dispatching view over the tenants' object stores: the shard
+    engines see one store whose keys are ``(tid, *native_key)``."""
+
+    __slots__ = ("ctxs",)
+
+    def __init__(self, ctxs: list[_TenantCtx]):
+        self.ctxs = ctxs
+
+    def get(self, key):
+        return self.ctxs[key[0]].index.store.get(key[1:])
+
+
 class _Slot:
     """One shard-destined sub-request of one scatter round."""
 
@@ -161,18 +228,19 @@ class _Slot:
 class _FleetQuery:
     """Router-side state machine for one in-flight query."""
 
-    __slots__ = ("idx", "qid", "q", "k", "kind", "gen", "metrics",
+    __slots__ = ("ctx", "idx", "qid", "q", "k", "kind", "gen", "metrics",
                  "start_t", "arrive_t", "snapshot", "rounds", "n_jobs",
                  "shards", "hedged", "shed_retries", "slots", "open_slots",
                  "local_results", "payloads", "done")
 
-    def __init__(self, idx: int, qid: int, q: np.ndarray, kind: str,
+    def __init__(self, ctx: _TenantCtx, idx: int, qid: int, q: np.ndarray,
                  k: int, start_t: float, arrive_t: float):
+        self.ctx = ctx
         self.idx = idx
         self.qid = qid
         self.q = q
         self.k = k
-        self.kind = kind
+        self.kind = ctx.kind
         self.gen = None
         self.metrics = QueryMetrics()
         self.start_t = start_t
@@ -240,8 +308,9 @@ class FleetRouter:
         self.dim = index.meta.dim
         pq = getattr(index.meta, "pq", None)
         self.pq_m = pq.m if pq is not None else 0
-        self._ingest_agents: dict[int, object] = {}
-        self._ingest_report = None
+        #: tenancy installs a per-instance cache-assembly factory here
+        #: (None -> each ShardServer builds cfg.make_cache())
+        self._cache_factory = None
 
     def _shard_engine_cfg(self, shard_id: int, instance: int
                           ) -> EngineConfig:
@@ -256,10 +325,11 @@ class FleetRouter:
         cfg = self.cfg
         return ShardServer(
             shard_id, self._shard_engine_cfg(shard_id, instance),
-            self.index.store, kernel=self.kernel, dim=self.dim,
-            pq_m=self.pq_m, instance=instance,
+            self._store, kernel=self.kernel, dim=self.ctxs[0].dim,
+            pq_m=self.ctxs[0].pq_m, instance=instance,
             max_inflight=cfg.shard_concurrency,
-            queue_depth=cfg.queue_depth, on_complete=self._job_done)
+            queue_depth=cfg.queue_depth, on_complete=self._job_done,
+            cache_factory=self._cache_factory)
 
     # ------------------------------------------------------------- run ---
     def run(self, queries: np.ndarray, params: SearchParams,
@@ -283,32 +353,68 @@ class FleetRouter:
             range(len(queries)))
         arr = arrivals if arrivals is not None else ClosedLoop(
             cfg.concurrency, n_total=len(queries))
+        window = arr.window if arr.window is not None else cfg.concurrency
+        ctx = _TenantCtx(
+            0, self.index, self.partition, queries, params, qids, arr,
+            window,
+            slo_s=(autoscale.slo_p99_s if autoscale is not None
+                   and slo_s is None else slo_s),
+            updates=updates, ingest_cfg=ingest)
+        wall = self._execute([ctx], faults=faults, autoscale=autoscale,
+                             series_dt=series_dt)
+        self.index = ctx.index          # make_mutable may have wrapped it
+        stats = [srv.finalize_stats() for g in self.groups
+                 for srv in g.all_servers()]
+        shards_seconds = sum(srv.active_seconds(wall) for g in self.groups
+                             for srv in g.all_servers())
+        ingest_dict = None
+        if ctx.ingest_report is not None:
+            ingest_dict = ctx.ingest_report.to_dict(ctx.records)
+        return FleetReport(
+            records=ctx.records, shard_stats=stats, wall_time_s=wall,
+            n_shards=cfg.n_shards, replication=cfg.replication,
+            concurrency=cfg.concurrency, jobs_total=self._jobs_total,
+            hedges_launched=self._hedges, hedge_wins=self._hedge_wins,
+            sheds_total=sum(s.sheds for s in stats),
+            submissions_total=sum(s.submissions for s in stats),
+            scenario=arr.kind, n_arrivals=ctx.adm.arrivals_total,
+            offered_qps=ctx.adm.offered_qps(wall), slo_s=ctx.slo_s,
+            good_total=ctx.good_total if ctx.slo_s is not None else None,
+            series=self._series, shards_seconds=shards_seconds,
+            scale_events=(self._autoscaler.events
+                          if self._autoscaler is not None else None),
+            fault_log=self._fault_log if faults is not None else None,
+            ingest=ingest_dict)
+
+    def _execute(self, ctxs: list[_TenantCtx], *,
+                 faults: FaultSchedule | None = None,
+                 autoscale: AutoscaleConfig | None = None,
+                 series_dt: float | None = None) -> float:
+        """Drive the shared kernel over all tenant contexts; returns the
+        run's wall time.  One context reproduces the pre-tenancy event
+        sequence exactly (same RNG streams, same scheduling order)."""
+        cfg = self.cfg
+        self.ctxs = ctxs
+        self._store = _TenantStore(ctxs)
         self.kernel = Kernel(seed=cfg.seed)
         self.groups = [ShardGroup(s, self._spawn_server)
                        for s in range(cfg.n_shards)]
-        self._queries = queries
-        self._params = params
-        self._qids = qids
-        self._window = arr.window if arr.window is not None \
-            else cfg.concurrency
-        self._adm = AdmissionWindow(
-            self.kernel, self._window,
-            lambda item, t: self._begin_query(item[0], item[1], t))
+        for ctx in ctxs:
+            ctx.adm = AdmissionWindow(
+                self.kernel, ctx.window,
+                lambda item, t, ctx=ctx: self._begin_query(
+                    ctx, item[0], item[1], t))
         self._ctx: dict[int, tuple] = {}   # tag -> (query, slot, attempt, t)
+        self._live_queries: set[_FleetQuery] = set()
         self._tag_seq = 0
         self._slot_seq = 0
         self._lat: deque = deque(maxlen=256)
         self._rng = self.kernel.rng("router", seed=cfg.seed ^ 0xF1EE7)
-        self._records: list[FleetQueryRecord] = []
         self._jobs_total = 0
         self._hedges = 0
         self._hedge_wins = 0
         self._retry_pending = 0
         self._fault_log: list[dict] = []
-        # SLO / goodput accounting
-        self._slo = autoscale.slo_p99_s if autoscale is not None \
-            and slo_s is None else slo_s
-        self._good_total = 0
         self.recent_sojourns: deque = deque(
             maxlen=autoscale.window if autoscale is not None else 256)
         # monitor + controller processes
@@ -316,7 +422,8 @@ class FleetRouter:
         self._monitor = None
         self._slice_counts = [0, 0, 0]     # arrived, completed, good
         need_monitor = (series_dt is not None or autoscale is not None
-                        or faults is not None or arr.kind != "closed")
+                        or faults is not None or len(ctxs) > 1
+                        or any(c.arrivals.kind != "closed" for c in ctxs))
         if need_monitor:
             dt = series_dt if series_dt is not None else 0.05
             self._series = FleetSeries(dt=dt)
@@ -327,105 +434,97 @@ class FleetRouter:
             self._autoscaler.start(self.kernel)
         if faults is not None:
             faults.install(self.kernel, self)
-        self._ingest_agents: dict[int, object] = {}
-        self._ingest_report = None
-        if updates is not None and len(updates):
-            self._setup_ingest(ingest)
-            updates.start(self.kernel, self._deliver_update)
+        for ctx in ctxs:
+            if ctx.updates is not None and len(ctx.updates):
+                self._setup_ingest(ctx)
+                ctx.updates.start(
+                    self.kernel,
+                    lambda op, ctx=ctx: self._deliver_update(ctx, op))
 
-        arr.start(self.kernel, self._arrive, len(queries),
-                  done=self._arrivals_exhausted)
+        for ctx in ctxs:
+            ctx.arrivals.start(
+                self.kernel,
+                lambda ai, wi, ctx=ctx: self._arrive(ctx, ai, wi),
+                len(ctx.queries),
+                done=lambda ctx=ctx: self._arrivals_exhausted(ctx))
         self.kernel.run()
 
-        wall = max((r.end_t for r in self._records), default=0.0)
+        wall = max((r.end_t for ctx in ctxs for r in ctx.records),
+                   default=0.0)
         if self._series is not None:
             self._flush_slice(wall)
-        stats = [srv.finalize_stats() for g in self.groups
-                 for srv in g.all_servers()]
-        shards_seconds = sum(srv.active_seconds(wall) for g in self.groups
-                             for srv in g.all_servers())
-        offered = self._adm.offered_qps(wall)
-        ingest_dict = None
-        if self._ingest_report is not None:
-            for agent in self._ingest_agents.values():
-                agent.finalize()
-            ingest_dict = self._ingest_report.to_dict(self._records)
-        return FleetReport(
-            records=self._records, shard_stats=stats, wall_time_s=wall,
-            n_shards=cfg.n_shards, replication=cfg.replication,
-            concurrency=cfg.concurrency, jobs_total=self._jobs_total,
-            hedges_launched=self._hedges, hedge_wins=self._hedge_wins,
-            sheds_total=sum(s.sheds for s in stats),
-            submissions_total=sum(s.submissions for s in stats),
-            scenario=arr.kind, n_arrivals=self._adm.arrivals_total,
-            offered_qps=offered, slo_s=self._slo,
-            good_total=self._good_total if self._slo is not None else None,
-            series=self._series, shards_seconds=shards_seconds,
-            scale_events=(self._autoscaler.events
-                          if self._autoscaler is not None else None),
-            fault_log=self._fault_log if faults is not None else None,
-            ingest=ingest_dict)
+        for ctx in ctxs:
+            if ctx.ingest_report is not None:
+                for agent in ctx.ingest_agents.values():
+                    agent.finalize()
+        return wall
 
     # ----------------------------------------------------------- ingest --
-    def _setup_ingest(self, ingest_cfg) -> None:
+    def _setup_ingest(self, ctx: _TenantCtx) -> None:
         """One :class:`IngestAgent` per shard group: independent delta
         tier, apply queue and compaction schedule, with compaction I/O
         charged through the group's live instances' storage sims."""
         from repro.ingest.compaction import IngestAgent, IngestConfig
         from repro.ingest.metrics import IngestReport
         from repro.ingest.mutable import make_mutable
-        self.index = make_mutable(self.index)
-        self._ingest_report = IngestReport()
-        cfg = ingest_cfg if ingest_cfg is not None else IngestConfig()
+        ctx.index = make_mutable(ctx.index)
+        ctx.ingest_report = IngestReport()
+        cfg = ctx.ingest_cfg if ctx.ingest_cfg is not None else \
+            IngestConfig()
         for g in self.groups:
             owned = None
-            if self.kind == "cluster":
-                owned = {li for li in range(self.index.meta.n_lists)
+            if ctx.kind == "cluster":
+                owned = {li for li in range(ctx.index.meta.n_lists)
                          if g.shard_id in
-                         self.partition.owners(("list", li))}
+                         ctx.partition.owners(("list", li))}
 
             def provider(g=g):
                 srv = g.pick()
                 return srv.engine.sim if srv is not None else None
 
-            self._ingest_agents[g.shard_id] = IngestAgent(
-                self.index, site_id=g.shard_id, kernel=self.kernel,
+            ctx.ingest_agents[g.shard_id] = IngestAgent(
+                ctx.index, site_id=g.shard_id, kernel=self.kernel,
                 cfg=cfg, compute=self.cfg.compute, sim_provider=provider,
-                report=self._ingest_report,
-                invalidate=self._invalidate_key,
-                on_new_list=self._on_new_list, owned_lists=owned)
+                report=ctx.ingest_report,
+                invalidate=lambda key, ctx=ctx: self._invalidate_key(
+                    ctx.tid, key),
+                on_new_list=lambda new_li, parent_li, ctx=ctx:
+                    self._on_new_list(ctx, new_li, parent_li),
+                owned_lists=owned, inflight_floor=self.inflight_floor)
 
-    def _invalidate_key(self, key) -> None:
+    def _invalidate_key(self, tid: int, key) -> None:
         """Broadcast a rewritten object's staleness to every instance
         cache (non-owners never cached the key; dropping is a no-op)."""
+        wrapped = (tid,) + key
         for g in self.groups:
             for srv in g.all_servers():
-                srv.invalidate(key)
+                srv.invalidate(wrapped)
 
-    def _on_new_list(self, new_li: int, parent_li: int) -> None:
+    def _on_new_list(self, ctx: _TenantCtx, new_li: int,
+                     parent_li: int) -> None:
         """A re-cluster split: the new posting list inherits the parent's
         replica owners (no data movement) and joins owned-list sets."""
-        self.partition.inherit(new_li, parent_li)
-        owners = set(self.partition.owners(("list", new_li)))
-        for sid, agent in self._ingest_agents.items():
+        ctx.partition.inherit(new_li, parent_li)
+        owners = set(ctx.partition.owners(("list", new_li)))
+        for sid, agent in ctx.ingest_agents.items():
             if agent.owned_lists is not None and sid in owners:
                 agent.owned_lists.add(new_li)
 
-    def _deliver_update(self, op) -> None:
+    def _deliver_update(self, ctx: _TenantCtx, op) -> None:
         """Route one update to the shard groups owning its keys.  Each
         owner group applies its own copy — delta-tier replication
         mirroring the sealed replication, so any replica owner can serve
         a probed list's fresh points."""
-        if self.kind == "cluster":
+        if ctx.kind == "cluster":
             if op.kind == "insert":
-                lists, ndist = self.index.assign_lists(op.vec)
+                lists, ndist = ctx.index.assign_lists(op.vec)
             else:
-                lists, ndist = self.index.lists_of(op.id), 0
+                lists, ndist = ctx.index.lists_of(op.id), 0
             owner_set = {s for li in lists
-                         for s in self.partition.owners(("list", li))}
+                         for s in ctx.partition.owners(("list", li))}
             if op.kind == "delete":
                 # the victim may still be delta-only on some sites
-                for sid, mem in self.index.sites.items():
+                for sid, mem in ctx.index.sites.items():
                     if op.id in mem.entries:
                         owner_set.add(sid)
                 if not owner_set:
@@ -435,9 +534,9 @@ class FleetRouter:
                     # the sites that will hold it, and a spurious
                     # tombstone elsewhere clears at that site's next
                     # flush
-                    owner_set = set(self._ingest_agents)
+                    owner_set = set(ctx.ingest_agents)
             for s in sorted(owner_set):
-                agent = self._ingest_agents[s]
+                agent = ctx.ingest_agents[s]
                 mine = tuple(li for li in lists if agent.owned_lists
                              is None or li in agent.owned_lists)
                 agent.deliver(op, lists=mine, ndist=ndist)
@@ -445,22 +544,24 @@ class FleetRouter:
             # graph delta is single-homed on the primary hash owner; the
             # router's merged search reads every site, so placement does
             # not affect visibility.
-            owner = self.partition.owners(("node", op.id))[0]
-            self._ingest_agents[owner].deliver(op, lists=(), ndist=0)
+            owner = ctx.partition.owners(("node", op.id))[0]
+            ctx.ingest_agents[owner].deliver(op, lists=(), ndist=0)
 
     # ------------------------------------------------- arrivals / window --
-    def _arrive(self, arrival_idx: int, workload_idx: int) -> None:
+    def _arrive(self, ctx: _TenantCtx, arrival_idx: int,
+                workload_idx: int) -> None:
         self._slice_counts[0] += 1
-        self._adm.offer((arrival_idx, workload_idx), key=arrival_idx)
+        ctx.adm.offer((arrival_idx, workload_idx), key=arrival_idx)
 
-    def _arrivals_exhausted(self) -> None:
-        self._adm.mark_exhausted()
+    def _arrivals_exhausted(self, ctx: _TenantCtx) -> None:
+        ctx.adm.mark_exhausted()
         self._maybe_shutdown()
 
     def _maybe_shutdown(self) -> None:
-        """Stop the monitor/controller tickers once the workload drains —
-        they would otherwise keep the kernel alive forever."""
-        if not self._adm.drained:
+        """Stop the monitor/controller tickers once every tenant's
+        workload drains — they would otherwise keep the kernel alive
+        forever."""
+        if not all(ctx.adm.drained for ctx in self.ctxs):
             return
         if self._monitor is not None:
             self._monitor.cancel()
@@ -475,29 +576,36 @@ class FleetRouter:
         fq.snapshot = (m.dist_comps, m.pq_dist_comps)
         return plan_compute_seconds(m.dist_comps - d0,
                                     m.pq_dist_comps - p0,
-                                    self.dim, self.pq_m, self.cfg.compute)
+                                    fq.ctx.dim, fq.ctx.pq_m,
+                                    self.cfg.compute)
 
-    def _begin_query(self, arrival_idx: int, workload_idx: int,
-                     t: float) -> None:
-        q = self._queries[workload_idx]
-        fq = _FleetQuery(arrival_idx, self._qids[workload_idx], q,
-                         self.kind, self._params.k, t,
-                         self._adm.pop_arrive_t(arrival_idx))
-        meta = self.index.meta
-        if self.kind == "cluster":
-            lids, ndist = self.index.select_lists(q, self._params.nprobe)
+    def _begin_query(self, ctx: _TenantCtx, arrival_idx: int,
+                     workload_idx: int, t: float) -> None:
+        q = ctx.queries[workload_idx]
+        fq = _FleetQuery(ctx, arrival_idx, ctx.qids[workload_idx], q,
+                         ctx.params.k, t,
+                         ctx.adm.pop_arrive_t(arrival_idx))
+        self._live_queries.add(fq)
+        meta = ctx.index.meta
+        if ctx.kind == "cluster":
+            lids, ndist = ctx.index.select_lists(q, ctx.params.nprobe)
             fq.metrics.dist_comps += ndist
             fq.metrics.lists_visited = len(lids)
-            reqs = [FetchRequest(("list", int(i)),
+            reqs = [FetchRequest((ctx.tid, "list", int(i)),
                                  int(meta.list_nbytes[i])) for i in lids]
             self.kernel.at(t + self._price(fq), self._scatter, fq, reqs)
         else:
-            fq.gen = self.index.search_plan(q, self._params, fq.metrics)
+            fq.gen = ctx.index.search_plan(q, ctx.params, fq.metrics)
             batch = next(fq.gen)
-            self.kernel.at(t + self._price(fq), self._scatter, fq,
-                           list(batch.requests))
+            reqs = [FetchRequest((ctx.tid,) + rq.key, rq.nbytes)
+                    for rq in batch.requests]
+            self.kernel.at(t + self._price(fq), self._scatter, fq, reqs)
 
     # ---------------------------------------------------------- scatter --
+    def _owners(self, fq: _FleetQuery, key) -> tuple[int, ...]:
+        """Replica owners of a tenant-namespaced fetch key."""
+        return fq.ctx.partition.owners(key[1:])
+
     def _group_has_capacity(self, shard: int) -> bool:
         srv = self.groups[shard].pick()
         return srv is not None and srv.has_capacity
@@ -533,7 +641,7 @@ class FleetRouter:
         fq.payloads = {}
         groups: dict[int | None, list[FetchRequest]] = {}
         for rq in reqs:
-            shard = self._pick_replica(self.partition.owners(rq.key))
+            shard = self._pick_replica(self._owners(fq, rq.key))
             groups.setdefault(shard, []).append(rq)
         order = sorted(groups, key=lambda s: (s is None, s))
         for shard in order:
@@ -551,14 +659,15 @@ class FleetRouter:
 
     def _make_plan(self, fq: _FleetQuery, reqs: list[FetchRequest],
                    metrics: QueryMetrics, shard: int):
-        if self.kind == "cluster":
+        ctx = fq.ctx
+        if ctx.kind == "cluster":
             delta_fn = dead_fn = None
-            if self._ingest_agents:
-                mem = self.index.sites.get(shard)
-                lids = tuple(int(rq.key[1]) for rq in reqs)
+            if ctx.ingest_agents:
+                mem = ctx.index.sites.get(shard)
+                lids = tuple(int(rq.key[2]) for rq in reqs)
                 if mem is not None:
                     delta_fn = lambda: mem.live_items(lids)  # noqa: E731
-                dead_fn = self.index.deleted_array
+                dead_fn = ctx.index.deleted_array
             return _scan_plan(fq.q, reqs, fq.k, metrics,
                               delta_fn=delta_fn, dead_fn=dead_fn)
         return _fetch_plan(reqs)
@@ -583,7 +692,7 @@ class FleetRouter:
             return
         groups: dict[int, list[FetchRequest]] = {}
         for rq in slot.reqs:
-            owners = self.partition.owners(rq.key)
+            owners = self._owners(fq, rq.key)
             shard = self._pick_replica(
                 owners, exclude=slot.shard if len(owners) > 1 else None)
             if shard is None:                  # every owner is down
@@ -620,7 +729,9 @@ class FleetRouter:
         tag = self._tag_seq
         self._tag_seq += 1
         plan = self._make_plan(fq, slot.reqs, metrics, shard)
-        if srv is not None and srv.try_submit(t, plan, metrics, tag):
+        if srv is not None and srv.try_submit(t, plan, metrics, tag,
+                                              dim=fq.ctx.dim,
+                                              pq_m=fq.ctx.pq_m):
             slot.outstanding.setdefault(0, set()).add(tag)
             slot.collected.setdefault(0, [])
             self._ctx[tag] = (fq, slot, 0, t)
@@ -645,7 +756,7 @@ class FleetRouter:
         slot.hedge_launched = True
         groups: dict[int, list[FetchRequest]] = {}
         for rq in slot.reqs:
-            owners = self.partition.owners(rq.key)
+            owners = self._owners(fq, rq.key)
             alt = [s for s in owners
                    if s != slot.shard and self.groups[s].alive]
             if not alt:
@@ -668,7 +779,9 @@ class FleetRouter:
             tag = self._tag_seq
             self._tag_seq += 1
             plan = self._make_plan(fq, groups[shard], metrics, shard)
-            self.groups[shard].pick().try_submit(t, plan, metrics, tag)
+            self.groups[shard].pick().try_submit(t, plan, metrics, tag,
+                                                 dim=fq.ctx.dim,
+                                                 pq_m=fq.ctx.pq_m)
             slot.outstanding[1].add(tag)
             self._ctx[tag] = (fq, slot, 1, t)
             self._jobs_total += 1
@@ -693,17 +806,18 @@ class FleetRouter:
         slot.done = True
         if attempt > 0:
             self._hedge_wins += 1
-        if self.kind == "cluster":
+        if fq.kind == "cluster":
             fq.local_results.extend(slot.collected[attempt])
         else:
             for payloads in slot.collected[attempt]:
-                fq.payloads.update(payloads)
+                for key, val in payloads.items():
+                    fq.payloads[key[1:]] = val     # un-namespace for plan
         fq.open_slots -= 1
         if fq.open_slots == 0:
             self._round_done(fq, job.end_t)
 
     def _round_done(self, fq: _FleetQuery, t: float) -> None:
-        if self.kind == "cluster":
+        if fq.kind == "cluster":
             ids, dists = merge_topk(fq.local_results, fq.k)
             self._finish_query(fq, t, ids, dists)
             return
@@ -715,19 +829,30 @@ class FleetRouter:
             batch = fq.gen.send(fq.payloads)
         except StopIteration as stop:
             res = stop.value
-            if self._ingest_agents:
+            if fq.ctx.ingest_agents:
                 # router-side delta merge + tombstone filter: the graph
                 # delta lives in site memtables the beam never traversed
-                res = self.index.merge_result(fq.q, fq.k, res, fq.metrics)
+                res = fq.ctx.index.merge_result(fq.q, fq.k, res,
+                                                fq.metrics)
             self._finish_query(fq, t + self._price(fq), res.ids, res.dists)
             return
-        self.kernel.at(t + self._price(fq), self._scatter, fq,
-                       list(batch.requests))
+        reqs = [FetchRequest((fq.ctx.tid,) + rq.key, rq.nbytes)
+                for rq in batch.requests]
+        self.kernel.at(t + self._price(fq), self._scatter, fq, reqs)
+
+    def inflight_floor(self) -> float:
+        """Earliest start time among in-flight queries (inf when idle) —
+        the reclamation safety line: no corpse unlinked before it can
+        still be referenced by any live sub-request."""
+        return min((fq.start_t for fq in self._live_queries),
+                   default=float("inf"))
 
     def _finish_query(self, fq: _FleetQuery, t: float, ids: np.ndarray,
                       dists: np.ndarray) -> None:
         fq.done = True
-        self._records.append(FleetQueryRecord(
+        self._live_queries.discard(fq)
+        ctx = fq.ctx
+        ctx.records.append(FleetQueryRecord(
             qid=fq.qid, start_t=fq.start_t, end_t=t, ids=ids, dists=dists,
             metrics=fq.metrics, rounds=fq.rounds, n_jobs=fq.n_jobs,
             shards_touched=len(fq.shards), hedged=fq.hedged,
@@ -735,10 +860,10 @@ class FleetRouter:
         sojourn = t - fq.arrive_t
         self.recent_sojourns.append(sojourn)
         self._slice_counts[1] += 1
-        if self._slo is not None and sojourn <= self._slo:
-            self._good_total += 1
+        if ctx.slo_s is not None and sojourn <= ctx.slo_s:
+            ctx.good_total += 1
             self._slice_counts[2] += 1
-        if not self._adm.release(t):
+        if not ctx.adm.release(t):
             self._maybe_shutdown()
 
     # ------------------------------------------------- faults / scaling --
@@ -806,7 +931,7 @@ class FleetRouter:
 
     # ----------------------------------------------------------- monitor --
     def _queue_depth(self) -> int:
-        depth = self._adm.depth + self._retry_pending
+        depth = self._retry_pending + sum(c.adm.depth for c in self.ctxs)
         for g in self.groups:
             depth += sum(s.load for s in g.instances)
         return depth

@@ -68,7 +68,8 @@ class ShardServer:
                  kernel: Kernel, dim: int, pq_m: int = 0, instance: int = 0,
                  max_inflight: int = 4, queue_depth: int = 16,
                  on_complete: Callable[["ShardServer", JobRecord], None]
-                 | None = None):
+                 | None = None,
+                 cache_factory: Callable[[], object] | None = None):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         if queue_depth < 0:
@@ -80,10 +81,14 @@ class ShardServer:
         self.queue_depth = queue_depth
         self.on_complete = on_complete
         self.on_retired: Callable[["ShardServer"], None] | None = None
-        self.engine = SteppableEngine(cfg, store, cfg.make_cache(),
+        # tenancy hands in a factory building tenant-aware cache
+        # assemblies; default is the config's single-tenant cache path
+        self._cache_factory = cache_factory if cache_factory is not None \
+            else cfg.make_cache
+        self.engine = SteppableEngine(cfg, store, self._cache_factory(),
                                       kernel=kernel, dim=dim, pq_m=pq_m,
                                       on_complete=self._job_done)
-        self._queue: deque = deque()       # (plan, metrics, tag)
+        self._queue: deque = deque()       # (plan, metrics, tag, dim, pq_m)
         self.stats = ShardStats(shard_id=shard_id, instance=instance)
         self.alive = True
         self.draining = False
@@ -111,18 +116,23 @@ class ShardServer:
             self.engine.in_flight < self.max_inflight
             or len(self._queue) < self.queue_depth)
 
-    def try_submit(self, t: float, plan, metrics, tag) -> bool:
-        """Admit a job at virtual time ``t``; False means shed."""
+    def try_submit(self, t: float, plan, metrics, tag,
+                   dim: int | None = None, pq_m: int | None = None) -> bool:
+        """Admit a job at virtual time ``t``; False means shed.
+
+        ``dim``/``pq_m``: per-job compute-pricing geometry (tenants of
+        different index shapes share one shard engine)."""
         if not self.routable:
             return False
         self.stats.submissions += 1
         if self.engine.in_flight < self.max_inflight:
-            self.engine.submit(plan, metrics, tag=tag, at=t)
+            self.engine.submit(plan, metrics, tag=tag, at=t,
+                               dim=dim, pq_m=pq_m)
             self.stats.peak_inflight = max(self.stats.peak_inflight,
                                            self.engine.in_flight)
             return True
         if len(self._queue) < self.queue_depth:
-            self._queue.append((plan, metrics, tag))
+            self._queue.append((plan, metrics, tag, dim, pq_m))
             self.stats.peak_queue = max(self.stats.peak_queue,
                                         len(self._queue))
             return True
@@ -138,8 +148,9 @@ class ShardServer:
         self.stats.jobs_done += 1
         self.stats.busy_s += job.latency
         if self._queue and self.engine.in_flight < self.max_inflight:
-            plan, metrics, tag = self._queue.popleft()
-            self.engine.submit(plan, metrics, tag=tag, at=job.end_t)
+            plan, metrics, tag, dim, pq_m = self._queue.popleft()
+            self.engine.submit(plan, metrics, tag=tag, at=job.end_t,
+                               dim=dim, pq_m=pq_m)
         if self.on_complete is not None:
             self.on_complete(self, job)
         if self.draining and self.idle and self.on_retired is not None:
@@ -153,7 +164,7 @@ class ShardServer:
             return []
         self.alive = False
         self.stats.failures += 1
-        tags = [tag for _, _, tag in self._queue]
+        tags = [item[2] for item in self._queue]
         self._queue.clear()
         tags = self.engine.abort_all() + tags
         self.stats.jobs_aborted += len(tags)
@@ -168,7 +179,7 @@ class ShardServer:
         if self.alive or self.draining:
             return
         self.alive = True
-        self.engine.cache = self.cfg.make_cache()
+        self.engine.cache = self._cache_factory()
         self.active_intervals.append([t, None])
 
     def retire(self, t: float) -> None:

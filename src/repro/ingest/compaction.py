@@ -56,6 +56,11 @@ class IngestConfig:
     overflow_factor: float = 2.0        # list length vs build avg
     recluster: bool = True              # split overflowed lists
     graph_stitch_L: int = 32            # candidate pool per stitched node
+    #: retired graph blocks stay readable (unlinked, unbilled) this many
+    #: virtual seconds before a flush install may purge them — must
+    #: exceed the longest a query sub-request can stay parked (shed
+    #: backoff, fault windows) while holding a pre-compaction reference
+    reclaim_grace_s: float = 1.0
 
     def __post_init__(self):
         if self.delta_cap_bytes <= 0:
@@ -70,6 +75,9 @@ class IngestConfig:
         if self.overflow_factor <= 1.0:
             raise ValueError(f"overflow_factor must be > 1, got "
                              f"{self.overflow_factor}")
+        if self.reclaim_grace_s < 0:
+            raise ValueError(f"reclaim_grace_s must be >= 0, got "
+                             f"{self.reclaim_grace_s}")
 
     def to_dict(self) -> dict:
         return dict(delta_cap_bytes=self.delta_cap_bytes,
@@ -89,7 +97,8 @@ class IngestAgent:
                  report: IngestReport,
                  invalidate: Callable[[object], None] | None = None,
                  on_new_list: Callable[[int, int], None] | None = None,
-                 owned_lists: set | None = None):
+                 owned_lists: set | None = None,
+                 inflight_floor: Callable[[], float] | None = None):
         self.mutable = mutable
         self.site_id = site_id
         self.kernel = kernel
@@ -100,6 +109,10 @@ class IngestAgent:
         self.invalidate = invalidate or (lambda key: None)
         self.on_new_list = on_new_list
         self.owned_lists = owned_lists
+        # earliest start time of any in-flight query (the serving
+        # driver's view); corpses younger than it may still be
+        # referenced by a parked sub-request, however long it parks
+        self.inflight_floor = inflight_floor
         self.mem = mutable.site(site_id)
         self.dim = mutable.meta.dim
         pq = getattr(mutable.meta, "pq", None)
@@ -429,7 +442,19 @@ class IngestAgent:
     def _flush_graph_install(self, entries, tombs, new_nodes, rewrites,
                              dels, t0: float) -> None:
         now = self.kernel.now
-        stale = self.mutable.install_graph(new_nodes, rewrites, dels)
+        # reclaim corpses no in-flight query can reference: a query that
+        # started after a block's unlink can never reach it (its wounded
+        # neighbours were rewritten in the same install), so purge up to
+        # the oldest in-flight query's start — parked sub-requests (shed
+        # backoff, fault windows) keep their query in flight and their
+        # corpses alive however long they park.  The grace window is a
+        # belt-and-braces cap for drivers that supply no floor.
+        floor = self.inflight_floor() if self.inflight_floor is not None \
+            else now
+        self.mutable.store.purge_lingering(
+            before=min(now - self.cfg.reclaim_grace_s, floor))
+        stale = self.mutable.install_graph(new_nodes, rewrites, dels,
+                                           t=now)
         self.mem.clear_flushed(entries, tombs)
         self.report.record_seal(
             [now - e.arrive_t for _, e in sorted(entries.items())]

@@ -439,11 +439,13 @@ class MutableGraphIndex(_MutableBase):
     def install_graph(self, new_nodes: dict[int, tuple[np.ndarray,
                                                        np.ndarray]],
                       rewrites: dict[int, np.ndarray],
-                      removed: list[int]) -> list:
+                      removed: list[int], t: float = 0.0) -> list:
         """Atomically swap in a compaction round's sealed graph state.
 
         ``new_nodes``: id → (vector, adjacency); ``rewrites``: existing
-        id → new adjacency; ``removed``: deleted ids whose blocks retire.
+        id → new adjacency; ``removed``: deleted ids whose blocks retire
+        (``t``: the install's virtual time, stamped on the unlinked
+        corpses for grace-based purging).
         Returns the store keys whose cached copies are now stale.
         """
         meta = self.meta
@@ -477,7 +479,7 @@ class MutableGraphIndex(_MutableBase):
             stale.append(("node", id_))
         for id_ in sorted(removed):
             if ("node", id_) in self.store:
-                self._retire(id_)
+                self._retire(id_, t)
                 stale.append(("node", id_))
         meta.n_data = max(meta.n_data, max_id)
         return stale
@@ -498,12 +500,17 @@ class MutableGraphIndex(_MutableBase):
         for t in adj:
             self._rev.setdefault(int(t), set()).add(id_)
 
-    def _retire(self, id_: int) -> None:
-        """Retire a repaired-around node: adjacency and reverse edges go;
-        the block itself stays in the store as unreachable garbage until
-        space reclamation (queries already in flight may still fetch it —
-        tombstone filtering keeps it out of their results).  Re-elects
-        the medoid if the entry point died."""
+    def _retire(self, id_: int, t: float = 0.0) -> None:
+        """Retire a repaired-around node: adjacency and reverse edges go,
+        and the block is **unlinked** from the store — its bytes are
+        reclaimed immediately, while the payload lingers readable for
+        queries already in flight (a plan may hold a pre-compaction
+        adjacency that still points at the victim; tombstone filtering
+        keeps it out of their results).  Lingering corpses are purged by
+        later flush installs once they outlive the reclaim grace window
+        (covering readers parked by shed backoff or fault windows).
+        Re-elects the medoid if the entry point died."""
+        self.store.unlink(("node", id_), t=t)
         old = self._adj.pop(id_, None)
         if old is not None:
             for t in old:

@@ -86,6 +86,8 @@ class _JobState:
     metrics: QueryMetrics
     start_t: float
     batches: list[BatchTrace]
+    dim: int = 0                        # compute-pricing dims for this job
+    pq_m: int = 0
     round_idx: int = 0
     last_snapshot: tuple = (0, 0)
     pending_batch: object = None        # FetchBatch in flight
@@ -146,11 +148,18 @@ class SteppableEngine:
 
     # ------------------------------------------------------------- jobs --
     def submit(self, plan, metrics: QueryMetrics, tag: Any = None,
-               at: float | None = None) -> _JobState:
-        """Start a plan generator (at virtual time ``at``, default now)."""
+               at: float | None = None, dim: int | None = None,
+               pq_m: int | None = None) -> _JobState:
+        """Start a plan generator (at virtual time ``at``, default now).
+
+        ``dim``/``pq_m`` override the engine-level compute-pricing
+        constants for this job (multi-tenant fleets run jobs of several
+        index geometries through one shard engine)."""
         t = self.kernel.now if at is None else max(at, self.kernel.now)
         st = _JobState(tag=tag, gen=plan, metrics=metrics, start_t=t,
-                       batches=[])
+                       batches=[],
+                       dim=self.dim if dim is None else dim,
+                       pq_m=self.pq_m if pq_m is None else pq_m)
         self._jobs.append(st)
         self.in_flight += 1
         self._advance_job(st, t, first=True)
@@ -178,7 +187,7 @@ class SteppableEngine:
         d0, p0 = st.last_snapshot
         st.last_snapshot = (m.dist_comps, m.pq_dist_comps)
         return plan_compute_seconds(m.dist_comps - d0, m.pq_dist_comps - p0,
-                                    self.dim, self.pq_m, self.cfg.compute)
+                                    st.dim, st.pq_m, self.cfg.compute)
 
     def _advance_job(self, st: _JobState, t: float, first: bool = False,
                      payloads: dict | None = None) -> None:
@@ -326,7 +335,10 @@ class QueryEngine:
                 compute=cfg.compute, sim_provider=lambda: core.sim,
                 report=IngestReport(),
                 invalidate=(self.cache.remove if self.cache is not None
-                            else None))
+                            else None),
+                inflight_floor=lambda: min(
+                    (st.start_t for st in core._jobs),
+                    default=float("inf")))
             updates.start(kernel, agent.deliver)
         arr.start(kernel, lambda ai, wi: adm.offer((ai, wi), key=ai),
                   len(queries))

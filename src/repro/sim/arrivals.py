@@ -88,6 +88,9 @@ class ArrivalProcess:
 
     kind = "closed"
     window: int | None = None
+    #: kernel RNG stream name — tenancy renames it per tenant so N
+    #: stochastic arrival processes on one kernel draw independently
+    rng_stream: str = "arrivals"
 
     def start(self, kernel: Kernel, arrive: Callable[[int, int], None],
               n_workload: int, done: Callable[[], None] | None = None
@@ -141,7 +144,7 @@ class Poisson(ArrivalProcess):
             self.kind = kind
 
     def start(self, kernel, arrive, n_workload, done=None):
-        rng = kernel.rng("arrivals")
+        rng = kernel.rng(self.rng_stream)
         mod = self.modulation
         peak_rate = self.rate * (mod.peak if mod is not None else 1.0)
 

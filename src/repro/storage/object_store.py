@@ -19,19 +19,65 @@ class ObjectStore:
     def __init__(self) -> None:
         self._data: dict[Hashable, Any] = {}
         self._size: dict[Hashable, int] = {}
+        # unlinked-but-still-readable payloads (POSIX-unlink semantics):
+        # not billed, not a member, but a reader that resolved the key
+        # before the unlink can still fetch it until purge_lingering().
+        self._lingering: dict[Hashable, Any] = {}
+        self._linger_t: dict[Hashable, float] = {}   # key -> unlink time
 
     def put(self, key: Hashable, payload: Any, nbytes: int) -> None:
+        self._lingering.pop(key, None)     # re-insert supersedes a corpse
+        self._linger_t.pop(key, None)
         self._data[key] = payload
         self._size[key] = int(nbytes)
 
     def get(self, key: Hashable) -> Any:
-        return self._data[key]
+        if key in self._data:
+            return self._data[key]
+        return self._lingering[key]
 
     def remove(self, key: Hashable) -> int:
         """Delete an object (compaction retired it); returns its billable
         size (0 when absent)."""
         self._data.pop(key, None)
+        self._lingering.pop(key, None)
+        self._linger_t.pop(key, None)
         return self._size.pop(key, 0)
+
+    def unlink(self, key: Hashable, t: float = 0.0) -> int:
+        """Stop billing and membership for ``key`` but keep the payload
+        readable until :meth:`purge_lingering` — the reclamation protocol
+        for retired graph blocks: queries already holding a pre-compaction
+        reference may still fetch the block; nothing new can find it, and
+        its bytes no longer count toward :attr:`total_bytes`.  ``t`` is
+        the unlink's virtual time, consulted by grace-based purges.
+        Returns the bytes reclaimed (0 when absent)."""
+        if key not in self._data:
+            return 0
+        self._lingering[key] = self._data.pop(key)
+        self._linger_t[key] = float(t)
+        return self._size.pop(key, 0)
+
+    def purge_lingering(self, before: float | None = None) -> int:
+        """Drop unlinked payloads — all of them, or (``before`` given)
+        only corpses unlinked earlier than ``before``, so a reader whose
+        sub-request was parked (shed backoff, fault window) across a
+        compaction epoch still finds blocks retired within the grace
+        window.  Returns how many corpses were purged."""
+        if before is None:
+            n = len(self._lingering)
+            self._lingering.clear()
+            self._linger_t.clear()
+            return n
+        victims = [k for k, t in self._linger_t.items() if t < before]
+        for k in victims:
+            self._lingering.pop(k, None)
+            self._linger_t.pop(k, None)
+        return len(victims)
+
+    @property
+    def lingering_count(self) -> int:
+        return len(self._lingering)
 
     def nbytes(self, key: Hashable) -> int:
         return self._size[key]

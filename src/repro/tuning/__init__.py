@@ -22,6 +22,11 @@ from repro.tuning.ingest import (IngestOutcome, IngestPoint,
                                  enumerate_ingest_space, screen_ingest,
                                  tune_ingest)
 from repro.tuning.pareto import hypervolume, pareto_frontier
+from repro.tuning.tenancy import (CacheSplit, CacheSplitRecommendation,
+                                  SplitOutcome, SplitPrediction,
+                                  che_hit_rate, enumerate_splits,
+                                  miss_curve, object_access_profile,
+                                  screen_cache_splits, tune_cache_split)
 from repro.tuning.recommend import Recommendation, autotune
 from repro.tuning.screen import (Prediction, ScreenResult,
                                  best_predicted_qps, predict, screen)
@@ -41,4 +46,8 @@ __all__ = [
     "IngestPoint", "IngestPrediction", "IngestOutcome",
     "IngestRecommendation", "enumerate_ingest_space", "screen_ingest",
     "analytic_write_amplification", "tune_ingest",
+    "CacheSplit", "SplitPrediction", "SplitOutcome",
+    "CacheSplitRecommendation", "object_access_profile", "che_hit_rate",
+    "miss_curve", "enumerate_splits", "screen_cache_splits",
+    "tune_cache_split",
 ]

@@ -1,0 +1,216 @@
+"""Property-based cache byte accounting (satellite of the tenancy PR).
+
+Invariant under arbitrary interleavings of put/get/remove/invalidate:
+
+* an SLRU's byte counters exactly mirror its segment contents — no leak
+  (counter > contents) and no double-count (counter < contents) ever;
+* used bytes never exceed capacity; no key sits in both segments;
+* a PinnedCache never accounts bytes and its membership matches its
+  hit behaviour;
+* partitioned tenant caches (static/weighted) never exceed any
+  tenant's quota, and the weighted policy's reallocation conserves the
+  total byte budget exactly.
+
+The generator runs on seeded numpy randomness so the sweep always
+executes; when ``hypothesis`` is installed the same checker is also
+driven by its shrinking engine.
+"""
+import numpy as np
+import pytest
+
+from repro.cache.slru import PinnedCache, SLRUCache
+from repro.tenancy.policy import (StaticTenantCache, WeightedTenantCache)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+KEYS = [("list", i) for i in range(12)] + [("node", i) for i in range(12)]
+OPS = ("put", "get", "remove", "invalidate")
+
+
+def check_slru_invariants(cache: SLRUCache) -> None:
+    assert cache.probation_bytes == sum(cache.probation.values())
+    assert cache.protected_bytes == sum(cache.protected.values())
+    assert cache.used_bytes == (cache.probation_bytes
+                                + cache.protected_bytes)
+    assert cache.used_bytes <= cache.capacity
+    assert not set(cache.probation) & set(cache.protected)
+    assert all(v >= 0 for v in cache.probation.values())
+    assert all(v >= 0 for v in cache.protected.values())
+
+
+def apply_slru_ops(cache: SLRUCache, ops) -> None:
+    """Run an op sequence, checking invariants after every step."""
+    for op, key, nbytes in ops:
+        if op == "put":
+            cache.put(key, nbytes)
+        elif op == "get":
+            cache.get(key)
+        elif op == "remove":
+            freed = cache.remove(key)
+            assert freed >= 0
+        else:
+            cache.invalidate(key)
+        check_slru_invariants(cache)
+
+
+def random_ops(rng: np.random.Generator, n: int, max_bytes: int = 400):
+    out = []
+    for _ in range(n):
+        op = OPS[int(rng.integers(0, len(OPS)))]
+        key = KEYS[int(rng.integers(0, len(KEYS)))]
+        out.append((op, key, int(rng.integers(1, max_bytes))))
+    return out
+
+
+# ----------------------------------------------------------- SLRU sweep --
+
+@pytest.mark.parametrize("seed", range(12))
+def test_slru_byte_accounting_random_interleavings(seed):
+    rng = np.random.default_rng(seed)
+    capacity = int(rng.integers(1, 12)) * 100
+    cache = SLRUCache(capacity)
+    apply_slru_ops(cache, random_ops(rng, 400))
+    # full teardown returns every byte
+    for key in list(cache.probation) + list(cache.protected):
+        cache.remove(key)
+        check_slru_invariants(cache)
+    assert cache.used_bytes == 0
+
+
+def test_slru_resize_keeps_accounting_exact():
+    rng = np.random.default_rng(7)
+    cache = SLRUCache(1000)
+    for i, (op, key, nbytes) in enumerate(random_ops(rng, 300)):
+        getattr(cache, op)(key, nbytes) if op == "put" else \
+            getattr(cache, op)(key)
+        if i % 25 == 0:
+            cache.set_capacity(int(rng.integers(0, 15)) * 100)
+        check_slru_invariants(cache)
+
+
+def test_slru_oversize_put_is_rejected_without_accounting_drift():
+    cache = SLRUCache(100)
+    cache.put("big", 101)
+    assert "big" not in cache and cache.used_bytes == 0
+    cache.put("fits", 100)
+    assert cache.used_bytes == 100
+    check_slru_invariants(cache)
+
+
+# --------------------------------------------------------------- pinned --
+
+@pytest.mark.parametrize("seed", range(6))
+def test_pinned_membership_matches_hits(seed):
+    rng = np.random.default_rng(seed)
+    pinned_keys = {KEYS[i] for i in range(0, len(KEYS), 3)}
+    cache = PinnedCache(set(pinned_keys))
+    for op, key, nbytes in random_ops(rng, 200):
+        if op == "put":
+            cache.put(key, nbytes)          # fixed content: no-op
+        elif op == "get":
+            assert cache.get(key) == (key in cache.keys)
+        elif op == "remove":
+            assert cache.remove(key) == 0   # pinned carries no bytes
+        else:
+            cache.invalidate(key)
+        assert cache.used_bytes == 0
+        assert cache.keys <= pinned_keys    # unpinning only shrinks
+
+
+# ---------------------------------------------------- tenant partitions --
+
+def tenant_ops(rng: np.random.Generator, n: int, n_tenants: int):
+    out = []
+    for _ in range(n):
+        op = OPS[int(rng.integers(0, len(OPS)))]
+        key = (int(rng.integers(0, n_tenants)),
+               "list", int(rng.integers(0, 16)))
+        out.append((op, key, int(rng.integers(1, 400))))
+    return out
+
+
+def check_partition_invariants(cache, total: int) -> None:
+    assert sum(p.capacity for p in cache.parts.values()) == total
+    for p in cache.parts.values():
+        check_slru_invariants(p)
+        assert p.used_bytes <= p.capacity
+
+
+@pytest.mark.parametrize("cls", [StaticTenantCache, WeightedTenantCache])
+@pytest.mark.parametrize("seed", range(6))
+def test_partitioned_caches_never_exceed_quota(cls, seed):
+    rng = np.random.default_rng(seed)
+    total = 2000
+    weights = {0: 1.0, 1: 2.0, 2: 0.5}
+    cache = cls(total, weights)
+    for op, key, nbytes in tenant_ops(rng, 500, 3):
+        if op == "put":
+            cache.put(key, nbytes)
+        elif op == "get":
+            cache.get(key)
+        elif op == "remove":
+            cache.remove(key)
+        else:
+            cache.invalidate(key)
+        check_partition_invariants(cache, total)
+
+
+def test_weighted_floor_never_breached_under_adversarial_pressure():
+    """One tenant hammers; the victim's quota must never drop below its
+    documented floor (min_frac x weighted fair share)."""
+    cache = WeightedTenantCache(4000, {0: 1.0, 1: 1.0},
+                                realloc_every=16, step_frac=0.2)
+    rng = np.random.default_rng(0)
+    for _ in range(3000):
+        key = (0, "list", int(rng.integers(0, 64)))
+        if not cache.get(key):
+            cache.put(key, int(rng.integers(50, 300)))
+        assert cache.parts[1].capacity >= cache.floors[1]
+        check_partition_invariants(cache, 4000)
+    assert cache.reallocations > 0
+    # the idle tenant donated quota, but only down to (within one
+    # reallocation step of) its floor
+    assert cache.parts[1].capacity < 2000
+    assert cache.parts[1].capacity - cache.floors[1] < cache.step_bytes
+
+
+# ------------------------------------------------------ hypothesis mode --
+
+if HAVE_HYPOTHESIS:
+    op_strategy = st.tuples(
+        st.sampled_from(OPS),
+        st.sampled_from(KEYS),
+        st.integers(min_value=1, max_value=400))
+
+    @settings(max_examples=120, deadline=None)
+    @given(st.integers(min_value=0, max_value=1500),
+           st.lists(op_strategy, min_size=1, max_size=120))
+    def test_hypothesis_slru_accounting(capacity, ops):
+        apply_slru_ops(SLRUCache(capacity), ops)
+
+    tenant_op_strategy = st.tuples(
+        st.sampled_from(OPS),
+        st.tuples(st.integers(0, 2), st.just("list"),
+                  st.integers(0, 15)),
+        st.integers(min_value=1, max_value=400))
+
+    @settings(max_examples=80, deadline=None)
+    @given(st.sampled_from([StaticTenantCache, WeightedTenantCache]),
+           st.lists(tenant_op_strategy, min_size=1, max_size=120))
+    def test_hypothesis_partition_quota(cls, ops):
+        cache = cls(2000, {0: 1.0, 1: 2.0, 2: 0.5})
+        for op, key, nbytes in ops:
+            if op == "put":
+                cache.put(key, nbytes)
+            elif op == "get":
+                cache.get(key)
+            elif op == "remove":
+                cache.remove(key)
+            else:
+                cache.invalidate(key)
+            check_partition_invariants(cache, 2000)

@@ -464,6 +464,162 @@ def test_scenario_rw_validation_and_stream_synth(setup):
             live.discard(op.id)
 
 
+# ---------------------------------------------------- space reclamation --
+
+def test_retired_graph_blocks_are_reclaimed():
+    """PR-4 follow-up: compaction used to leave deleted node blocks as
+    unreachable garbage in the ObjectStore.  Retirement now *unlinks*
+    them (bytes reclaimed immediately; the payload lingers readable for
+    in-flight pre-compaction readers and is purged at the next flush),
+    so after full compaction the store byte-size converges to exactly
+    live_count x node_nbytes."""
+    data, queries = make_dataset(scaled(DEEP_ANALOG, 900, 24))
+    gi = _graph(data)
+    node_nb = gi.meta.node_nbytes
+    assert gi.store.total_bytes == gi.meta.n_data * node_nb
+    p = SearchParams(k=10, search_len=40, beamwidth=8)
+    stream = synth_updates(data, rate_qps=500.0, n_updates=80,
+                           delete_frac=0.25, seed=2,
+                           protected=frozenset([gi.meta.medoid]))
+    mgi = make_mutable(gi)
+    run_workload(mgi, queries, p, _quiet(TOS), concurrency=8, seed=0,
+                 updates=stream,
+                 ingest=IngestConfig(delta_cap_bytes=16 * 1024))
+    _drain(mgi)
+    assert mgi.delta_bytes == 0
+    assert len(mgi.dead) > 0             # the scenario really deletes
+    # convergence: billed bytes == live nodes, no dead key reachable
+    assert mgi.store.total_bytes == mgi.live_count * node_nb
+    assert len(mgi.store) == mgi.live_count
+    for d in mgi.dead:
+        assert ("node", d) not in mgi.store
+    # lingering corpses are purged by the next flush cycle
+    mgi.store.purge_lingering()
+    assert mgi.store.lingering_count == 0
+    for d in mgi.dead:
+        with pytest.raises(KeyError):
+            mgi.store.get(("node", d))
+    # queries still work against the compacted store
+    res = mgi.search(queries[0], p)
+    assert len(res.ids) == 10
+    assert not set(int(i) for i in res.ids) & mgi.dead
+
+
+def test_unlink_keeps_inflight_reads_alive():
+    from repro.storage.object_store import ObjectStore
+    store = ObjectStore()
+    store.put("a", ("payload",), 100)
+    assert store.total_bytes == 100
+    assert store.unlink("a") == 100
+    assert store.total_bytes == 0 and "a" not in store
+    assert store.get("a") == ("payload",)        # lingering reader
+    assert store.unlink("a") == 0                # idempotent
+    store.put("a", ("fresh",), 50)               # re-insert supersedes
+    assert store.get("a") == ("fresh",) and store.total_bytes == 50
+    store.unlink("a")
+    assert store.purge_lingering() == 1
+    with pytest.raises(KeyError):
+        store.get("a")
+
+
+# --------------------------------------------- invariant sweep (churn) ---
+
+def _mini_index(kind: str, data):
+    if kind == "cluster":
+        return make_mutable(ClusterIndex.build(
+            data, ClusterIndexParams(kmeans_iters=3, seed=0)))
+    return make_mutable(GraphIndex.build(
+        data, GraphIndexParams(R=16, L_build=24, build_passes=1,
+                               pq_dims=16, seed=0)))
+
+
+def _mini_params(kind: str) -> SearchParams:
+    if kind == "cluster":
+        return SearchParams(k=5, nprobe=8)
+    return SearchParams(k=5, search_len=16, beamwidth=4)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("kind", ["cluster", "graph"])
+@pytest.mark.parametrize("scenario", ["closed", "poisson", "rw"])
+def test_determinism_matrix_replay_is_byte_identical(seed, kind, scenario):
+    """Cross-seed determinism sweep: every (seed x index kind x
+    scenario) cell replays to a byte-identical report."""
+    data, queries = make_dataset(scaled(DEEP_ANALOG, 360, 10, seed=seed))
+
+    def once() -> str:
+        index = _mini_index(kind, data)
+        p = _mini_params(kind)
+        scen = Scenario(kind=scenario, rate_qps=300.0,
+                        n_arrivals=2 * len(queries),
+                        write_rate_qps=400.0 if scenario == "rw" else 0.0,
+                        n_updates=40, delete_frac=0.25)
+        arrivals = scen.make_arrivals(len(queries), 4, seed=seed)
+        updates = scen.make_updates(
+            data, seed=seed,
+            protected=(frozenset([index.meta.medoid])
+                       if kind == "graph" else None))
+        rep = run_workload(index, queries, p, _quiet(TOS), concurrency=4,
+                           seed=seed, arrivals=arrivals, updates=updates,
+                           ingest=IngestConfig(delta_cap_bytes=8 * 1024))
+        h = hashlib.sha256()
+        for r in sorted(rep.records, key=lambda r: (r.qid, r.start_t)):
+            h.update(np.asarray([r.qid], dtype=np.int64).tobytes())
+            h.update(np.asarray([r.start_t, r.end_t],
+                                dtype=np.float64).tobytes())
+            h.update(np.asarray(r.ids, dtype=np.int64).tobytes())
+            h.update(np.asarray(r.dists, dtype=np.float64).tobytes())
+        return json.dumps(rep.summary(), sort_keys=True) + h.hexdigest()
+
+    assert once() == once()
+
+
+@pytest.mark.parametrize("kind", ["cluster", "graph"])
+@pytest.mark.parametrize("delta_kb,flush_frac,par", [
+    (2, 0.25, 1),          # tiny delta, eager flushes
+    (16, 0.5, 2),          # mid delta, parallel compaction
+    (256, 1.0, 1),         # huge delta, lazy flush (mostly unsealed)
+])
+def test_property_no_tombstone_resurrection_any_schedule(kind, delta_kb,
+                                                         flush_frac, par):
+    """A deleted id never reappears in merged top-k across any
+    compaction schedule — mid-run, at drain, and after a second
+    compaction round."""
+    data, queries = make_dataset(scaled(DEEP_ANALOG, 360, 10))
+    index = _mini_index(kind, data)
+    p = _mini_params(kind)
+    protected = frozenset([index.meta.medoid]) if kind == "graph" \
+        else None
+    stream = synth_updates(data, rate_qps=600.0, n_updates=60,
+                           delete_frac=0.4, seed=9, protected=protected)
+    cfg = IngestConfig(delta_cap_bytes=int(delta_kb) * 1024,
+                       flush_frac=flush_frac,
+                       compaction_parallelism=par)
+    rep = run_workload(index, queries, p, _quiet(TOS), concurrency=4,
+                       seed=0, updates=stream, ingest=cfg)
+    t_end = max(op.t for op in stream.ops)
+    # replay the delete/insert timeline: a query finishing at t must not
+    # contain any id whose latest update before t was a delete
+    events = sorted(((op.t, op.kind, op.id) for op in stream.ops))
+    for r in rep.records:
+        if r.end_t <= t_end:
+            continue
+        dead = set()
+        for t, kind_, id_ in events:
+            if t > r.start_t:
+                break
+            (dead.add if kind_ == "delete" else dead.discard)(id_)
+        assert not set(int(i) for i in r.ids) & dead
+    # post-drain: full compaction keeps every surviving delete dead
+    _drain(index)
+    final_dead = set()
+    for _, kind_, id_ in events:
+        (final_dead.add if kind_ == "delete" else final_dead.discard)(id_)
+    for q in queries:
+        res = index.search(q, p)
+        assert not set(int(i) for i in res.ids) & final_dead
+
+
 # --------------------------------------------------------- tuning axis ---
 
 def test_ingest_screen_write_amplification_shrinks_with_delta():

@@ -1,0 +1,380 @@
+"""repro.tenancy: cache-sharing policies, fair-share windows, per-tenant
+slices, interference bounds, golden parity, cache-split tuning.
+
+The acceptance pair:
+
+* a single-tenant ``shared``-policy fleet run reproduces
+  ``tests/data/golden_fleet_prerefactor.json`` bit-exactly (the
+  tenancy layer extends the golden-parity chain);
+* interference regressions — under ``weighted`` a bursty tenant cannot
+  push a steady tenant's p99 past the documented bound
+  (``docs/tenancy.md``: 1.5x solo); under ``static`` a tenant's hit
+  rate is independent of its neighbours.
+"""
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.cluster_index import ClusterIndex
+from repro.core.types import ClusterIndexParams, SearchParams
+from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
+from repro.fleet import FleetConfig
+from repro.tenancy import (TENANT_CACHE_POLICIES, MultiTenantRouter,
+                           SharedTenantCache, StaticTenantCache, Tenant,
+                           TenantSpec, WeightedTenantCache,
+                           fair_share_windows, load_tenant_specs,
+                           make_tenant_cache, materialize_tenant,
+                           run_tenant_fleet)
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
+                           "golden_fleet_prerefactor.json")
+
+#: the documented weighted-policy interference bound (docs/tenancy.md)
+WEIGHTED_INTERFERENCE_BOUND = 1.5
+
+
+# ------------------------------------------------------------- policies --
+
+def test_policy_factory_and_validation():
+    w = {0: 1.0, 1: 1.0}
+    assert make_tenant_cache("shared", 0, w) is None
+    for pol, cls in (("shared", SharedTenantCache),
+                     ("static", StaticTenantCache),
+                     ("weighted", WeightedTenantCache)):
+        assert isinstance(make_tenant_cache(pol, 1 << 20, w), cls)
+    with pytest.raises(ValueError):
+        make_tenant_cache("lru", 1 << 20, w)
+    with pytest.raises(ValueError):
+        StaticTenantCache(1 << 20, {0: 0.0})
+
+
+def test_static_partitions_quota_and_isolation():
+    c = StaticTenantCache(1000, {0: 3.0, 1: 1.0})
+    assert c.parts[0].capacity + c.parts[1].capacity == 1000
+    assert c.parts[0].capacity == 750
+    # tenant 0 filling its partition cannot evict tenant 1's entries
+    c.put((1, "k"), 200)
+    for i in range(20):
+        c.put((0, "x", i), 100)
+    assert c.get((1, "k"))
+    assert c.tenant_used_bytes(0) <= c.tenant_quota_bytes(0)
+    assert c.tenant_used_bytes(1) == 200
+
+
+def test_shared_policy_is_one_slru():
+    c = SharedTenantCache(300, {0: 1.0, 1: 1.0})
+    c.put((0, "a"), 200)
+    c.put((1, "b"), 200)          # evicts tenant 0's probation entry
+    assert not c.get((0, "a"))
+    assert c.get((1, "b"))
+    assert c.tenant_used_bytes(0) == 0
+    assert c.tenant_used_bytes(1) == 200
+
+
+def test_weighted_reallocation_moves_quota_toward_ghost_pressure():
+    c = WeightedTenantCache(1000, {0: 1.0, 1: 1.0},
+                            realloc_every=64, step_frac=0.1)
+    q0 = c.parts[0].capacity
+    # tenant 0 cycles a working set twice its quota (heavy ghost hits);
+    # tenant 1 is idle
+    for round_ in range(10):
+        for i in range(10):
+            key = (0, "k", i)
+            if not c.get(key):
+                c.put(key, 100)
+    assert c.reallocations > 0
+    assert c.parts[0].capacity > q0
+    assert c.parts[0].capacity + c.parts[1].capacity == 1000
+    # floors hold: tenant 1 keeps at least min_frac of its fair share
+    assert c.parts[1].capacity >= c.floors[1]
+
+
+def test_weighted_quota_sum_invariant_under_churn():
+    rng = np.random.default_rng(0)
+    c = WeightedTenantCache(4096, {0: 1.0, 1: 2.0, 2: 1.0},
+                            realloc_every=32)
+    total0 = sum(p.capacity for p in c.parts.values())
+    for _ in range(2000):
+        tid = int(rng.integers(0, 3))
+        key = (tid, int(rng.integers(0, 40)))
+        op = rng.integers(0, 4)
+        if op == 0:
+            c.put(key, int(rng.integers(1, 400)))
+        elif op == 1:
+            c.get(key)
+        elif op == 2:
+            c.remove(key)
+        else:
+            c.invalidate(key)
+        assert sum(p.capacity for p in c.parts.values()) == total0
+        for p in c.parts.values():
+            assert p.used_bytes <= p.capacity
+
+
+def test_fair_share_windows():
+    assert fair_share_windows(8, [1.0, 1.0]) == [4, 4]
+    assert fair_share_windows(8, [3.0, 1.0]) == [6, 2]
+    assert fair_share_windows(2, [0.1, 9.9]) == [1, 1]  # floor at 1
+    # never oversubscribes: windows sum to exactly the fleet window
+    assert sum(fair_share_windows(8, [1.0, 1.0, 1.0])) == 8
+    assert sum(fair_share_windows(7, [1.0, 2.0, 4.0])) == 7
+    # unless floors force it (more tenants than slots)
+    assert fair_share_windows(2, [1.0, 1.0, 1.0]) == [1, 1, 1]
+    with pytest.raises(ValueError):
+        fair_share_windows(8, [0.0])
+
+
+# ----------------------------------------------------------- spec/json ---
+
+def test_tenant_spec_validation_and_json(tmp_path):
+    with pytest.raises(ValueError):
+        TenantSpec(name="x", index="flat")
+    with pytest.raises(ValueError):
+        TenantSpec(name="x", weight=0.0)
+    with pytest.raises(ValueError):
+        TenantSpec(name="x", scenario="storm")
+    specs = [TenantSpec(name="a", n=300), TenantSpec(name="b", n=300)]
+    path = tmp_path / "tenants.json"
+    path.write_text(json.dumps([s.to_dict() for s in specs]))
+    loaded = load_tenant_specs(str(path))
+    assert [s.name for s in loaded] == ["a", "b"]
+    path.write_text(json.dumps([specs[0].to_dict(), specs[0].to_dict()]))
+    with pytest.raises(ValueError):
+        load_tenant_specs(str(path))
+    path.write_text(json.dumps([dict(name="a", botnet=1)]))
+    with pytest.raises(ValueError):
+        load_tenant_specs(str(path))
+
+
+# -------------------------------------------------------- golden parity --
+
+def test_single_tenant_shared_reproduces_golden():
+    """Acceptance: the tenancy path with one tenant under the shared
+    policy reproduces the pre-tenancy golden fleet reports bit-exactly."""
+    golden = json.load(open(GOLDEN_PATH))
+    data, queries = make_dataset(scaled(DEEP_ANALOG, 1200, 32))
+    p = SearchParams(k=golden["params"]["k"],
+                     nprobe=golden["params"]["nprobe"])
+    configs = dict(
+        one_shard=FleetConfig(n_shards=1, replication=1, concurrency=8,
+                              shard_concurrency=8, queue_depth=64,
+                              seed=0),
+        four_shard=FleetConfig(n_shards=4, replication=2, concurrency=16,
+                               shard_concurrency=4, queue_depth=16,
+                               hedge=True, hedge_percentile=75.0, seed=5))
+    for name, cfg in configs.items():
+        index = ClusterIndex.build(data, ClusterIndexParams(
+            kmeans_iters=4, seed=0))
+        tenant = Tenant(spec=TenantSpec(name="solo"), index=index,
+                        queries=queries, params=p)
+        rep = run_tenant_fleet([tenant], cfg, "shared")
+        g = golden[name]
+        assert rep.fleet.wall_time_s == pytest.approx(
+            g["wall_time_s"], rel=1e-9, abs=1e-12)
+        assert rep.fleet.qps == pytest.approx(g["qps"], rel=1e-9)
+        h = hashlib.sha256()
+        for r in sorted(rep.tenants[0].records, key=lambda r: r.qid):
+            h.update(np.asarray(r.qid).tobytes())
+            h.update(np.asarray(r.ids, dtype=np.int64).tobytes())
+        assert h.hexdigest() == g["ids_sha256"]
+
+
+# ------------------------------------------------------------ behaviour --
+
+def _steady_spec():
+    return TenantSpec(name="steady", n=600, dim=32, n_queries=32,
+                      nprobe=8, scenario="trace", rate_qps=250.0,
+                      n_arrivals=128, zipf_a=1.4, slo_ms=60, weight=1.0)
+
+
+def _bursty_spec():
+    return TenantSpec(name="bursty", n=1200, dim=32, n_queries=24,
+                      nprobe=64, scenario="burst", rate_qps=250.0,
+                      n_arrivals=128, burst_factor=10.0,
+                      burst_start_s=0.1, burst_len_s=0.3, slo_ms=150,
+                      weight=1.0)
+
+
+def _contended_cfg():
+    return FleetConfig(n_shards=2, replication=2, concurrency=6,
+                       cache_bytes=64 * 1024, cache_policy="slru",
+                       seed=3)
+
+
+@pytest.fixture(scope="module")
+def interference():
+    """One solo baseline + one shared-fleet run per policy (the solo run
+    is policy-independent: a lone tenant owns the whole budget)."""
+    cfg = _contended_cfg()
+
+    def mk():
+        return [materialize_tenant(s, base_seed=cfg.seed, tid=i)
+                for i, s in enumerate((_steady_spec(), _bursty_spec()))]
+
+    steady_solo = materialize_tenant(_steady_spec(), base_seed=cfg.seed,
+                                     tid=0)
+    solo = run_tenant_fleet([steady_solo], cfg, "shared")
+    solo_p99 = solo.tenants[0].sojourn_percentile(99)
+    reports = {}
+    for pol in TENANT_CACHE_POLICIES:
+        rep = run_tenant_fleet(mk(), cfg, pol)
+        rep.tenant("steady").solo_p99_s = solo_p99
+        reports[pol] = rep
+    return reports
+
+
+def test_weighted_bounds_bursty_interference(interference):
+    """Satellite acceptance: under ``weighted`` the bursty tenant cannot
+    push the steady tenant's p99 past the documented bound, and the
+    isolation is strictly better than free-for-all sharing."""
+    weighted = interference["weighted"].tenant("steady")
+    shared = interference["shared"].tenant("steady")
+    assert weighted.interference_ratio <= WEIGHTED_INTERFERENCE_BOUND
+    assert weighted.interference_ratio < shared.interference_ratio
+    assert interference["weighted"].reallocations > 0
+
+
+def test_shared_policy_shows_cache_pollution(interference):
+    """The scenario is a real stressor: free sharing lets the scan
+    tenant pollute the steady tenant's hot set (hit rate drops vs
+    static partitions)."""
+    assert interference["static"].tenant("steady").hit_rate > \
+        interference["shared"].tenant("steady").hit_rate
+
+
+def test_weighted_dominates_static_on_aggregate_goodput(interference):
+    """Acceptance: adaptive quotas strictly beat static partitions on
+    aggregate goodput for the skewed two-tenant scenario."""
+    assert interference["weighted"].aggregate_goodput_qps > \
+        interference["static"].aggregate_goodput_qps
+
+
+def test_static_hit_rates_independent_across_tenants():
+    """Satellite acceptance: with static partitions, tenant A's hit rate
+    is *exactly* independent of who shares the fleet (B swapped for a
+    very different B' leaves A's cache op sequence untouched)."""
+    cfg = FleetConfig(n_shards=2, replication=1, concurrency=2,
+                      cache_bytes=96 * 1024, cache_policy="slru", seed=1)
+    a = TenantSpec(name="a", n=500, dim=32, n_queries=24, nprobe=8,
+                   weight=1.0)
+    b = TenantSpec(name="b", n=400, dim=32, n_queries=16, nprobe=8,
+                   weight=1.0)
+    b_prime = TenantSpec(name="b", n=800, dim=48, n_queries=32,
+                         nprobe=48, weight=1.0)
+    r1 = run_tenant_fleet([a, b], cfg, "static")
+    r2 = run_tenant_fleet([a, b_prime], cfg, "static")
+    assert r1.tenant("a").hit_rate == r2.tenant("a").hit_rate
+    assert r1.tenant("a").bytes_read == r2.tenant("a").bytes_read
+    # ... and under free sharing the neighbour *does* bleed through
+    s1 = run_tenant_fleet([a, b], cfg, "shared")
+    s2 = run_tenant_fleet([a, b_prime], cfg, "shared")
+    assert s1.tenant("a").hit_rate != s2.tenant("a").hit_rate
+
+
+def test_multi_tenant_run_deterministic_and_results_exact():
+    """Replay determinism + results equal direct per-tenant search."""
+    cfg = FleetConfig(n_shards=2, replication=2, concurrency=8,
+                      cache_bytes=1 << 20, cache_policy="slru", seed=0)
+    specs = [TenantSpec(name="c", n=500, dim=32, n_queries=16, nprobe=12),
+             TenantSpec(name="g", n=400, dim=32, n_queries=12,
+                        index="graph", search_len=24, beamwidth=4)]
+    a = run_tenant_fleet(specs, cfg, "weighted")
+    b = run_tenant_fleet(specs, cfg, "weighted")
+    assert a.to_json() == b.to_json()
+    # sharing the fleet changes timing, never content
+    tenants = [materialize_tenant(s, base_seed=cfg.seed, tid=i)
+               for i, s in enumerate(specs)]
+    rep = run_tenant_fleet(tenants, cfg, "weighted")
+    for sl, t in zip(rep.tenants, tenants):
+        for r in sl.records:
+            direct = t.index.search(t.queries[r.qid], t.params)
+            np.testing.assert_array_equal(r.ids, direct.ids)
+
+
+def test_per_tenant_windows_are_fair_shares():
+    cfg = FleetConfig(n_shards=1, replication=1, concurrency=9, seed=0)
+    specs = [TenantSpec(name="big", n=300, dim=16, n_queries=8,
+                        nprobe=4, weight=2.0),
+             TenantSpec(name="small", n=300, dim=16, n_queries=8,
+                        nprobe=4, weight=1.0)]
+    rep = run_tenant_fleet(specs, cfg, "shared")
+    assert rep.tenant("big").window == 6
+    assert rep.tenant("small").window == 3
+
+
+def test_multi_tenant_router_validation():
+    cfg = FleetConfig(n_shards=1, replication=1)
+    with pytest.raises(ValueError):
+        MultiTenantRouter([], cfg)
+    t = materialize_tenant(TenantSpec(name="a", n=300, dim=16,
+                                      n_queries=8), 0, 0)
+    with pytest.raises(ValueError):
+        MultiTenantRouter([t], cfg, cache_policy="arc")
+
+
+def test_rw_tenant_applies_updates_in_shared_fleet():
+    """A tenant with a write stream ingests through the shared fleet
+    (its own delta tier + compaction), and its deletes are honoured."""
+    cfg = FleetConfig(n_shards=2, replication=1, concurrency=4, seed=2)
+    specs = [TenantSpec(name="rw", n=500, dim=32, n_queries=16, nprobe=12,
+                        scenario="rw", write_rate_qps=600.0, n_updates=80,
+                        delete_frac=0.3, n_arrivals=48, delta_kb=4.0),
+             TenantSpec(name="ro", n=400, dim=32, n_queries=12, nprobe=8)]
+    tenants = [materialize_tenant(s, base_seed=cfg.seed, tid=i)
+               for i, s in enumerate(specs)]
+    stream = tenants[0].updates
+    assert stream is not None and len(stream) == 80
+    rep = run_tenant_fleet(tenants, cfg, "shared")
+    rw = rep.tenant("rw")
+    assert rw.ingest is not None and rw.ingest["ops_delivered"] >= 80
+    assert rw.ingest["flushes"] > 0
+    assert rep.tenant("ro").ingest is None
+    t_end = max(op.t for op in stream.ops)
+    dead = {op.id for op in stream.ops if op.kind == "delete"}
+    reborn = {op.id for op in stream.ops if op.kind == "insert"}
+    for r in rw.records:
+        if r.start_t > t_end:
+            assert not set(int(i) for i in r.ids) & (dead - reborn)
+
+
+# --------------------------------------------------------------- tuning --
+
+def test_tune_cache_split_screen_and_refine():
+    from repro.tuning import (enumerate_splits, screen_cache_splits,
+                              tune_cache_split)
+    from repro.tuning.tenancy import CacheSplit
+    with pytest.raises(ValueError):
+        CacheSplit((0.5, 0.6))
+    splits = enumerate_splits(2, steps=4)
+    assert len(splits) == 3              # 1/4..3/4
+    cfg = FleetConfig(n_shards=2, replication=1, concurrency=8,
+                      cache_bytes=96 * 1024, cache_policy="slru", seed=0)
+    specs = [TenantSpec(name="hot", n=500, dim=32, n_queries=32,
+                        nprobe=8),
+             TenantSpec(name="cold", n=900, dim=32, n_queries=16,
+                        nprobe=32)]
+    tenants = [materialize_tenant(s, base_seed=0, tid=i)
+               for i, s in enumerate(specs)]
+    preds = screen_cache_splits(tenants, cfg.cache_bytes, steps=4)
+    assert preds[0].miss_bytes_per_s <= preds[-1].miss_bytes_per_s
+    rec = tune_cache_split(specs, cfg, steps=4, refine_top=2)
+    assert abs(sum(rec.split.fractions) - 1.0) < 1e-9
+    assert len(rec.outcomes) == 2
+    best = max(o.aggregate_goodput_qps for o in rec.outcomes)
+    assert rec.outcomes[0].aggregate_goodput_qps <= best + 1e-9
+    with pytest.raises(ValueError):
+        tune_cache_split(specs[:1], cfg)
+
+
+def test_che_approximation_monotone_and_exact_limits():
+    from repro.tuning import che_hit_rate
+    prof = {("k", i): [100, (i % 5) + 1] for i in range(50)}
+    sizes = [0, 500, 1500, 3000, 5000]
+    hits = [che_hit_rate(prof, c) for c in sizes]
+    assert hits[0] == 0.0
+    assert hits[-1] == 1.0               # cache >= working set
+    assert all(hits[i] <= hits[i + 1] + 1e-12
+               for i in range(len(hits) - 1))
