@@ -45,6 +45,11 @@ DEFAULT_ABS_TOL = float(os.environ.get("REPRO_REGRESSION_ABS_TOL", "1e-9"))
 LOOSE_KEYS = ("p999", "p99", "peak_", "hedge", "sheds", "shed_")
 LOOSE_REL_TOL = float(os.environ.get("REPRO_REGRESSION_LOOSE_TOL", "0.10"))
 
+#: Keys the gate never compares: ``meta`` is per-run provenance (git sha,
+#: wall time) and ``attrib`` is the diagnostic critical-path breakdown —
+#: both describe the run, they are not the metrics under test.
+SKIP_KEYS = ("meta", "attrib")
+
 
 def _tol_for(path: str) -> float:
     leaf = path.rsplit(".", 1)[-1]
@@ -60,6 +65,8 @@ def compare(fresh, base, path: str = "") -> list[str]:
         if not isinstance(fresh, dict):
             return [f"{path}: type changed ({type(fresh).__name__})"]
         for key in base:
+            if key in SKIP_KEYS:
+                continue
             if key not in fresh:
                 diffs.append(f"{path}.{key}: missing from fresh output")
             else:
@@ -89,6 +96,29 @@ def compare(fresh, base, path: str = "") -> list[str]:
                          f"(rel tol {rel})")
         return diffs
     return diffs
+
+
+def _attrib_diff_lines(fresh: dict, base: dict) -> list[str]:
+    """Where the regression lives: a critical-path diff of the benches'
+    ``attrib`` blocks (present when the bench ran a traced probe)."""
+    fa, ba = fresh.get("attrib"), base.get("attrib")
+    if not (isinstance(fa, dict) and isinstance(ba, dict)):
+        return []
+    try:
+        from repro.obs import render_diff, trace_diff
+    except ImportError:
+        sys.path.insert(0, os.path.join(ROOT, "src"))
+        from repro.obs import render_diff, trace_diff
+    return render_diff(trace_diff(ba, fa)).splitlines()
+
+
+def _meta_lines(fresh: dict) -> list[str]:
+    meta = fresh.get("meta")
+    if not isinstance(meta, dict):
+        return []
+    keep = ("git_sha", "seed", "config_hash", "command", "wall_s")
+    return ["run manifest: "
+            + "  ".join(f"{k}={meta[k]}" for k in keep if k in meta)]
 
 
 def baseline_path(fresh_path: str, quick: bool) -> str:
@@ -124,6 +154,8 @@ def main(argv: list[str] | None = None) -> int:
         if fresh.get("failures"):
             print(f"FAIL {label}: bench hard checks failed: "
                   f"{fresh['failures']}")
+            for line in _meta_lines(fresh):
+                print(f"  {line}")
             failed = True
             continue
         if args.update:
@@ -147,6 +179,10 @@ def main(argv: list[str] | None = None) -> int:
                 print(f"  {d}")
             if len(diffs) > 20:
                 print(f"  ... and {len(diffs) - 20} more")
+            for line in _meta_lines(fresh):
+                print(f"  {line}")
+            for line in _attrib_diff_lines(fresh, base):
+                print(f"  {line}")
         else:
             print(f"OK   {label} matches "
                   f"{os.path.relpath(bp, ROOT)}")

@@ -30,6 +30,7 @@ import dataclasses
 import json
 import os
 import sys
+import time
 
 import numpy as np
 
@@ -40,6 +41,7 @@ from repro.core.flat import exact_topk
 from repro.core.types import ClusterIndexParams, SearchParams
 from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
 from repro.fleet import FleetConfig, run_fleet
+from repro.obs import Tracer, attribute, run_manifest
 from repro.serving.engine import run_workload
 from repro.sim.arrivals import Poisson
 from repro.sim.faults import FaultSchedule, ShardFault
@@ -233,7 +235,58 @@ def bench_faults(index, queries, gt) -> dict:
     return row
 
 
+def bench_obs(index, queries, gt) -> dict:
+    """Tracing observes, never perturbs: a traced run must reproduce the
+    untraced report bit for bit, cost at most 1.5x the wall time, and
+    its critical-path stages must account for the measured mean sojourn
+    (within 1%)."""
+    params = SearchParams(k=10, nprobe=64)
+    cfg = FleetConfig(
+        n_shards=4, replication=2, storage=TOS, concurrency=16,
+        shard_concurrency=4, queue_depth=16, seed=5,
+        hedge=True, hedge_percentile=75.0, hedge_min_samples=16)
+
+    def _run(tracer=None):
+        t0 = time.perf_counter()
+        rep = run_fleet(index, queries, params, cfg, tracer=tracer)
+        return rep, time.perf_counter() - t0
+
+    # min of two runs each: the guard measures tracer cost, not noise
+    plain, t_plain = _run()
+    _, t_plain2 = _run()
+    t_plain = min(t_plain, t_plain2)
+    tracer = Tracer()
+    traced, t_traced = _run(tracer)
+    _, t_traced2 = _run(Tracer())
+    t_traced = min(t_traced, t_traced2)
+
+    _check("obs-traced-bit-exact", plain.to_json() == traced.to_json(),
+           "traced and untraced fleet reports are bit-identical")
+    ratio = t_traced / max(t_plain, 1e-9)
+    _check("obs-tracer-overhead", t_traced <= 1.5 * t_plain + 0.05,
+           f"traced {t_traced * 1e3:.0f}ms vs untraced "
+           f"{t_plain * 1e3:.0f}ms ({ratio:.2f}x, want <= 1.5x)")
+
+    rep = attribute(tracer)
+    d = rep.to_dict()
+    drift = abs(d["accounted_s"] - d["mean_sojourn_s"]) \
+        / max(d["mean_sojourn_s"], 1e-12)
+    _check("obs-attrib-accounts-sojourn", drift < 0.01,
+           f"stages account for {d['accounted_s'] * 1e3:.3f}ms of "
+           f"{d['mean_sojourn_s'] * 1e3:.3f}ms mean sojourn "
+           f"(drift {drift:.2e}, want < 1%)")
+    emit("fleet/obs-traced", 1e6 / max(traced.qps, 1e-9),
+         overhead_ratio=ratio, n_spans=len(tracer.spans),
+         accounted_ms=d["accounted_s"] * 1e3)
+    # wall times stay out of the returned row: the regression gate
+    # compares these values and timing noise would flake it
+    return dict(bit_exact=plain.to_json() == traced.to_json(),
+                n_spans=len(tracer.spans), n_flows=len(tracer.flows),
+                attrib=d)
+
+
 def main() -> int:
+    t0 = time.perf_counter()
     index, queries, gt = _setup()
     results = dict(
         bench="fleet",
@@ -243,8 +296,13 @@ def main() -> int:
         parity=bench_parity(index, queries, gt),
         scenarios=dict(open_loop=bench_open_loop(index, queries, gt),
                        fault=bench_faults(index, queries, gt)),
+        obs=bench_obs(index, queries, gt),
         failures=_failures,
     )
+    results["attrib"] = results["obs"].pop("attrib")
+    results["meta"] = run_manifest(
+        seed=0, config=dict(bench="fleet", quick=QUICK),
+        wall_s=time.perf_counter() - t0)
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2)
         f.write("\n")

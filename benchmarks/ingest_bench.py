@@ -29,6 +29,7 @@ from __future__ import annotations
 import json
 import os
 import sys
+import time
 
 import numpy as np
 
@@ -41,6 +42,7 @@ from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
 from repro.fleet import FleetConfig, run_fleet
 from repro.ingest import (IngestConfig, churn_ground_truth, make_mutable,
                           synth_updates)
+from repro.obs import run_manifest
 from repro.serving.engine import run_workload
 from repro.sim.arrivals import Scenario
 from repro.storage.spec import TOS
@@ -236,6 +238,7 @@ def bench_freshness(data, queries, gt) -> list[dict]:
 
 
 def main() -> int:
+    t0 = time.perf_counter()
     data, queries, gt = _setup()
     results = dict(
         bench="ingest",
@@ -246,6 +249,9 @@ def main() -> int:
         freshness=bench_freshness(data, queries, gt),
         failures=_failures,
     )
+    results["meta"] = run_manifest(
+        seed=0, config=dict(bench="ingest", quick=QUICK),
+        wall_s=time.perf_counter() - t0)
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2)
         f.write("\n")

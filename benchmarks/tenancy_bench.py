@@ -29,12 +29,14 @@ from __future__ import annotations
 import json
 import os
 import sys
+import time
 
 import numpy as np
 
 from common import QUICK, emit
 
 from repro.fleet import FleetConfig, run_fleet
+from repro.obs import run_manifest
 from repro.tenancy import (TENANT_CACHE_POLICIES, Tenant, TenantSpec,
                            materialize_tenant, run_tenant_fleet)
 from repro.tuning import tune_cache_split
@@ -185,6 +187,7 @@ def bench_tuning() -> dict:
 
 
 def main() -> int:
+    t0 = time.perf_counter()
     results = dict(
         bench="tenancy",
         quick=QUICK,
@@ -193,6 +196,9 @@ def main() -> int:
         tuning=bench_tuning(),
         failures=_failures,
     )
+    results["meta"] = run_manifest(
+        seed=0, config=dict(bench="tenancy", quick=QUICK),
+        wall_s=time.perf_counter() - t0)
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2)
         f.write("\n")

@@ -27,6 +27,44 @@ def add_common_args(p: argparse.ArgumentParser, *, seed: int = 0) -> None:
                    help="also write the JSON report to PATH")
 
 
+def add_obs_args(p: argparse.ArgumentParser) -> None:
+    """--trace / --attrib: the observability axis (repro.obs)."""
+    g = p.add_argument_group("observability")
+    g.add_argument("--trace", default=None, metavar="PATH",
+                   help="record a span trace and write Chrome-trace/"
+                        "Perfetto JSON to PATH (open at ui.perfetto.dev)")
+    g.add_argument("--attrib", action="store_true",
+                   help="print a critical-path attribution breakdown "
+                        "(and include it in the JSON report)")
+
+
+def tracer_from_args(args):
+    """A live Tracer when --trace/--attrib asked for one, else None."""
+    from repro.obs import Tracer
+    if getattr(args, "trace", None) or getattr(args, "attrib", False):
+        return Tracer()
+    return None
+
+
+def emit_obs(out: dict, args, tracer) -> None:
+    """Fold the observability outputs into the report payload.
+
+    The attribution breakdown lands in the JSON (and renders to stderr
+    so stdout stays machine-parseable); the Chrome trace goes to the
+    ``--trace`` path.
+    """
+    if tracer is None:
+        return
+    from repro.obs import attribute, write_chrome_trace
+    if args.attrib:
+        rep = attribute(tracer)
+        out["attrib"] = rep.to_dict()
+        print(rep.render(), file=sys.stderr)
+    if args.trace:
+        write_chrome_trace(args.trace, tracer)
+        print(f"# wrote {args.trace}", file=sys.stderr)
+
+
 def add_scenario_args(p: argparse.ArgumentParser, *,
                       faults: bool = True) -> None:
     """The arrival-scenario axis shared by fleet and tuning.

@@ -27,10 +27,12 @@ from __future__ import annotations
 
 import argparse
 import sys
+import time
 
-from repro.cli import (add_common_args, add_scenario_args,
-                       autoscale_from_args, emit_json, faults_from_args,
-                       ingest_from_args, scenario_from_args)
+from repro.cli import (add_common_args, add_obs_args, add_scenario_args,
+                       autoscale_from_args, emit_json, emit_obs,
+                       faults_from_args, ingest_from_args,
+                       scenario_from_args, tracer_from_args)
 from repro.core.cluster_index import ClusterIndex
 from repro.core.flat import exact_topk
 from repro.core.graph_index import GraphIndex
@@ -88,6 +90,7 @@ def build_parser() -> argparse.ArgumentParser:
                    help="skip the per-tenant solo baseline runs (no "
                         "interference ratios in the report)")
     add_scenario_args(p)
+    add_obs_args(p)
     add_common_args(p)
     return p
 
@@ -178,17 +181,25 @@ def run_tenancy(args, storage) -> int:
             first.extend(made)
         return made
 
+    tracer = tracer_from_args(args)
+    t0 = time.perf_counter()
     if args.no_solo or faults is not None:
         # interference baselines are only meaningful on a healthy fleet
         rep = run_tenant_fleet(tenants_once(), cfg, args.cache_policy,
                                faults=faults,
-                               series_dt=args.series_dt)
+                               series_dt=args.series_dt, tracer=tracer)
     else:
         rep = measure_interference(tenants_once, cfg, args.cache_policy,
-                                   series_dt=args.series_dt)
+                                   series_dt=args.series_dt,
+                                   tracer=tracer)
+    wall_s = time.perf_counter() - t0
+    from repro.obs import run_manifest
     out = dict(config=cfg.to_dict(), cache_policy=args.cache_policy,
                tenant_specs=[s.to_dict() for s in specs],
-               report=rep.summary())
+               report=rep.summary(),
+               meta=run_manifest(seed=args.seed, config=cfg.to_dict(),
+                                 wall_s=wall_s))
+    emit_obs(out, args, tracer)
     if faults is not None:
         out["fault_schedule"] = faults.to_dicts()
     if not args.no_recall:
@@ -258,14 +269,22 @@ def main(argv: list[str] | None = None) -> int:
     # its queries closed-loop too)
     slo_s = scenario.slo_s if scenario.kind not in ("closed", "rw") \
         else None
+    tracer = tracer_from_args(args)
+    t0 = time.perf_counter()
     report = run_fleet(index, queries, params, cfg,
                        arrivals=arrivals, faults=faults,
                        autoscale=autoscale, slo_s=slo_s,
                        series_dt=args.series_dt,
-                       updates=updates, ingest=ingest_cfg)
+                       updates=updates, ingest=ingest_cfg,
+                       tracer=tracer)
+    wall_s = time.perf_counter() - t0
 
+    from repro.obs import run_manifest
     out = dict(config=cfg.to_dict(), index=args.index,
-               scenario=scenario.to_dict(), report=report.summary())
+               scenario=scenario.to_dict(), report=report.summary(),
+               meta=run_manifest(seed=args.seed, config=cfg.to_dict(),
+                                 wall_s=wall_s))
+    emit_obs(out, args, tracer)
     if faults is not None:
         out["fault_schedule"] = faults.to_dicts()
     if autoscale is not None:

@@ -71,6 +71,7 @@ from repro.core.types import (FetchBatch, FetchRequest, QueryMetrics,
 from repro.fleet.metrics import FleetQueryRecord, FleetReport, FleetSeries
 from repro.fleet.partition import partition_for_index
 from repro.fleet.server import ShardGroup, ShardServer
+from repro.obs.trace import NULL_TRACER, Tracer, emit_job_spans
 from repro.serving.engine import EngineConfig, JobRecord
 from repro.sim.admission import AdmissionWindow
 from repro.sim.arrivals import ArrivalProcess, ClosedLoop
@@ -231,7 +232,7 @@ class _FleetQuery:
     __slots__ = ("ctx", "idx", "qid", "q", "k", "kind", "gen", "metrics",
                  "start_t", "arrive_t", "snapshot", "rounds", "n_jobs",
                  "shards", "hedged", "shed_retries", "slots", "open_slots",
-                 "local_results", "payloads", "done")
+                 "local_results", "payloads", "done", "span", "round_span")
 
     def __init__(self, ctx: _TenantCtx, idx: int, qid: int, q: np.ndarray,
                  k: int, start_t: float, arrive_t: float):
@@ -256,6 +257,8 @@ class _FleetQuery:
         self.local_results: list[SearchResult] = []
         self.payloads: dict = {}
         self.done = False
+        self.span = None               # root "query" span when tracing
+        self.round_span = None         # open "round" span when tracing
 
 
 def _scan_plan(q: np.ndarray, reqs: list[FetchRequest], k: int,
@@ -339,7 +342,8 @@ class FleetRouter:
             autoscale: AutoscaleConfig | None = None,
             slo_s: float | None = None,
             series_dt: float | None = None,
-            updates=None, ingest=None) -> FleetReport:
+            updates=None, ingest=None,
+            tracer: Tracer | None = None) -> FleetReport:
         """``updates`` (an :class:`repro.ingest.stream.UpdateStream`)
         turns the run into a read-write workload: the router forwards
         each update to the shard groups owning its keys, every owner
@@ -361,7 +365,7 @@ class FleetRouter:
                    and slo_s is None else slo_s),
             updates=updates, ingest_cfg=ingest)
         wall = self._execute([ctx], faults=faults, autoscale=autoscale,
-                             series_dt=series_dt)
+                             series_dt=series_dt, tracer=tracer)
         self.index = ctx.index          # make_mutable may have wrapped it
         stats = [srv.finalize_stats() for g in self.groups
                  for srv in g.all_servers()]
@@ -389,14 +393,22 @@ class FleetRouter:
     def _execute(self, ctxs: list[_TenantCtx], *,
                  faults: FaultSchedule | None = None,
                  autoscale: AutoscaleConfig | None = None,
-                 series_dt: float | None = None) -> float:
+                 series_dt: float | None = None,
+                 tracer: Tracer | None = None) -> float:
         """Drive the shared kernel over all tenant contexts; returns the
         run's wall time.  One context reproduces the pre-tenancy event
-        sequence exactly (same RNG streams, same scheduling order)."""
+        sequence exactly (same RNG streams, same scheduling order).
+
+        ``tracer`` records the run's span trees and metrics.  Tracing
+        never perturbs the schedule — spans are written from state the
+        router already has — so traced and untraced runs are bit-exact.
+        """
         cfg = self.cfg
         self.ctxs = ctxs
         self._store = _TenantStore(ctxs)
         self.kernel = Kernel(seed=cfg.seed)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.tracer.attach(self.kernel)
         self.groups = [ShardGroup(s, self._spawn_server)
                        for s in range(cfg.n_shards)]
         for ctx in ctxs:
@@ -428,6 +440,15 @@ class FleetRouter:
             dt = series_dt if series_dt is not None else 0.05
             self._series = FleetSeries(dt=dt)
             self._monitor = self.kernel.every(dt, self._sample_slice)
+        # Periodic metrics snapshots for the trace's counter tracks.  The
+        # ticker only *reads* router state; its events consume sequence
+        # numbers, which shifts later seqs uniformly and so preserves the
+        # relative order of every other event pair — goldens stay exact.
+        self._obs_ticker = None
+        if self.tracer.enabled:
+            self._obs_ticker = self.kernel.every(
+                series_dt if series_dt is not None else 0.05,
+                self._obs_snapshot)
         self._autoscaler = None
         if autoscale is not None:
             self._autoscaler = Autoscaler(autoscale, self)
@@ -565,6 +586,8 @@ class FleetRouter:
             return
         if self._monitor is not None:
             self._monitor.cancel()
+        if self._obs_ticker is not None:
+            self._obs_ticker.cancel()
         if self._autoscaler is not None:
             self._autoscaler.stop()
 
@@ -586,6 +609,15 @@ class FleetRouter:
                          ctx.params.k, t,
                          ctx.adm.pop_arrive_t(arrival_idx))
         self._live_queries.add(fq)
+        tr = self.tracer
+        if tr.enabled:
+            fq.span = tr.begin("query", fq.arrive_t, parent=None,
+                               qid=fq.qid, tenant=ctx.name, tid=ctx.tid,
+                               kind=ctx.kind)
+            if t > fq.arrive_t:
+                tr.record("admission", fq.arrive_t, t, parent=fq.span)
+            tr.metrics.counter("fleet.queries").inc()
+            tr.metrics.counter(f"tenant.{ctx.name}.queries").inc()
         meta = ctx.index.meta
         if ctx.kind == "cluster":
             lids, ndist = ctx.index.select_lists(q, ctx.params.nprobe)
@@ -593,13 +625,15 @@ class FleetRouter:
             fq.metrics.lists_visited = len(lids)
             reqs = [FetchRequest((ctx.tid, "list", int(i)),
                                  int(meta.list_nbytes[i])) for i in lids]
-            self.kernel.at(t + self._price(fq), self._scatter, fq, reqs)
         else:
             fq.gen = ctx.index.search_plan(q, ctx.params, fq.metrics)
             batch = next(fq.gen)
             reqs = [FetchRequest((ctx.tid,) + rq.key, rq.nbytes)
                     for rq in batch.requests]
-            self.kernel.at(t + self._price(fq), self._scatter, fq, reqs)
+        dt = self._price(fq)
+        if tr.enabled:
+            tr.record("route", t, t + dt, parent=fq.span)
+        self.kernel.at(t + dt, self._scatter, fq, reqs)
 
     # ---------------------------------------------------------- scatter --
     def _owners(self, fq: _FleetQuery, key) -> tuple[int, ...]:
@@ -637,6 +671,9 @@ class FleetRouter:
         """Fan one round's requests out by replica-chosen owner."""
         t = self.kernel.now
         fq.rounds += 1
+        if self.tracer.enabled:
+            fq.round_span = self.tracer.begin("round", t, parent=fq.span,
+                                              idx=fq.rounds)
         fq.slots = {}
         fq.payloads = {}
         groups: dict[int | None, list[FetchRequest]] = {}
@@ -772,6 +809,8 @@ class FleetRouter:
             return
         self._hedges += 1
         fq.hedged = True
+        if self.tracer.enabled:
+            self.tracer.metrics.counter("fleet.hedges").inc()
         slot.outstanding[1] = set()
         slot.collected[1] = []
         for shard in sorted(groups):
@@ -789,6 +828,34 @@ class FleetRouter:
             fq.shards.add(shard)
 
     # ----------------------------------------------------------- gather --
+    def _record_job_span(self, fq: _FleetQuery, attempt: int,
+                         t_submit: float, server: ShardServer,
+                         job: JobRecord, *, stale: bool) -> None:
+        """Synthesize a completed shard job's span sub-tree.
+
+        Consumed jobs hang off the query's current round; work the
+        query did not wait for (hedge-race losers, post-abort
+        completions) is parentless with ``wasted=True`` — it ends after
+        the round closed, so parenting it would break the child-within-
+        parent tree invariant.  A flow arrow still ties hedges back to
+        the round that launched them.
+        """
+        tr = self.tracer
+        attrs = dict(shard=server.shard_id, instance=server.instance,
+                     attempt=attempt, qid=fq.qid, tid=fq.ctx.tid)
+        if stale:
+            attrs["wasted"] = True
+        sp = tr.record("shard_job", t_submit, job.end_t,
+                       parent=None if stale else fq.round_span, **attrs)
+        emit_job_spans(tr, sp, t_submit, job)
+        if attempt > 0 and fq.round_span is not None:
+            tr.flow(fq.round_span, sp)
+        tr.metrics.counter("fleet.jobs").inc()
+        if stale:
+            tr.metrics.counter("fleet.jobs_wasted").inc()
+        tr.metrics.histogram("shard.job_sojourn_s").observe(
+            job.end_t - t_submit)
+
     def _job_done(self, server: ShardServer, job: JobRecord) -> None:
         ctx = self._ctx.pop(job.tag, None)
         if ctx is None:
@@ -796,7 +863,11 @@ class FleetRouter:
         fq, slot, attempt, t_submit = ctx
         self._lat.append(job.end_t - t_submit)
         _merge_metrics(fq.metrics, job.metrics)
-        if fq.done or slot.done or attempt not in slot.outstanding:
+        stale = fq.done or slot.done or attempt not in slot.outstanding
+        if self.tracer.enabled:
+            self._record_job_span(fq, attempt, t_submit, server, job,
+                                  stale=stale)
+        if stale:
             return                          # stale (hedge race loser)
         open_tags = slot.outstanding[attempt]
         open_tags.discard(job.tag)
@@ -817,8 +888,13 @@ class FleetRouter:
             self._round_done(fq, job.end_t)
 
     def _round_done(self, fq: _FleetQuery, t: float) -> None:
+        tr = self.tracer
+        if tr.enabled and fq.round_span is not None:
+            tr.end(fq.round_span, t)
         if fq.kind == "cluster":
             ids, dists = merge_topk(fq.local_results, fq.k)
+            if tr.enabled:
+                tr.record("merge", t, t, parent=fq.span)
             self._finish_query(fq, t, ids, dists)
             return
         # graph: resume the beam-search generator with this round's blocks
@@ -834,11 +910,17 @@ class FleetRouter:
                 # delta lives in site memtables the beam never traversed
                 res = fq.ctx.index.merge_result(fq.q, fq.k, res,
                                                 fq.metrics)
-            self._finish_query(fq, t + self._price(fq), res.ids, res.dists)
+            dt = self._price(fq)
+            if tr.enabled:
+                tr.record("merge", t, t + dt, parent=fq.span)
+            self._finish_query(fq, t + dt, res.ids, res.dists)
             return
         reqs = [FetchRequest((fq.ctx.tid,) + rq.key, rq.nbytes)
                 for rq in batch.requests]
-        self.kernel.at(t + self._price(fq), self._scatter, fq, reqs)
+        dt = self._price(fq)
+        if tr.enabled:
+            tr.record("route", t, t + dt, parent=fq.span)
+        self.kernel.at(t + dt, self._scatter, fq, reqs)
 
     def inflight_floor(self) -> float:
         """Earliest start time among in-flight queries (inf when idle) —
@@ -858,6 +940,11 @@ class FleetRouter:
             shards_touched=len(fq.shards), hedged=fq.hedged,
             shed_retries=fq.shed_retries, arrive_t=fq.arrive_t))
         sojourn = t - fq.arrive_t
+        tr = self.tracer
+        if tr.enabled and fq.span is not None:
+            tr.end(fq.span, t)
+            tr.metrics.histogram("fleet.sojourn_s").observe(sojourn)
+            tr.metrics.histogram("fleet.latency_s").observe(t - fq.start_t)
         self.recent_sojourns.append(sojourn)
         self._slice_counts[1] += 1
         if ctx.slo_s is not None and sojourn <= ctx.slo_s:
@@ -872,22 +959,35 @@ class FleetRouter:
         tags = self.groups[shard].fail_all(t)
         self._fault_log.append(dict(t=round(t, 6), event="fail",
                                     shard=shard, jobs_aborted=len(tags)))
+        if self.tracer.enabled:
+            self.tracer.instant("shard_fail", t, shard=shard,
+                                jobs_aborted=len(tags))
         for tag in tags:
-            self._job_aborted(tag)
+            self._job_aborted(tag, shard)
 
     def recover_shard(self, shard: int) -> None:
         t = self.kernel.now
         self.groups[shard].recover_all(t)
         self._fault_log.append(dict(t=round(t, 6), event="recover",
                                     shard=shard))
+        if self.tracer.enabled:
+            self.tracer.instant("shard_recover", t, shard=shard)
 
-    def _job_aborted(self, tag: int) -> None:
+    def _job_aborted(self, tag: int, shard: int) -> None:
         """A shard died under this sub-job: re-route its slot to the
         surviving replica owners (or back off until one recovers)."""
         ctx = self._ctx.pop(tag, None)
         if ctx is None:
             return
-        fq, slot, attempt, _ = ctx
+        fq, slot, attempt, t_submit = ctx
+        if self.tracer.enabled:
+            # no JobRecord exists for an aborted job; record the doomed
+            # interval as parentless wasted work ending at the fault
+            self.tracer.record("shard_job", t_submit, self.kernel.now,
+                               parent=None, shard=shard, attempt=attempt,
+                               qid=fq.qid, tid=fq.ctx.tid, wasted=True,
+                               aborted=True)
+            self.tracer.metrics.counter("fleet.jobs_aborted").inc()
         if fq.done or slot.done:
             return
         if attempt not in slot.outstanding:
@@ -939,6 +1039,13 @@ class FleetRouter:
     def _sample_slice(self, now: float) -> None:
         self._flush_slice(now)
 
+    def _obs_snapshot(self, now: float) -> None:
+        """Read-only metrics tick: gauges + one time-series row."""
+        m = self.tracer.metrics
+        m.gauge("fleet.queue_depth").set(self._queue_depth())
+        m.gauge("fleet.instances").set(self.total_instances)
+        m.snapshot(now)
+
     def _flush_slice(self, now: float) -> None:
         a, c, g = self._slice_counts
         self._slice_counts = [0, 0, 0]
@@ -955,9 +1062,11 @@ def run_fleet(index, queries: np.ndarray, params: SearchParams,
               autoscale: AutoscaleConfig | None = None,
               slo_s: float | None = None,
               series_dt: float | None = None,
-              updates=None, ingest=None) -> FleetReport:
+              updates=None, ingest=None,
+              tracer: Tracer | None = None) -> FleetReport:
     """One-call fleet evaluation (the fleet analogue of run_workload)."""
     return FleetRouter(index, cfg).run(
         queries, params, query_ids=query_ids, arrivals=arrivals,
         faults=faults, autoscale=autoscale, slo_s=slo_s,
-        series_dt=series_dt, updates=updates, ingest=ingest)
+        series_dt=series_dt, updates=updates, ingest=ingest,
+        tracer=tracer)

@@ -137,6 +137,11 @@ class ShardServer:
                                         len(self._queue))
             return True
         self.stats.sheds += 1
+        tr = self.engine.kernel.tracer
+        if tr.enabled:
+            tr.instant("shed", t, shard=self.shard_id,
+                       instance=self.instance)
+            tr.metrics.counter("fleet.sheds").inc()
         return False
 
     def invalidate(self, key) -> None:

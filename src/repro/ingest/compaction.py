@@ -154,6 +154,10 @@ class IngestAgent:
             self.mutable.note_delete(op.id)
             nbytes = 0
         self.report.record_apply(op.kind, now - op.t, nbytes)
+        tr = self.kernel.tracer
+        if tr.enabled:
+            tr.metrics.counter("ingest.applies").inc()
+            tr.metrics.histogram("ingest.apply_lag_s").observe(now - op.t)
         if self.mem.used_bytes > self.cfg.delta_cap_bytes:
             self.report.overflow_applies += 1
         self._apply_adm.release(now)
@@ -197,9 +201,18 @@ class IngestAgent:
     def _retry_job(self, item) -> None:
         self._start_job(item, self.kernel.now)
 
-    def _job_done(self, t0: float) -> None:
-        self.report.intervals.append((t0, self.kernel.now))
-        self._compact_adm.release(self.kernel.now)
+    def _job_done(self, t0: float, kind: str = "flush") -> None:
+        now = self.kernel.now
+        tr = self.kernel.tracer
+        if tr.enabled:
+            # recorded retrospectively as one complete span: the job's
+            # I/O runs through the shared storage sim, where ambient
+            # kernel span context is not reliably this job's
+            tr.record("compaction", t0, now, parent=None, kind=kind,
+                      shard=self.site_id, instance=0)
+            tr.metrics.counter(f"ingest.jobs.{kind}").inc()
+        self.report.intervals.append((t0, now))
+        self._compact_adm.release(now)
         self._maybe_flush()
 
     # ----------------------------------------------------- cluster flush --
@@ -257,7 +270,7 @@ class IngestAgent:
         self.report.flushes += 1
         self.report.lists_rewritten += len(affected)
         self._flush_outstanding = False
-        self._job_done(t0)
+        self._job_done(t0, "flush")
         if self.cfg.recluster:
             for li in affected:
                 if self.mutable.overflowed(li, self.cfg.overflow_factor):
@@ -303,7 +316,7 @@ class IngestAgent:
             self.invalidate(("list", new_li))
             if self.on_new_list is not None:
                 self.on_new_list(new_li, li)
-        self._job_done(t0)
+        self._job_done(t0, "recluster")
 
     # ------------------------------------------------------- graph flush --
     def _flush_graph(self, t0: float) -> None:
@@ -464,7 +477,7 @@ class IngestAgent:
         for key in stale:
             self.invalidate(key)
         self._flush_outstanding = False
-        self._job_done(t0)
+        self._job_done(t0, "flush")
 
     # ---------------------------------------------------------- finalize --
     def finalize(self) -> None:

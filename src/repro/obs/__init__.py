@@ -1,0 +1,28 @@
+"""repro.obs — tracing, metrics, and critical-path attribution.
+
+Observability for the simulated serving stack: simulated-time span
+trees (:mod:`~repro.obs.trace`), a fixed-memory metrics registry
+(:mod:`~repro.obs.metrics`), Chrome-trace/Perfetto export
+(:mod:`~repro.obs.export`), per-query critical-path attribution and
+run-to-run trace diffs (:mod:`~repro.obs.critical_path`), and
+self-describing run manifests (:mod:`~repro.obs.manifest`).
+
+The cardinal rule: tracing observes and never perturbs.  A run with a
+tracer attached is bit-exact against the same run without one.
+"""
+from repro.obs.critical_path import (AttributionReport, attribute,
+                                     extract_paths, render_diff,
+                                     trace_diff)
+from repro.obs.export import chrome_trace, flame_summary, write_chrome_trace
+from repro.obs.manifest import run_manifest
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER, NullTracer, Span, Tracer
+
+__all__ = [
+    "Tracer", "NullTracer", "NULL_TRACER", "Span",
+    "MetricsRegistry",
+    "chrome_trace", "write_chrome_trace", "flame_summary",
+    "attribute", "extract_paths", "AttributionReport",
+    "trace_diff", "render_diff",
+    "run_manifest",
+]

@@ -31,6 +31,7 @@ from repro.cache.slru import CACHE_POLICIES, make_cache
 from repro.core.cost_model import (DEFAULT_COMPUTE, ComputeSpec,
                                    plan_compute_seconds)
 from repro.core.types import QueryMetrics, SearchParams
+from repro.obs.trace import NULL_TRACER, Tracer, emit_job_spans
 from repro.serving.metrics import BatchTrace, QueryRecord, WorkloadReport
 from repro.sim.admission import AdmissionWindow
 from repro.sim.arrivals import ArrivalProcess, ClosedLoop
@@ -227,6 +228,11 @@ class SteppableEngine:
                 miss_bytes += rq.nbytes
                 miss_n += 1
         st.metrics.bytes_storage += miss_bytes
+        tr = self.kernel.tracer
+        if tr.enabled:
+            tr.metrics.counter("cache.hits").inc(hits)
+            tr.metrics.counter("cache.misses").inc(miss_n)
+            tr.metrics.counter("storage.bytes").inc(miss_bytes)
         st.pending_batch = batch
         st.pending_submit_t = t
         st.pending_hits = hits
@@ -284,7 +290,8 @@ class QueryEngine:
     def run(self, queries: np.ndarray, params: SearchParams,
             query_ids: Iterable[int] | None = None,
             arrivals: ArrivalProcess | None = None,
-            updates=None, ingest=None) -> WorkloadReport:
+            updates=None, ingest=None,
+            tracer: Tracer | None = None) -> WorkloadReport:
         """``updates`` (an :class:`repro.ingest.stream.UpdateStream`)
         interleaves live inserts/deletes with the query stream; the
         index is wrapped mutable on first use and an
@@ -301,6 +308,8 @@ class QueryEngine:
         window = arr.window if arr.window is not None else cfg.concurrency
 
         kernel = Kernel(seed=cfg.seed)
+        tr = tracer if tracer is not None else NULL_TRACER
+        tr.attach(kernel)
         records: list[QueryRecord] = []
         core = SteppableEngine(cfg, self.index.store, self.cache,
                                kernel=kernel, dim=self.dim, pq_m=self.pq_m)
@@ -316,10 +325,23 @@ class QueryEngine:
         def on_complete(job: JobRecord) -> None:
             ai, qid = job.tag
             res = job.result
+            arrive_t = adm.pop_arrive_t(ai)
+            if tr.enabled:
+                # the single-engine span tree: query root with the job's
+                # fetch/compute legs directly under it (no rounds)
+                sp = tr.record("query", arrive_t, job.end_t, parent=None,
+                               qid=qid, tid=0, kind="engine")
+                if job.start_t > arrive_t:
+                    tr.record("admission", arrive_t, job.start_t,
+                              parent=sp)
+                emit_job_spans(tr, sp, job.start_t, job)
+                tr.metrics.counter("engine.queries").inc()
+                tr.metrics.histogram("engine.sojourn_s").observe(
+                    job.end_t - arrive_t)
             records.append(QueryRecord(
                 qid=qid, start_t=job.start_t, end_t=job.end_t,
                 ids=res.ids, dists=res.dists, metrics=job.metrics,
-                batches=job.batches, arrive_t=adm.pop_arrive_t(ai)))
+                batches=job.batches, arrive_t=arrive_t))
             adm.release(job.end_t)
 
         core.on_complete = on_complete
@@ -367,7 +389,8 @@ def run_workload(index, queries: np.ndarray, params: SearchParams,
                  pinned_keys: frozenset | None = None,
                  query_ids: Iterable[int] | None = None,
                  arrivals: ArrivalProcess | None = None,
-                 updates=None, ingest=None) -> WorkloadReport:
+                 updates=None, ingest=None,
+                 tracer: Tracer | None = None) -> WorkloadReport:
     """The one-call evaluation hook: run ``queries`` through the engine.
 
     Accepts either a bare :class:`StorageSpec` plus knobs (the benchmark
@@ -386,4 +409,4 @@ def run_workload(index, queries: np.ndarray, params: SearchParams,
             pinned_keys=pinned_keys, compute=compute, seed=seed)
     eng = QueryEngine(index, cfg)
     return eng.run(queries, params, query_ids=query_ids, arrivals=arrivals,
-                   updates=updates, ingest=ingest)
+                   updates=updates, ingest=ingest, tracer=tracer)

@@ -73,8 +73,10 @@ class Autoscaler:
         self.events: list[dict] = []       # every decision, acted or not
         self._last_action_t = -float("inf")
         self._ticker: Ticker | None = None
+        self._kernel: Kernel | None = None
 
     def start(self, kernel: Kernel) -> None:
+        self._kernel = kernel
         self._ticker = kernel.every(self.cfg.check_interval_s, self._check)
 
     def stop(self) -> None:
@@ -105,3 +107,9 @@ class Autoscaler:
             self.events.append(dict(
                 t=round(now, 6), p99_s=round(p99, 6), error=round(err, 4),
                 action=action, instances=self.fleet.total_instances))
+        if action != "hold":
+            tr = self._kernel.tracer
+            if tr.enabled:
+                tr.instant(f"autoscale_{action}", now, p99_s=round(p99, 6),
+                           error=round(err, 4),
+                           instances=self.fleet.total_instances)

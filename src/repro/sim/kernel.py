@@ -31,6 +31,8 @@ from typing import Callable
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 #: Slack used when deciding whether an event at ``t`` belongs to
 #: ``run_until(t)`` — absorbs last-ulp float error in event arithmetic.
 TIME_EPS = 1e-15
@@ -46,9 +48,14 @@ class Clock:
 
 
 class Event:
-    """A scheduled callback; cancel via :meth:`Kernel.cancel` (lazy)."""
+    """A scheduled callback; cancel via :meth:`Kernel.cancel` (lazy).
 
-    __slots__ = ("t", "seq", "fn", "args", "cancelled")
+    ``span`` is the tracing context the event was scheduled under (set
+    by :meth:`Kernel.at` only when a tracer is attached); it costs one
+    slot and lets ``repr`` say which span an event belongs to.
+    """
+
+    __slots__ = ("t", "seq", "fn", "args", "cancelled", "span")
 
     def __init__(self, t: float, seq: int, fn: Callable, args: tuple):
         self.t = t
@@ -56,13 +63,17 @@ class Event:
         self.fn = fn
         self.args = args
         self.cancelled = False
+        self.span = None
 
     def __lt__(self, other: "Event") -> bool:
         return (self.t, self.seq) < (other.t, other.seq)
 
-    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+    def __repr__(self) -> str:
         state = " cancelled" if self.cancelled else ""
-        return f"Event(t={self.t!r}, seq={self.seq}{state})"
+        span = ""
+        if self.span is not None:
+            span = f" span={self.span.name}#{self.span.sid}"
+        return f"Event(t={self.t!r}, seq={self.seq}{state}{span})"
 
 
 class EventQueue:
@@ -160,6 +171,11 @@ class Kernel:
         self._rngs: dict[str, np.random.Generator] = {}
         self._name_counts: dict[str, int] = {}
         self.events_fired = 0
+        # Tracing context.  The tracer observes and never perturbs: it
+        # schedules no events and draws no RNG, so attaching one leaves
+        # the (time, seq) order — and therefore every result — bit-exact.
+        self.tracer = NULL_TRACER
+        self.current_span = None
 
     # ------------------------------------------------------------ clock --
     @property
@@ -172,7 +188,10 @@ class Kernel:
         if t < self.clock.now - TIME_EPS:
             raise ValueError(
                 f"cannot schedule at t={t!r} before now={self.clock.now!r}")
-        return self.queue.push(max(t, self.clock.now), fn, args)
+        ev = self.queue.push(max(t, self.clock.now), fn, args)
+        if self.tracer.enabled:
+            ev.span = self.current_span
+        return ev
 
     def after(self, delay: float, fn: Callable, *args) -> Event:
         return self.at(self.clock.now + delay, fn, *args)
@@ -222,7 +241,17 @@ class Kernel:
         if ev.t > self.clock.now:
             self.clock.now = ev.t
         self.events_fired += 1
-        ev.fn(*ev.args)
+        if self.tracer.enabled:
+            # Restore the scheduling span around the callback so spans
+            # opened without an explicit parent nest across event hops.
+            prev = self.current_span
+            self.current_span = ev.span
+            try:
+                ev.fn(*ev.args)
+            finally:
+                self.current_span = prev
+        else:
+            ev.fn(*ev.args)
         return True
 
     def run(self, max_events: int | None = None) -> int:

@@ -192,7 +192,8 @@ class MultiTenantRouter(FleetRouter):
             for t in tenants]
 
     def run_tenants(self, *, faults=None, autoscale=None,
-                    series_dt: float | None = None) -> MultiTenantReport:
+                    series_dt: float | None = None,
+                    tracer=None) -> MultiTenantReport:
         cfg = self.cfg
         windows = fair_share_windows(
             cfg.concurrency, [t.spec.weight for t in self.tenants])
@@ -217,7 +218,7 @@ class MultiTenantRouter(FleetRouter):
                 name=t.spec.name, updates=t.updates,
                 ingest_cfg=t.ingest_cfg))
         wall = self._execute(ctxs, faults=faults, autoscale=autoscale,
-                             series_dt=series_dt)
+                             series_dt=series_dt, tracer=tracer)
         return self._build_report(ctxs, wall, faults)
 
     # ------------------------------------------------------------ report --
@@ -280,8 +281,8 @@ def run_tenant_fleet(tenants: list[Tenant] | list[TenantSpec],
                      faults=None, autoscale=None,
                      series_dt: float | None = None,
                      policy_kwargs: dict | None = None,
-                     quota_weights: dict[int, float] | None = None
-                     ) -> MultiTenantReport:
+                     quota_weights: dict[int, float] | None = None,
+                     tracer=None) -> MultiTenantReport:
     """One-call multi-tenant evaluation (the tenancy analogue of
     :func:`repro.fleet.run_fleet`).  Accepts either materialised
     :class:`Tenant` s or bare :class:`TenantSpec` s (materialised with
@@ -293,14 +294,14 @@ def run_tenant_fleet(tenants: list[Tenant] | list[TenantSpec],
                                policy_kwargs=policy_kwargs,
                                quota_weights=quota_weights)
     return router.run_tenants(faults=faults, autoscale=autoscale,
-                              series_dt=series_dt)
+                              series_dt=series_dt, tracer=tracer)
 
 
 def measure_interference(make_tenants: Callable[[], list[Tenant]],
                          cfg: FleetConfig, cache_policy: str = "shared",
                          *, policy_kwargs: dict | None = None,
-                         series_dt: float | None = None
-                         ) -> MultiTenantReport:
+                         series_dt: float | None = None,
+                         tracer=None) -> MultiTenantReport:
     """Run the shared fleet, then each tenant **solo** on an identical
     fleet, and attach the solo p99 sojourns so every slice reports its
     interference ratio (p99 shared / p99 solo).  ``make_tenants`` is a
@@ -308,9 +309,10 @@ def measure_interference(make_tenants: Callable[[], list[Tenant]],
     arrival seeding guarantees the solo run replays the tenant's exact
     shared-run arrival sample, so the ratio measures contention, not
     seed noise."""
+    # only the shared run is traced: solo reruns are per-tenant controls
     shared = run_tenant_fleet(make_tenants(), cfg, cache_policy,
                               policy_kwargs=policy_kwargs,
-                              series_dt=series_dt)
+                              series_dt=series_dt, tracer=tracer)
     fresh = make_tenants()
     for i, sl in enumerate(shared.tenants):
         solo = run_tenant_fleet([fresh[i]], cfg, cache_policy,

@@ -20,10 +20,13 @@ Two modes:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
+import time
 
-from repro.cli import (add_common_args, add_scenario_args, emit_json,
-                       scenario_from_args)
+from repro.cli import (add_common_args, add_obs_args, add_scenario_args,
+                       emit_json, emit_obs, scenario_from_args,
+                       tracer_from_args)
 from repro.tuning.evaluate import EvalBudget
 from repro.tuning.fleet import tune_fleet, tune_fleet_for_load
 from repro.tuning.recommend import autotune
@@ -73,6 +76,7 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--hedge", action="store_true",
                    help="consider hedged fleets (R >= 2 points)")
     add_scenario_args(p, faults=False)
+    add_obs_args(p)
     add_common_args(p)
     return p
 
@@ -91,11 +95,15 @@ def main(argv: list[str] | None = None) -> int:
     env = EnvSpec(storage=storage,
                   cache_bytes=int(args.cache_gb * 2**30))
 
+    tracer = tracer_from_args(args)
+    from repro.obs import run_manifest
+
     if args.fleet:
         try:
             scenario = scenario_from_args(args)
         except ValueError as e:
             build_parser().error(str(e))
+        t0 = time.perf_counter()
         if scenario.kind == "closed":
             rec = tune_fleet(w, env, target_speedup=args.target_speedup,
                              hedge=args.hedge, seed=args.seed)
@@ -103,7 +111,19 @@ def main(argv: list[str] | None = None) -> int:
             rec = tune_fleet_for_load(w, env, scenario,
                                       goodput_target=args.goodput,
                                       hedge=args.hedge, seed=args.seed)
-        emit_json(rec.to_dict(), args)
+        if tracer is not None:
+            # traced validation rerun of the winning point (the sweep
+            # itself stays untraced; see trace_fleet_point)
+            from repro.tuning.fleet import trace_fleet_point
+            trace_fleet_point(w, env, rec.point, scenario=scenario,
+                              tracer=tracer, seed=args.seed)
+        out = rec.to_dict()
+        out["meta"] = run_manifest(
+            seed=args.seed,
+            config=dict(mode="fleet", **dataclasses.asdict(w)),
+            wall_s=time.perf_counter() - t0)
+        emit_obs(out, args, tracer)
+        emit_json(out, args)
         return 0
 
     if args.budget == "screen":
@@ -114,8 +134,14 @@ def main(argv: list[str] | None = None) -> int:
         budget = EvalBudget(rungs=rungs, max_rung0=10, seed=args.seed)
     else:
         budget = None                      # default_budget inside autotune
+    t0 = time.perf_counter()
     rec = autotune(w, env, budget=budget, kinds=tuple(
         k.strip() for k in args.kinds.split(",") if k.strip()))
+    if tracer is not None:
+        # traced validation rerun of the recommended config (the halving
+        # sweep stays untraced; see trace_candidate)
+        from repro.tuning.evaluate import trace_candidate
+        trace_candidate(w, env, rec.config, tracer=tracer, seed=args.seed)
     out = rec.to_dict()
     if args.write_rate > 0:
         # the workload churns: also pick the compaction knobs for the
@@ -125,6 +151,12 @@ def main(argv: list[str] | None = None) -> int:
         refine = 0 if args.budget == "screen" else 3
         out["ingest"] = tune_ingest(w, env, rec.config, refine=refine,
                                     seed=args.seed).to_dict()
+    out["meta"] = run_manifest(
+        seed=args.seed,
+        config=dict(mode="index", budget=args.budget,
+                    **dataclasses.asdict(w)),
+        wall_s=time.perf_counter() - t0)
+    emit_obs(out, args, tracer)
     emit_json(out, args)
     return 0
 

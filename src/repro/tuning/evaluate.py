@@ -219,6 +219,37 @@ def evaluate_candidate(w: WorkloadSpec, env: EnvSpec, pred: scr.Prediction,
                        rung=rung_idx, eval_n=rung.n)
 
 
+def trace_candidate(w: WorkloadSpec, env: EnvSpec, cand: Candidate, *,
+                    eval_n: int = 800, nq: int = 32, seed: int = 0,
+                    tracer=None):
+    """Re-run one (typically: the recommended) candidate with a tracer
+    attached, using the same rung recipe as :func:`evaluate_candidate`.
+
+    The halving sweep stays untraced — spans from discarded configs are
+    noise; the single validation rerun shows where the winner's time
+    goes.  Returns the engine report; the spans land in ``tracer``.
+    """
+    rung = _Rung(w, eval_n, nq, seed)
+    index = rung.index_for(cand)
+    params = _search_params(w, cand, index)
+    stream_q, stream_ids = _workload_stream(w, rung.queries, rung.seed)
+    cache_eval = 0
+    pinned: frozenset | None = None
+    if cand.cache_policy != "none" and env.cache_bytes > 0:
+        full_bytes = scr.index_bytes(w, cand)
+        cache_eval = int(env.cache_bytes
+                         * index.meta.index_bytes / max(full_bytes, 1.0))
+        cache_eval = min(cache_eval, index.meta.index_bytes)
+        if cand.cache_policy == "pinned":
+            pinned = hot_keys(index, stream_q, params, cache_eval)
+    cfg = EngineConfig(
+        storage=env.storage, concurrency=min(w.concurrency, len(stream_q)),
+        cache_bytes=cache_eval, cache_policy=cand.cache_policy,
+        pinned_keys=pinned, seed=rung.seed)
+    eng = QueryEngine(index, cfg)
+    return eng.run(stream_q, params, query_ids=stream_ids, tracer=tracer)
+
+
 def _score(o: EvalOutcome) -> tuple:
     """Feasible first, then full-scale QPS, then recall headroom."""
     return (o.final.feasible, o.final.pred_qps, o.recall_est)

@@ -136,6 +136,22 @@ def _eval_index(w: WorkloadSpec, eval_n: int, nq: int, seed: int):
     return index, queries, gt
 
 
+def _fleet_cfg(w: WorkloadSpec, env: EnvSpec, point: FleetPoint,
+               seed: int) -> FleetConfig:
+    """The sweep's concrete fleet config for one point — shared between
+    closed-loop pricing, open-loop pricing and traced validation so all
+    three measure the *same* fleet."""
+    # fixed total fleet cache: replication dilutes the per-shard share
+    per_shard_cache = env.cache_bytes // point.n_shards
+    return FleetConfig(
+        n_shards=point.n_shards, replication=point.replication,
+        storage=env.storage, concurrency=max(w.concurrency, 32),
+        shard_concurrency=8, queue_depth=64,
+        cache_bytes=per_shard_cache,
+        cache_policy="slru" if per_shard_cache > 0 else "none",
+        hedge=point.hedge, seed=seed)
+
+
 def evaluate_fleet_point(w: WorkloadSpec, env: EnvSpec, point: FleetPoint,
                          index, queries, gt, *, nprobe: int = 64,
                          baseline_qps: float | None = None,
@@ -147,15 +163,7 @@ def evaluate_fleet_point(w: WorkloadSpec, env: EnvSpec, point: FleetPoint,
     sweep measures added *capacity*, not an idle latency floor.
     """
     params = SearchParams(k=w.k, nprobe=min(nprobe, index.meta.n_lists))
-    # fixed total fleet cache: replication dilutes the per-shard share
-    per_shard_cache = env.cache_bytes // point.n_shards
-    cfg = FleetConfig(
-        n_shards=point.n_shards, replication=point.replication,
-        storage=env.storage, concurrency=max(w.concurrency, 32),
-        shard_concurrency=8, queue_depth=64,
-        cache_bytes=per_shard_cache,
-        cache_policy="slru" if per_shard_cache > 0 else "none",
-        hedge=point.hedge, seed=seed)
+    cfg = _fleet_cfg(w, env, point, seed)
     partition = ClusterPartition.build(index.meta.list_nbytes,
                                        point.n_shards, point.replication)
     rep = FleetRouter(index, cfg, partition=partition).run(queries, params)
@@ -266,14 +274,7 @@ def evaluate_fleet_load(w: WorkloadSpec, env: EnvSpec, point: FleetPoint,
     whether it keeps up: achieved vs offered QPS, goodput under the SLO
     and p99 sojourn (arrival -> completion, backlog wait included)."""
     params = SearchParams(k=w.k, nprobe=min(nprobe, index.meta.n_lists))
-    per_shard_cache = env.cache_bytes // point.n_shards
-    cfg = FleetConfig(
-        n_shards=point.n_shards, replication=point.replication,
-        storage=env.storage, concurrency=max(w.concurrency, 32),
-        shard_concurrency=8, queue_depth=64,
-        cache_bytes=per_shard_cache,
-        cache_policy="slru" if per_shard_cache > 0 else "none",
-        hedge=point.hedge, seed=seed)
+    cfg = _fleet_cfg(w, env, point, seed)
     partition = ClusterPartition.build(index.meta.list_nbytes,
                                        point.n_shards, point.replication)
     arrivals = scenario.make_arrivals(len(queries), cfg.concurrency,
@@ -327,3 +328,30 @@ def tune_fleet_for_load(w: WorkloadSpec, env: EnvSpec, scenario: Scenario,
         workload=w, env_storage=env.storage.name, scenario=scenario,
         point=pick.point, feasible=feasible,
         goodput_target=goodput_target, outcomes=outcomes)
+
+
+def trace_fleet_point(w: WorkloadSpec, env: EnvSpec, point: FleetPoint,
+                      *, scenario: Scenario | None = None, tracer=None,
+                      eval_n: int = 1200, nq: int = 48, nprobe: int = 32,
+                      seed: int = 0):
+    """Re-run one (typically: the recommended) fleet point with a tracer
+    attached, on the same eval index and config recipe the sweep used.
+
+    The sweep itself stays untraced — tracing all grid points would slow
+    the search for spans nobody reads; the validation rerun shows *why*
+    the winning point behaves as it does.  Returns the FleetReport; the
+    spans land in ``tracer``.
+    """
+    index, queries, _ = _eval_index(w, eval_n, nq, seed)
+    params = SearchParams(k=w.k, nprobe=min(nprobe, index.meta.n_lists))
+    cfg = _fleet_cfg(w, env, point, seed)
+    partition = ClusterPartition.build(index.meta.list_nbytes,
+                                       point.n_shards, point.replication)
+    arrivals = None
+    slo_s = None
+    if scenario is not None and scenario.kind != "closed":
+        arrivals = scenario.make_arrivals(len(queries), cfg.concurrency,
+                                          seed=seed)
+        slo_s = scenario.slo_s
+    return FleetRouter(index, cfg, partition=partition).run(
+        queries, params, arrivals=arrivals, slo_s=slo_s, tracer=tracer)

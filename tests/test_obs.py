@@ -1,0 +1,413 @@
+"""repro.obs: tracing is bit-exact, span trees are well-formed, the
+Perfetto export is valid JSON, and critical-path attribution accounts
+for the measured sojourn.  Plus the CLI plumbing and the one-sort
+percentile cache regression test."""
+import dataclasses
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.cluster_index import ClusterIndex
+from repro.core.graph_index import GraphIndex
+from repro.core.types import (ClusterIndexParams, GraphIndexParams,
+                              QueryMetrics, SearchParams)
+from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
+from repro.fleet import FleetConfig, run_fleet
+from repro.fleet.metrics import FleetQueryRecord, FleetReport
+from repro.obs import (MetricsRegistry, Tracer, attribute, chrome_trace,
+                       extract_paths, flame_summary, run_manifest,
+                       trace_diff, write_chrome_trace)
+from repro.obs.critical_path import STAGES
+from repro.obs.manifest import config_hash
+from repro.serving.engine import run_workload
+from repro.sim.arrivals import Poisson
+from repro.sim.faults import FaultSchedule, ShardFault
+from repro.storage.spec import TOS
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
+                           "golden_fleet_prerefactor.json")
+
+
+def _quiet(spec):
+    return dataclasses.replace(spec, ttfb_sigma=1e-9)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = scaled(DEEP_ANALOG, 1200, 32)
+    data, queries = make_dataset(spec)
+    ci = ClusterIndex.build(data, ClusterIndexParams(kmeans_iters=4, seed=0))
+    gi = GraphIndex.build(data, GraphIndexParams(
+        R=24, L_build=48, build_passes=1, pq_dims=24, seed=0))
+    return data, queries, ci, gi
+
+
+HEDGED_CFG = FleetConfig(n_shards=4, replication=2, concurrency=16,
+                         shard_concurrency=4, queue_depth=16,
+                         hedge=True, hedge_percentile=75.0, seed=5)
+
+
+@pytest.fixture(scope="module")
+def traced_hedged(setup):
+    """One traced 4-shard hedged run, shared by the span-shape tests."""
+    _, queries, ci, _ = setup
+    tracer = Tracer()
+    rep = run_fleet(ci, queries, SearchParams(k=10, nprobe=16),
+                    HEDGED_CFG, tracer=tracer)
+    return rep, tracer
+
+
+# ----------------------------------------------------- bit-exactness --
+
+def _ids_sha256(report) -> str:
+    h = hashlib.sha256()
+    for r in sorted(report.records, key=lambda r: r.qid):
+        h.update(np.asarray(r.qid).tobytes())
+        h.update(np.asarray(r.ids, dtype=np.int64).tobytes())
+    return h.hexdigest()
+
+
+def test_traced_fleet_reproduces_golden(setup):
+    """Acceptance: tracing observes, never perturbs — a traced run
+    still reproduces the pre-refactor golden reports bit for bit."""
+    _, queries, ci, _ = setup
+    golden = json.load(open(GOLDEN_PATH))
+    p = SearchParams(k=golden["params"]["k"],
+                     nprobe=golden["params"]["nprobe"])
+    configs = dict(
+        one_shard=FleetConfig(n_shards=1, replication=1, concurrency=8,
+                              shard_concurrency=8, queue_depth=64, seed=0),
+        four_shard=HEDGED_CFG)
+    for name, cfg in configs.items():
+        rep = run_fleet(ci, queries, p, cfg, tracer=Tracer())
+        g = golden[name]
+        assert rep.wall_time_s == pytest.approx(g["wall_time_s"],
+                                                rel=1e-9, abs=1e-12)
+        assert rep.qps == pytest.approx(g["qps"], rel=1e-9)
+        assert _ids_sha256(rep) == g["ids_sha256"]
+
+
+def test_traced_report_bit_identical_to_untraced(setup, traced_hedged):
+    _, queries, ci, _ = setup
+    plain = run_fleet(ci, queries, SearchParams(k=10, nprobe=16),
+                      HEDGED_CFG)
+    traced, _ = traced_hedged
+    assert plain.to_json() == traced.to_json()
+
+
+def test_traced_open_loop_with_faults_bit_identical(setup):
+    """The heavier codepaths (arrivals, faults, series ticker) are also
+    untouched by the tracer's presence."""
+    _, queries, ci, _ = setup
+    p = SearchParams(k=10, nprobe=16)
+    cfg = FleetConfig(n_shards=4, replication=2, concurrency=16,
+                      shard_concurrency=4, queue_depth=16, seed=7)
+    faults = FaultSchedule((ShardFault(shard=1, t_fail=0.01,
+                                       t_recover=0.05),))
+    kw = dict(arrivals=Poisson(rate_qps=400.0, n_total=2 * len(queries)),
+              slo_s=0.05, faults=faults)
+    plain = run_fleet(ci, queries, p, cfg,
+                      arrivals=Poisson(rate_qps=400.0,
+                                       n_total=2 * len(queries)),
+                      slo_s=0.05, faults=faults)
+    traced = run_fleet(ci, queries, p, cfg, tracer=Tracer(), **kw)
+    assert plain.to_json() == traced.to_json()
+
+
+# -------------------------------------------------- span well-formedness --
+
+EPS = 1e-9
+
+
+def _assert_well_formed(tracer):
+    spans = tracer.spans
+    assert spans, "traced run produced no spans"
+    for sp in spans:
+        assert sp.t1 is not None, f"unclosed span {sp.name}#{sp.sid}"
+        assert sp.t1 >= sp.t0 - EPS
+        if sp.parent is None:
+            continue
+        assert 0 <= sp.parent < sp.sid, "parent must precede child"
+        par = spans[sp.parent]
+        assert sp.t0 >= par.t0 - EPS, \
+            f"{sp.name}#{sp.sid} starts before parent {par.name}"
+        assert sp.t1 <= par.t1 + EPS, \
+            f"{sp.name}#{sp.sid} ends after parent {par.name}"
+
+
+def test_span_tree_well_formed_hedged(traced_hedged):
+    _, tracer = traced_hedged
+    _assert_well_formed(tracer)
+    names = {sp.name for sp in tracer.spans}
+    assert {"query", "round", "shard_job"} <= names
+    # hedge-race losers are parentless by design, and marked wasted
+    for sp in tracer.spans:
+        if sp.name == "shard_job" and sp.parent is None:
+            assert sp.attrs.get("wasted") is True
+
+
+def test_span_tree_well_formed_graph_multiround(setup):
+    """Graph fleets run multiple scatter-gather rounds per query: the
+    round spans must still nest correctly under the query root."""
+    _, queries, _, gi = setup
+    tracer = Tracer()
+    run_fleet(gi, queries, SearchParams(k=10, search_len=40, beamwidth=8),
+              FleetConfig(n_shards=4, replication=2, concurrency=8,
+                          shard_concurrency=4, queue_depth=32, seed=3),
+              tracer=tracer)
+    _assert_well_formed(tracer)
+    by_parent = tracer.children_index()
+    multi = [sp for sp in tracer.spans if sp.name == "query"
+             and sum(c.name == "round"
+                     for c in by_parent.get(sp.sid, [])) > 1]
+    assert multi, "expected at least one multi-round graph query"
+
+
+def test_single_engine_trace(setup):
+    """The single-node QueryEngine produces flat query trees with the
+    fetch/compute legs directly under the root."""
+    _, queries, ci, _ = setup
+    tracer = Tracer()
+    run_workload(ci, queries, SearchParams(k=10, nprobe=16), _quiet(TOS),
+                 concurrency=8, cache_policy="none", tracer=tracer)
+    _assert_well_formed(tracer)
+    roots = [sp for sp in tracer.spans if sp.name == "query"]
+    assert len(roots) == len(queries)
+    leg_names = {sp.name for sp in tracer.spans if sp.parent is not None}
+    assert "storage_fetch" in leg_names or "cache_fetch" in leg_names
+
+
+def test_sim_time_monotone_per_lane(traced_hedged):
+    """Span ids are issued in begin order, so t0 is non-decreasing in
+    sid only within one query tree; globally spans interleave — but a
+    child never begins before its local root."""
+    _, tracer = traced_hedged
+    spans = tracer.spans
+    for sp in spans:
+        p = sp.parent
+        while p is not None:
+            root = spans[p]
+            p = root.parent
+            if p is None:
+                assert sp.t0 >= root.t0 - EPS
+
+
+# ----------------------------------------------------------- export --
+
+def test_chrome_trace_schema(traced_hedged, tmp_path):
+    _, tracer = traced_hedged
+    path = tmp_path / "trace.json"
+    write_chrome_trace(path, tracer)
+    doc = json.loads(path.read_text())      # round-trips as valid JSON
+    events = doc["traceEvents"]
+    assert events and doc["displayTimeUnit"] == "ms"
+    begins: dict = {}
+    for ev in events:
+        assert isinstance(ev.get("ph"), str)
+        if ev["ph"] in ("b", "e", "i", "s", "f", "C"):
+            assert isinstance(ev["ts"], (int, float))
+            assert isinstance(ev["pid"], int)
+            assert isinstance(ev["tid"], int)
+            assert isinstance(ev["name"], str)
+        if ev["ph"] == "b":
+            begins[(ev["id"], ev["name"], ev["ts"])] = \
+                begins.get((ev["id"], ev["name"], ev["ts"]), 0) + 1
+        for v in ev.get("args", {}).values():
+            assert v is None or isinstance(v, (bool, int, float, str))
+    n_b = sum(1 for ev in events if ev["ph"] == "b")
+    n_e = sum(1 for ev in events if ev["ph"] == "e")
+    assert n_b == n_e == len(tracer.spans)
+    assert sum(1 for ev in events if ev["ph"] == "s") == len(tracer.flows)
+    # lane metadata names every process that carries events
+    pids = {ev["pid"] for ev in events if ev["ph"] != "M"}
+    named = {ev["pid"] for ev in events
+             if ev["ph"] == "M" and ev["name"] == "process_name"}
+    assert pids <= named
+
+
+def test_chrome_trace_counters_present(traced_hedged):
+    _, tracer = traced_hedged
+    doc = chrome_trace(tracer)
+    counters = [ev for ev in doc["traceEvents"] if ev["ph"] == "C"]
+    assert any(ev["name"] == "fleet.queue_depth" for ev in counters)
+
+
+def test_flame_summary_deterministic(traced_hedged):
+    _, tracer = traced_hedged
+    a = flame_summary(tracer)
+    b = flame_summary(tracer)
+    assert a == b
+    assert "query" in a and "shard_job" in a
+
+
+# ------------------------------------------------------- attribution --
+
+def test_attribution_accounts_for_sojourn(traced_hedged):
+    """Acceptance: the per-stage breakdown sums to the measured mean
+    sojourn within 1% (in practice: float-error exact)."""
+    rep, tracer = traced_hedged
+    att = attribute(tracer)
+    measured = float(np.mean([r.sojourn for r in rep.records]))
+    assert att.mean_sojourn == pytest.approx(measured, rel=1e-9)
+    accounted = sum(att.overall.values())
+    assert accounted == pytest.approx(att.mean_sojourn, rel=0.01)
+    assert set(att.overall) <= set(STAGES)
+    d = att.to_dict()
+    assert d["n_queries"] == len(rep.records)
+    assert att.render()        # renders without raising
+
+
+def test_per_query_paths_tile_sojourn(traced_hedged):
+    rep, tracer = traced_hedged
+    paths = extract_paths(tracer)
+    assert len(paths) == len(rep.records)
+    for qp in paths:
+        assert qp.accounted == pytest.approx(qp.sojourn, rel=1e-6,
+                                             abs=1e-12)
+
+
+def test_trace_diff_zero_and_antisymmetric(traced_hedged, setup):
+    rep, tracer = traced_hedged
+    a = attribute(tracer).to_dict()
+    assert trace_diff(a, a)["mean_sojourn_delta_s"] == 0.0
+    assert all(v == 0.0
+               for v in trace_diff(a, a)["stages_delta_s"].values())
+    _, queries, ci, _ = setup
+    tr2 = Tracer()
+    run_fleet(ci, queries, SearchParams(k=10, nprobe=16),
+              dataclasses.replace(HEDGED_CFG, hedge=False, seed=11),
+              tracer=tr2)
+    b = attribute(tr2).to_dict()
+    ab, ba = trace_diff(a, b), trace_diff(b, a)
+    assert ab["mean_sojourn_delta_s"] == -ba["mean_sojourn_delta_s"]
+    for k, v in ab["stages_delta_s"].items():
+        assert v == -ba["stages_delta_s"][k]
+
+
+# ----------------------------------------------------------- metrics --
+
+def test_metrics_registry():
+    m = MetricsRegistry()
+    m.counter("q").inc()
+    m.counter("q").inc(2)
+    m.gauge("depth").set(7)
+    h = m.histogram("lat_s")
+    for v in (0.001, 0.002, 0.004, 0.1):
+        h.observe(v)
+    m.snapshot(0.5)
+    m.counter("q").inc()
+    m.snapshot(1.0)
+    d = m.to_dict()
+    assert d["counters"]["q"] == 4
+    assert d["gauges"]["depth"] == 7
+    hist = d["histograms"]["lat_s"]
+    assert hist["count"] == 4
+    assert hist["min"] == pytest.approx(0.001)
+    assert hist["max"] == pytest.approx(0.1)
+    assert 0.001 <= h.quantile(0.5) <= 0.1
+    assert len(m.series) == 2
+    t0, row0 = m.series[0]
+    assert t0 == 0.5 and row0["q"] == 3
+
+
+def test_histogram_quantile_bounds():
+    from repro.obs.metrics import Histogram
+    h = Histogram("lat_s")
+    h.observe(0.01)
+    assert h.quantile(0.0) == pytest.approx(0.01)
+    assert h.quantile(1.0) == pytest.approx(0.01)
+    assert h.to_dict()["p50"] == pytest.approx(0.01, rel=0.2)
+
+
+# ----------------------------------------------------------- manifest --
+
+def test_run_manifest_fields():
+    meta = run_manifest(seed=3, config=dict(a=1), wall_s=1.23456,
+                        argv=["prog", "--x"])
+    assert set(meta) >= {"git_sha", "timestamp", "command", "python",
+                         "seed", "config_hash", "wall_s"}
+    assert meta["seed"] == 3
+    assert meta["command"] == "prog --x"
+    assert meta["wall_s"] == 1.235
+    # hash is stable across key order, sensitive to values
+    assert config_hash(dict(b=2, a=1)) == config_hash(dict(a=1, b=2))
+    assert config_hash(dict(a=1)) != config_hash(dict(a=2))
+
+
+# ---------------------------------------------------------------- CLI --
+
+def test_fleet_cli_trace_and_attrib(tmp_path, capsys):
+    from repro.fleet.__main__ import main
+    trace_path = tmp_path / "t.json"
+    rc = main(["--shards", "2", "--n", "600", "--queries", "16",
+               "--trace", str(trace_path), "--attrib", "--compact"])
+    assert rc == 0
+    out = json.loads(capsys.readouterr().out)
+    assert "attrib" in out and "meta" in out
+    assert out["attrib"]["accounted_s"] == pytest.approx(
+        out["attrib"]["mean_sojourn_s"], rel=0.01)
+    doc = json.loads(trace_path.read_text())
+    assert doc["traceEvents"]
+
+
+def test_fleet_cli_untraced_output_unchanged(capsys):
+    """--trace/--attrib off: no obs keys leak into the report."""
+    from repro.fleet.__main__ import main
+    rc = main(["--shards", "2", "--n", "600", "--queries", "16",
+               "--compact"])
+    assert rc == 0
+    out = json.loads(capsys.readouterr().out)
+    assert "attrib" not in out
+    assert "meta" in out          # the manifest is always present
+
+
+# ------------------------------------------- percentile cache (satellite) --
+
+def test_fleet_report_sorts_once_for_summary(monkeypatch):
+    """Regression: summary() on a large record list does ONE sort for
+    all latency percentiles + the mean, not one per call."""
+    import repro.fleet.metrics as fm
+
+    n = 1_000_000
+    rng = np.random.default_rng(0)
+    lat = rng.exponential(0.01, n)
+    ids = np.arange(10, dtype=np.int64)
+    dists = np.zeros(10, dtype=np.float32)
+    qm = QueryMetrics()
+    records = [FleetQueryRecord(
+        qid=i, start_t=0.0, end_t=float(lat[i]), ids=ids, dists=dists,
+        metrics=qm, rounds=1, n_jobs=1, shards_touched=1)
+        for i in range(n)]
+    rep = FleetReport(records=records, shard_stats=[], wall_time_s=1.0,
+                      n_shards=1, replication=1, concurrency=1,
+                      jobs_total=n, hedges_launched=0, hedge_wins=0,
+                      sheds_total=0, submissions_total=n)
+
+    calls = {"n": 0}
+    real_sort = fm.np.sort
+
+    def counting_sort(*args, **kw):
+        calls["n"] += 1
+        return real_sort(*args, **kw)
+
+    monkeypatch.setattr(fm.np, "sort", counting_sort)
+    assert calls["n"] == 0                     # lazy until first use
+    mean = rep.mean_latency
+    for p in (50, 99, 99.9):
+        rep.latency_percentile(p)
+    assert calls["n"] == 1
+    # and the cached-path values match numpy computed from scratch
+    assert mean == pytest.approx(float(np.mean(lat)))
+    assert rep.latency_percentile(99) == float(np.percentile(lat, 99))
+
+
+def test_percentile_matches_numpy_exactly():
+    rng = np.random.default_rng(1)
+    for n in (1, 2, 7, 100):
+        arr = np.sort(rng.normal(size=n))
+        for p in (0.0, 25.0, 50.0, 75.0, 99.0, 99.9, 100.0):
+            assert FleetReport._percentile(arr, p) == \
+                float(np.percentile(arr, p))

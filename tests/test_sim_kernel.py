@@ -104,6 +104,55 @@ def test_ticker_repeats_until_cancelled():
     assert ticks == pytest.approx([0.1, 0.2, 0.3, 0.4, 0.5])
 
 
+def test_ticker_cancel_before_first_fire():
+    k = Kernel()
+    ticks = []
+    ticker = k.every(0.1, ticks.append)
+    ticker.cancel()
+    k.at(0.5, lambda: None)      # keep the kernel non-empty past t=0.1
+    k.run()
+    assert ticks == []
+    assert ticker.cancelled
+
+
+def test_ticker_double_cancel_is_idempotent():
+    k = Kernel()
+    ticker = k.every(0.1, lambda now: None)
+    k.at(0.15, ticker.cancel)
+    k.at(0.25, ticker.cancel)    # second cancel must be a no-op
+    k.run()
+    assert ticker.cancelled
+
+
+def test_ticker_cancel_from_within_fn():
+    k = Kernel()
+    ticks = []
+
+    def fn(now):
+        ticks.append(now)
+        if len(ticks) == 3:
+            ticker.cancel()
+
+    ticker = k.every(0.1, fn)
+    k.run()
+    assert ticks == pytest.approx([0.1, 0.2, 0.3])
+
+
+def test_event_repr_includes_span_context():
+    """With a tracer attached, an event scheduled under a span names it;
+    without one, repr is unchanged."""
+    from repro.obs import Tracer
+    k = Kernel()
+    ev_plain = k.at(1.0, lambda: None)
+    assert "span=" not in repr(ev_plain)
+    tr = Tracer()
+    tr.attach(k)
+    sp = tr.begin("query", 0.0, qid=1)
+    k.current_span = sp
+    ev = k.at(1.0, lambda: None)
+    assert f"span=query#{sp.sid}" in repr(ev)
+
+
 # ----------------------------------------------------------- rng streams --
 
 def test_named_rng_streams_are_independent():
