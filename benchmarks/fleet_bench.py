@@ -41,7 +41,8 @@ from repro.core.flat import exact_topk
 from repro.core.types import ClusterIndexParams, SearchParams
 from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
 from repro.fleet import FleetConfig, run_fleet
-from repro.obs import Tracer, attribute, run_manifest
+from repro.obs import (PRICEBOOKS, MonitorConfig, Tracer, attribute,
+                       run_manifest)
 from repro.serving.engine import run_workload
 from repro.sim.arrivals import Poisson
 from repro.sim.faults import FaultSchedule, ShardFault
@@ -285,6 +286,30 @@ def bench_obs(index, queries, gt) -> dict:
                 attrib=d)
 
 
+def bench_cost(index, queries, gt) -> dict:
+    """Monitoring + costing observe, never perturb: a monitored, priced
+    run must reproduce the plain report bit for bit, and the dollar fold
+    is deterministic (the regression gate compares it run to run)."""
+    params = SearchParams(k=10, nprobe=64)
+    cfg = FleetConfig(n_shards=4, replication=2, storage=TOS,
+                      concurrency=24, shard_concurrency=4,
+                      queue_depth=32, seed=1)
+    plain = run_fleet(index, queries, params, cfg)
+    priced = run_fleet(index, queries, params, cfg,
+                       monitor=MonitorConfig(),
+                       pricebook=PRICEBOOKS["default"])
+    s = priced.summary()
+    alerts, cost = s.pop("alerts"), s.pop("cost")
+    bit_exact = s == plain.summary()
+    _check("obs-priced-bit-exact", bit_exact,
+           "monitored + priced fleet report is bit-identical to the "
+           "plain run minus the alerts/cost blocks")
+    emit("fleet/cost-default", 1e6 / max(priced.qps, 1e-9),
+         total_usd=cost["total_usd"],
+         usd_per_1k=cost["usd_per_1k_queries"])
+    return dict(bit_exact=bit_exact, fired=len(alerts["fired"]), **cost)
+
+
 def main() -> int:
     t0 = time.perf_counter()
     index, queries, gt = _setup()
@@ -297,6 +322,7 @@ def main() -> int:
         scenarios=dict(open_loop=bench_open_loop(index, queries, gt),
                        fault=bench_faults(index, queries, gt)),
         obs=bench_obs(index, queries, gt),
+        cost=bench_cost(index, queries, gt),
         failures=_failures,
     )
     results["attrib"] = results["obs"].pop("attrib")

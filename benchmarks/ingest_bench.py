@@ -168,10 +168,12 @@ def bench_compaction_storm(data, queries, gt) -> dict:
     quiet = run_fleet(make_mutable(_index(data)), queries, params, cfg,
                       arrivals=mk_arr())
     stream = synth_updates(data, rate, n_up, delete_frac=0.2, seed=5)
+    from repro.obs import PRICEBOOKS
     churn = run_fleet(make_mutable(_index(data)), queries, params, cfg,
                       arrivals=mk_arr(), updates=stream,
                       ingest=IngestConfig(delta_cap_bytes=16 * 1024,
-                                          recluster=False))
+                                          recluster=False),
+                      pricebook=PRICEBOOKS["default"])
     ing = churn.ingest
     row = dict(
         quiet_wall_s=round(quiet.wall_time_s, 6),
@@ -185,7 +187,8 @@ def bench_compaction_storm(data, queries, gt) -> dict:
         p99_outside_s=ing["query_p99_outside_compaction_s"],
         write_amplification=ing["write_amplification"],
         compaction_busy_s=ing["compaction_busy_s"],
-        flushes=ing["flushes"])
+        flushes=ing["flushes"],
+        cost=churn.cost)
     emit("ingest/storm", churn.latency_percentile(99) * 1e6,
          quiet_p99_ms=quiet.latency_percentile(99) * 1e3,
          churn_p99_ms=churn.latency_percentile(99) * 1e3,
@@ -199,6 +202,10 @@ def bench_compaction_storm(data, queries, gt) -> dict:
            row["churn_wall_s"] > row["quiet_wall_s"],
            f"wall quiet={row['quiet_wall_s']:.4f}s vs "
            f"churn={row['churn_wall_s']:.4f}s (want longer)")
+    _check("ingest-storm-meters-puts",
+           row["cost"]["put_usd"] > 0,
+           f"compaction writes priced as PUTs: "
+           f"put_usd={row['cost']['put_usd']} (want > 0)")
     return row
 
 

@@ -166,6 +166,34 @@ def bench_parity() -> dict:
                 tenant_qps=round(ten.fleet.qps, 2))
 
 
+def bench_showback() -> dict:
+    """Dollar show-back for the skewed two-tenant scenario.  Hard check:
+    the per-tenant rows (plus the unattributed residual) sum to the
+    fleet total within float error."""
+    import math
+
+    from repro.obs import PRICEBOOKS
+    cfg = _contended_cfg()
+    tenants = [materialize_tenant(s, base_seed=cfg.seed, tid=i)
+               for i, s in enumerate(_skewed_specs())]
+    rep = run_tenant_fleet(tenants, cfg, "weighted",
+                           pricebook=PRICEBOOKS["default"])
+    sb = rep.showback
+    _check("tenancy-showback-sums-to-fleet-total",
+           math.isclose(sb["sum_usd"], sb["fleet_total_usd"],
+                        rel_tol=1e-9, abs_tol=1e-12),
+           f"sum(rows)={sb['sum_usd']} vs fleet total "
+           f"{sb['fleet_total_usd']} (want exact within float error)")
+    for row in sb["rows"]:
+        if row["tenant"] == "(unattributed)":
+            continue
+        emit(f"tenancy/showback-{row['tenant']}",
+             max(row["total_usd"] * 1e9, 1.0),
+             total_usd=row["total_usd"], shared=row["shared_usd"],
+             usd_per_1k=row["usd_per_1k_queries"])
+    return sb
+
+
 def bench_tuning() -> dict:
     cfg = FleetConfig(n_shards=2, replication=1, concurrency=8,
                       cache_bytes=96 * 1024, cache_policy="slru", seed=0)
@@ -193,6 +221,7 @@ def main() -> int:
         quick=QUICK,
         policies=bench_policies(),
         parity=bench_parity(),
+        showback=bench_showback(),
         tuning=bench_tuning(),
         failures=_failures,
     )

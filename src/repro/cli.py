@@ -65,6 +65,63 @@ def emit_obs(out: dict, args, tracer) -> None:
         print(f"# wrote {args.trace}", file=sys.stderr)
 
 
+def add_monitor_args(p: argparse.ArgumentParser) -> None:
+    """--monitor / --alert-actions / --pricebook: live SLO monitoring
+    and dollar metering (repro.obs.monitor / repro.obs.cost)."""
+    g = p.add_argument_group("monitoring / costing")
+    g.add_argument("--monitor", action="store_true",
+                   help="attach live SLO monitors with burn-rate "
+                        "alerting (alert log lands in the JSON report; "
+                        "observation only unless --alert-actions)")
+    g.add_argument("--monitor-interval", type=float, default=0.05,
+                   help="rule-evaluation tick in virtual seconds")
+    g.add_argument("--alert-actions", action="store_true",
+                   help="let alerts actuate: scale-out on a page-"
+                        "severity latency burn, tenant deprioritization "
+                        "on a sustained ticket burn (requires --monitor;"
+                        " the run is no longer bit-exact vs unmonitored)")
+    g.add_argument("--recall-slo", type=float, default=None,
+                   metavar="FLOOR",
+                   help="with --monitor: also watch live recall@k "
+                        "against this floor (computes ground truth "
+                        "before the run; pure-query scenarios only)")
+    g.add_argument("--pricebook", default=None, metavar="NAME|PATH",
+                   help="price the run in dollars: a preset name "
+                        "(default, egress-heavy, dense-cache) or a JSON "
+                        "file of PriceBook fields (docs/cost.md)")
+
+
+def monitor_from_args(args, parser: argparse.ArgumentParser = None):
+    """A MonitorConfig when --monitor asked for one, else None."""
+    from repro.obs import MonitorConfig
+    if not args.monitor:
+        if args.alert_actions or args.recall_slo is not None:
+            flag = ("--alert-actions" if args.alert_actions
+                    else "--recall-slo")
+            msg = f"{flag} requires --monitor"
+            if parser is not None:
+                parser.error(msg)
+            raise SystemExit(f"error: {msg}")
+        return None
+    return MonitorConfig(interval_s=args.monitor_interval,
+                         actions=args.alert_actions,
+                         recall_target=args.recall_slo)
+
+
+def pricebook_from_args(args, parser: argparse.ArgumentParser = None):
+    """A PriceBook when --pricebook named one, else None."""
+    if args.pricebook is None:
+        return None
+    from repro.obs import resolve_pricebook
+    try:
+        return resolve_pricebook(args.pricebook)
+    except (KeyError, ValueError) as e:
+        msg = str(e).strip('"')
+        if parser is not None:
+            parser.error(msg)
+        raise SystemExit(f"error: {msg}")
+
+
 def add_scenario_args(p: argparse.ArgumentParser, *,
                       faults: bool = True) -> None:
     """The arrival-scenario axis shared by fleet and tuning.

@@ -29,9 +29,10 @@ import argparse
 import sys
 import time
 
-from repro.cli import (add_common_args, add_obs_args, add_scenario_args,
-                       autoscale_from_args, emit_json, emit_obs,
-                       faults_from_args, ingest_from_args,
+from repro.cli import (add_common_args, add_monitor_args, add_obs_args,
+                       add_scenario_args, autoscale_from_args, emit_json,
+                       emit_obs, faults_from_args, ingest_from_args,
+                       monitor_from_args, pricebook_from_args,
                        scenario_from_args, tracer_from_args)
 from repro.core.cluster_index import ClusterIndex
 from repro.core.flat import exact_topk
@@ -91,6 +92,7 @@ def build_parser() -> argparse.ArgumentParser:
                         "interference ratios in the report)")
     add_scenario_args(p)
     add_obs_args(p)
+    add_monitor_args(p)
     add_common_args(p)
     return p
 
@@ -182,17 +184,33 @@ def run_tenancy(args, storage) -> int:
         return made
 
     tracer = tracer_from_args(args)
+    monitor = monitor_from_args(args, parser)
+    pricebook = pricebook_from_args(args, parser)
+    if monitor is not None and monitor.recall_target is not None:
+        # live recall needs ground truth up front; tenant name -> gt
+        import dataclasses as _dc
+        gt_map = {}
+        for t in tenants_once():
+            if t.updates is None:
+                gt_map[t.spec.name] = exact_topk(t.data, t.queries,
+                                                 t.spec.k)[0]
+        monitor = _dc.replace(monitor, gt_ids=gt_map)
     t0 = time.perf_counter()
     if args.no_solo or faults is not None:
         # interference baselines are only meaningful on a healthy fleet
         rep = run_tenant_fleet(tenants_once(), cfg, args.cache_policy,
                                faults=faults,
-                               series_dt=args.series_dt, tracer=tracer)
+                               series_dt=args.series_dt, tracer=tracer,
+                               monitor=monitor, pricebook=pricebook)
     else:
         rep = measure_interference(tenants_once, cfg, args.cache_policy,
                                    series_dt=args.series_dt,
-                                   tracer=tracer)
+                                   tracer=tracer, monitor=monitor,
+                                   pricebook=pricebook)
     wall_s = time.perf_counter() - t0
+    if rep.showback is not None:
+        from repro.obs import format_showback
+        print(format_showback(rep.showback), file=sys.stderr)
     from repro.obs import run_manifest
     out = dict(config=cfg.to_dict(), cache_policy=args.cache_policy,
                tenant_specs=[s.to_dict() for s in specs],
@@ -270,13 +288,32 @@ def main(argv: list[str] | None = None) -> int:
     slo_s = scenario.slo_s if scenario.kind not in ("closed", "rw") \
         else None
     tracer = tracer_from_args(args)
+    parser = build_parser()
+    monitor = monitor_from_args(args, parser)
+    pricebook = pricebook_from_args(args, parser)
+    gt_pre = None
+    if monitor is not None:
+        import dataclasses as _dc
+        if scenario.kind == "rw":
+            # freshness-lag SLO: alert when updates take longer than
+            # the latency SLO to become visible
+            monitor = _dc.replace(monitor,
+                                  freshness_slo_s=args.slo_ms * 1e-3)
+        if monitor.recall_target is not None:
+            if updates is not None:
+                parser.error("--recall-slo needs a pure-query scenario: "
+                             "under churn the ground truth moves with "
+                             "every applied update")
+            gt_pre, _ = exact_topk(data, queries, args.k)
+            monitor = _dc.replace(monitor, gt_ids=gt_pre)
     t0 = time.perf_counter()
     report = run_fleet(index, queries, params, cfg,
                        arrivals=arrivals, faults=faults,
                        autoscale=autoscale, slo_s=slo_s,
                        series_dt=args.series_dt,
                        updates=updates, ingest=ingest_cfg,
-                       tracer=tracer)
+                       tracer=tracer, monitor=monitor,
+                       pricebook=pricebook)
     wall_s = time.perf_counter() - t0
 
     from repro.obs import run_manifest
@@ -298,6 +335,8 @@ def main(argv: list[str] | None = None) -> int:
             from repro.ingest.stream import churn_ground_truth
             gt = churn_ground_truth(data, queries=queries, k=args.k,
                                     stream=updates)
+        elif gt_pre is not None:
+            gt = gt_pre
         else:
             gt, _ = exact_topk(data, queries, args.k)
         out["recall"] = round(report.recall_against(gt), 4)

@@ -111,6 +111,9 @@ class FleetReport:
     scale_events: list | None = None      # autoscaler decision log
     fault_log: list | None = None         # fail/recover events observed
     ingest: dict | None = None            # repro.ingest accounting (rw)
+    # ------------------------------------------- live obs (PR 7) fields --
+    alerts: dict | None = None            # repro.obs.monitor summary
+    cost: dict | None = None              # repro.obs.cost fleet_cost
 
     # ------------------------------------------------------- throughput --
     @property
@@ -289,6 +292,12 @@ class FleetReport:
             out["faults"] = self.fault_log
         if self.ingest is not None:
             out["ingest"] = self.ingest
+        # live-obs blocks last: bit-exactness tests compare a monitored
+        # run's summary minus these keys against the plain run.
+        if self.alerts is not None:
+            out["alerts"] = self.alerts
+        if self.cost is not None:
+            out["cost"] = self.cost
         return out
 
     def to_json(self, indent: int | None = 2) -> str:

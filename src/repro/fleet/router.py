@@ -67,10 +67,12 @@ from repro.cache.slru import CACHE_POLICIES
 from repro.core.cluster_index import dedup_topk, scan_posting_lists
 from repro.core.cost_model import ComputeSpec, plan_compute_seconds
 from repro.core.types import (FetchBatch, FetchRequest, QueryMetrics,
-                              SearchParams, SearchResult)
+                              SearchParams, SearchResult, recall_at_k)
 from repro.fleet.metrics import FleetQueryRecord, FleetReport, FleetSeries
 from repro.fleet.partition import partition_for_index
 from repro.fleet.server import ShardGroup, ShardServer
+from repro.obs.cost import PriceBook, fleet_cost
+from repro.obs.monitor import FleetMonitor, MonitorConfig
 from repro.obs.trace import NULL_TRACER, Tracer, emit_job_spans
 from repro.serving.engine import EngineConfig, JobRecord
 from repro.sim.admission import AdmissionWindow
@@ -343,7 +345,9 @@ class FleetRouter:
             slo_s: float | None = None,
             series_dt: float | None = None,
             updates=None, ingest=None,
-            tracer: Tracer | None = None) -> FleetReport:
+            tracer: Tracer | None = None,
+            monitor: MonitorConfig | None = None,
+            pricebook: PriceBook | None = None) -> FleetReport:
         """``updates`` (an :class:`repro.ingest.stream.UpdateStream`)
         turns the run into a read-write workload: the router forwards
         each update to the shard groups owning its keys, every owner
@@ -351,7 +355,13 @@ class FleetRouter:
         and compaction schedule, with compaction I/O charged to its own
         instances' storage sims), and rewritten objects are invalidated
         from every instance cache.  With no updates the run is
-        byte-identical to the pure-query path."""
+        byte-identical to the pure-query path.
+
+        ``monitor`` attaches live SLO monitors with burn-rate alerting
+        (``repro.obs.monitor``); unless ``monitor.actions`` is set they
+        only observe, and the run stays bit-exact.  ``pricebook``
+        prices the run (``repro.obs.cost``) into the report's ``cost``
+        block — pure post-hoc arithmetic, never a kernel event."""
         cfg = self.cfg
         qids = list(query_ids) if query_ids is not None else list(
             range(len(queries)))
@@ -365,7 +375,8 @@ class FleetRouter:
                    and slo_s is None else slo_s),
             updates=updates, ingest_cfg=ingest)
         wall = self._execute([ctx], faults=faults, autoscale=autoscale,
-                             series_dt=series_dt, tracer=tracer)
+                             series_dt=series_dt, tracer=tracer,
+                             monitor=monitor, pricebook=pricebook)
         self.index = ctx.index          # make_mutable may have wrapped it
         stats = [srv.finalize_stats() for g in self.groups
                  for srv in g.all_servers()]
@@ -374,7 +385,7 @@ class FleetRouter:
         ingest_dict = None
         if ctx.ingest_report is not None:
             ingest_dict = ctx.ingest_report.to_dict(ctx.records)
-        return FleetReport(
+        report = FleetReport(
             records=ctx.records, shard_stats=stats, wall_time_s=wall,
             n_shards=cfg.n_shards, replication=cfg.replication,
             concurrency=cfg.concurrency, jobs_total=self._jobs_total,
@@ -389,12 +400,28 @@ class FleetRouter:
                           if self._autoscaler is not None else None),
             fault_log=self._fault_log if faults is not None else None,
             ingest=ingest_dict)
+        self.attach_obs(report)
+        return report
+
+    def attach_obs(self, report: FleetReport) -> None:
+        """Attach the monitor's alert block and the priced ``cost``
+        block to a finished report.  Costing reads the report's own
+        aggregates, so it must run after construction; both land in
+        dedicated fields so bit-exactness checks can compare everything
+        else unchanged."""
+        if self._slo_monitor is not None:
+            report.alerts = self._slo_monitor.summary()
+            report.alerts["actions"] = list(self._alert_actions)
+        if self._pricebook is not None:
+            report.cost = fleet_cost(report, self.cfg, self._pricebook)
 
     def _execute(self, ctxs: list[_TenantCtx], *,
                  faults: FaultSchedule | None = None,
                  autoscale: AutoscaleConfig | None = None,
                  series_dt: float | None = None,
-                 tracer: Tracer | None = None) -> float:
+                 tracer: Tracer | None = None,
+                 monitor: MonitorConfig | None = None,
+                 pricebook: PriceBook | None = None) -> float:
         """Drive the shared kernel over all tenant contexts; returns the
         run's wall time.  One context reproduces the pre-tenancy event
         sequence exactly (same RNG streams, same scheduling order).
@@ -449,10 +476,40 @@ class FleetRouter:
             self._obs_ticker = self.kernel.every(
                 series_dt if series_dt is not None else 0.05,
                 self._obs_snapshot)
+        # Live SLO monitors (repro.obs.monitor).  Like the obs ticker,
+        # the evaluation tick only reads router state and shifts later
+        # event seqs uniformly, so monitoring keeps runs bit-exact;
+        # only the (opt-in) action bus may perturb the schedule.
+        self._pricebook = pricebook
+        self._slo_monitor = None
+        self._monitor_ticker = None
+        self._alert_actions: list[dict] = []
+        if monitor is not None:
+            self._slo_monitor = FleetMonitor(monitor, tracer=self.tracer)
+            for ctx in ctxs:
+                if ctx.slo_s is not None:
+                    self._slo_monitor.monitor(
+                        f"{self._mon_name(ctx)}.latency", kind="latency",
+                        tenant=ctx.name)
+            self._monitor_ticker = self.kernel.every(
+                monitor.interval_s, self._monitor_tick)
+        # Instance-count limits for scale_up_one/scale_down_one: the
+        # autoscaler's bounds when it runs, else the monitor's cap for
+        # alert-driven scale-out.
+        self._scale_min = 1
+        self._scale_max = 4
+        if autoscale is not None:
+            self._scale_min = autoscale.min_instances
+            self._scale_max = autoscale.max_instances
+        elif monitor is not None:
+            self._scale_max = monitor.max_instances
         self._autoscaler = None
         if autoscale is not None:
             self._autoscaler = Autoscaler(autoscale, self)
             self._autoscaler.start(self.kernel)
+        if self._slo_monitor is not None and monitor.actions:
+            self._slo_monitor.bus.subscribe(self._alert_scale_out)
+            self._slo_monitor.bus.subscribe(self._alert_admission)
         if faults is not None:
             faults.install(self.kernel, self)
         for ctx in ctxs:
@@ -512,6 +569,15 @@ class FleetRouter:
                 on_new_list=lambda new_li, parent_li, ctx=ctx:
                     self._on_new_list(ctx, new_li, parent_li),
                 owned_lists=owned, inflight_floor=self.inflight_floor)
+        if (self._slo_monitor is not None
+                and self._slo_monitor.cfg.freshness_slo_s is not None):
+            bound = self._slo_monitor.cfg.freshness_slo_s
+            mname = self._mon_name(ctx)
+            ctx.ingest_report.on_apply = (
+                lambda kind, lag, ctx=ctx, mname=mname, bound=bound:
+                    self._slo_monitor.observe_freshness(
+                        self.kernel.now, f"{mname}.freshness", lag,
+                        bound, tenant=ctx.name))
 
     def _invalidate_key(self, tid: int, key) -> None:
         """Broadcast a rewritten object's staleness to every instance
@@ -588,6 +654,8 @@ class FleetRouter:
             self._monitor.cancel()
         if self._obs_ticker is not None:
             self._obs_ticker.cancel()
+        if self._monitor_ticker is not None:
+            self._monitor_ticker.cancel()
         if self._autoscaler is not None:
             self._autoscaler.stop()
 
@@ -950,6 +1018,22 @@ class FleetRouter:
         if ctx.slo_s is not None and sojourn <= ctx.slo_s:
             ctx.good_total += 1
             self._slice_counts[2] += 1
+        if self._slo_monitor is not None:
+            mon = self._slo_monitor
+            mname = self._mon_name(ctx)
+            if ctx.slo_s is not None:
+                mon.observe_latency(t, f"{mname}.latency", sojourn,
+                                    ctx.slo_s, tenant=ctx.name)
+            mcfg = mon.cfg
+            if mcfg.recall_target is not None and mcfg.gt_ids is not None:
+                gt = mcfg.gt_ids
+                if isinstance(gt, dict):
+                    gt = gt.get(ctx.name)
+                if gt is not None and fq.qid < len(gt):
+                    rec = recall_at_k(ids[ids >= 0], gt[fq.qid])
+                    mon.observe_recall(t, f"{mname}.recall", rec,
+                                       mcfg.recall_target,
+                                       tenant=ctx.name)
         if not ctx.adm.release(t):
             self._maybe_shutdown()
 
@@ -1007,9 +1091,8 @@ class FleetRouter:
         return sum(len(g.routable) for g in self.groups)
 
     def scale_up_one(self) -> bool:
-        cfg_as = self._autoscaler.cfg
         cands = [g for g in self.groups
-                 if g.alive and len(g.routable) < cfg_as.max_instances]
+                 if g.alive and len(g.routable) < self._scale_max]
         if not cands:
             return False
         grp = max(cands, key=lambda g: (
@@ -1019,15 +1102,103 @@ class FleetRouter:
         return True
 
     def scale_down_one(self) -> bool:
-        cfg_as = self._autoscaler.cfg
         cands = [g for g in self.groups
-                 if len(g.routable) > cfg_as.min_instances]
+                 if len(g.routable) > self._scale_min]
         if not cands:
             return False
         grp = min(cands, key=lambda g: (
             sum(s.load for s in g.routable) / len(g.routable),
             g.shard_id))
         return grp.begin_drain(self.kernel.now) is not None
+
+    # -------------------------------------------- live SLO monitoring --
+    def _mon_name(self, ctx: _TenantCtx) -> str:
+        """Monitor namespace: ``fleet`` for the single-tenant run,
+        the tenant name otherwise."""
+        return "fleet" if len(self.ctxs) == 1 else ctx.name
+
+    def _monitor_tick(self, now: float) -> None:
+        """Rule-evaluation tick: reads monitor state, fires/clears
+        alerts.  With the action bus disabled this is read-only."""
+        self._slo_monitor.tick(now)
+
+    def _alert_scale_out(self, event: str, alert, now: float) -> None:
+        """Action-bus subscriber: a *page* (fast-burn) latency alert
+        adds an instance to the most loaded shard.  Routed through the
+        autoscaler when one is running so both policies share a
+        cooldown and an event log; standalone otherwise, capped by
+        ``MonitorConfig.max_instances``."""
+        if event != "fired" or alert.severity != "page":
+            return
+        if not alert.monitor.endswith(".latency"):
+            return
+        if self._autoscaler is not None:
+            acted = self._autoscaler.alert_scale_up(now, alert)
+        else:
+            acted = self.scale_up_one()
+        if acted:
+            self._alert_actions.append(dict(
+                t=round(now, 6), action="scale_up",
+                monitor=alert.monitor, rule=alert.rule,
+                instances=self.total_instances))
+            if self.tracer.enabled:
+                self.tracer.instant("alert_action_scale_up", now,
+                                    monitor=alert.monitor,
+                                    instances=self.total_instances)
+
+    def _alert_admission(self, event: str, alert, now: float) -> None:
+        """Action-bus subscriber: a *ticket* (slow sustained burn)
+        latency alert from one tenant of a multi-tenant fleet shrinks
+        that tenant's admission window by one (floor 1), restored on
+        clear.  The over-budget tenant's excess queries wait in its own
+        backlog instead of occupying shared shard queues — its burn
+        becomes backlog wait it already owns, and the other tenants'
+        queues drain."""
+        if len(self.ctxs) <= 1 or alert.tenant is None:
+            return
+        if alert.severity != "ticket" or \
+                not alert.monitor.endswith(".latency"):
+            return
+        ctx = next((c for c in self.ctxs if c.name == alert.tenant),
+                   None)
+        if ctx is None or ctx.adm is None:
+            return
+        if event == "fired":
+            if ctx.adm.window <= 1:
+                return
+            ctx.adm.window -= 1
+            action = "deprioritize"
+        else:
+            if ctx.adm.window >= ctx.window:
+                return
+            ctx.adm.window += 1
+            action = "restore"
+        self._alert_actions.append(dict(
+            t=round(now, 6), action=action, tenant=ctx.name,
+            monitor=alert.monitor, rule=alert.rule,
+            window=ctx.adm.window))
+        if self.tracer.enabled:
+            self.tracer.instant(f"alert_action_{action}", now,
+                                tenant=ctx.name, window=ctx.adm.window)
+
+    def _running_cost(self, now: float) -> dict:
+        """Dollars accrued so far (read-only; feeds the trace's cost
+        counter tracks — the final report uses :func:`fleet_cost`)."""
+        get_req = put_req = read_bytes = 0
+        inst_s = 0.0
+        for g in self.groups:
+            for srv in g.all_servers():
+                sim = srv.engine.sim
+                get_req += sim.total_requests - sim.total_put_requests
+                put_req += sim.total_put_requests
+                read_bytes += sim.total_bytes - sim.total_put_bytes
+                inst_s += srv.active_seconds(now)
+        comp = self._pricebook.components(
+            get_requests=get_req, put_requests=put_req,
+            read_bytes=read_bytes, instance_seconds=inst_s,
+            cache_byte_seconds=self.cfg.cache_bytes * inst_s)
+        comp["total_usd"] = sum(comp.values())
+        return comp
 
     # ----------------------------------------------------------- monitor --
     def _queue_depth(self) -> int:
@@ -1044,6 +1215,9 @@ class FleetRouter:
         m = self.tracer.metrics
         m.gauge("fleet.queue_depth").set(self._queue_depth())
         m.gauge("fleet.instances").set(self.total_instances)
+        if self._pricebook is not None:
+            for k, v in self._running_cost(now).items():
+                m.gauge(f"cost.{k}").set(round(v, 9))
         m.snapshot(now)
 
     def _flush_slice(self, now: float) -> None:
@@ -1063,10 +1237,12 @@ def run_fleet(index, queries: np.ndarray, params: SearchParams,
               slo_s: float | None = None,
               series_dt: float | None = None,
               updates=None, ingest=None,
-              tracer: Tracer | None = None) -> FleetReport:
+              tracer: Tracer | None = None,
+              monitor: MonitorConfig | None = None,
+              pricebook: PriceBook | None = None) -> FleetReport:
     """One-call fleet evaluation (the fleet analogue of run_workload)."""
     return FleetRouter(index, cfg).run(
         queries, params, query_ids=query_ids, arrivals=arrivals,
         faults=faults, autoscale=autoscale, slo_s=slo_s,
         series_dt=series_dt, updates=updates, ingest=ingest,
-        tracer=tracer)
+        tracer=tracer, monitor=monitor, pricebook=pricebook)

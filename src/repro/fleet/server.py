@@ -44,6 +44,8 @@ class ShardStats:
     busy_s: float = 0.0            # sum of job service times (no queue wait)
     storage_bytes: int = 0
     storage_requests: int = 0
+    storage_put_bytes: int = 0     # compaction writes (subset of totals)
+    storage_put_requests: int = 0
     failures: int = 0
     jobs_aborted: int = 0
 
@@ -55,7 +57,9 @@ class ShardStats:
                  peak_inflight=self.peak_inflight,
                  busy_s=round(self.busy_s, 9),
                  storage_bytes=self.storage_bytes,
-                 storage_requests=self.storage_requests)
+                 storage_requests=self.storage_requests,
+                 storage_put_bytes=self.storage_put_bytes,
+                 storage_put_requests=self.storage_put_requests)
         if self.failures:
             d.update(failures=self.failures, jobs_aborted=self.jobs_aborted)
         return d
@@ -206,6 +210,9 @@ class ShardServer:
     def finalize_stats(self) -> ShardStats:
         self.stats.storage_bytes = self.engine.sim.total_bytes
         self.stats.storage_requests = self.engine.sim.total_requests
+        self.stats.storage_put_bytes = self.engine.sim.total_put_bytes
+        self.stats.storage_put_requests = (
+            self.engine.sim.total_put_requests)
         return self.stats
 
 

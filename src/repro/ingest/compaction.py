@@ -250,7 +250,7 @@ class IngestAgent:
         self.report.compaction_write_bytes += write_bytes
         self.report.compaction_write_requests += len(affected)
         self._sim().submit_batch(
-            write_bytes, len(affected),
+            write_bytes, len(affected), put=True,
             on_done=lambda tk: self._install_cluster(
                 affected, entries, tombs, t0))
 
@@ -304,7 +304,8 @@ class IngestAgent:
         self.report.compaction_write_bytes += nb
         self.report.compaction_write_requests += 2
         self._sim().submit_batch(
-            nb, 2, on_done=lambda tk: self._recluster_install(li, t0))
+            nb, 2, put=True,
+            on_done=lambda tk: self._recluster_install(li, t0))
 
     def _recluster_install(self, li: int, t0: float) -> None:
         res = self.mutable.split_list(li)
@@ -448,7 +449,7 @@ class IngestAgent:
         self.report.compaction_write_bytes += nb * n_blocks
         self.report.compaction_write_requests += n_writes
         self._sim().submit_batch(
-            max(1, nb * n_blocks), n_writes,
+            max(1, nb * n_blocks), n_writes, put=True,
             on_done=lambda tk: self._flush_graph_install(
                 entries, tombs, new_nodes, rewrites, dels, t0))
 

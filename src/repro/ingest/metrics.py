@@ -82,6 +82,11 @@ class IngestReport:
     peak_delta_bytes: int = 0
     final_delta_bytes: int = 0
     unsealed: int = 0                     # updates still delta-only at end
+    #: optional live hook ``fn(kind, lag_s)`` called on every apply —
+    #: the fleet monitor subscribes its freshness-lag SLO here.  Not
+    #: data: excluded from comparison and repr, never serialized.
+    on_apply: object = dataclasses.field(default=None, repr=False,
+                                         compare=False)
 
     # ------------------------------------------------------------ derived --
     @property
@@ -106,6 +111,8 @@ class IngestReport:
         else:
             self.deletes_applied += 1
         self.visibility_lags.append(lag)
+        if self.on_apply is not None:
+            self.on_apply(kind, lag)
 
     def record_seal(self, lags: list[float]) -> None:
         self.seal_lags.extend(lags)

@@ -1,21 +1,32 @@
-"""repro.obs — tracing, metrics, and critical-path attribution.
+"""repro.obs — tracing, metrics, live monitoring, and cost.
 
 Observability for the simulated serving stack: simulated-time span
 trees (:mod:`~repro.obs.trace`), a fixed-memory metrics registry
 (:mod:`~repro.obs.metrics`), Chrome-trace/Perfetto export
 (:mod:`~repro.obs.export`), per-query critical-path attribution and
-run-to-run trace diffs (:mod:`~repro.obs.critical_path`), and
-self-describing run manifests (:mod:`~repro.obs.manifest`).
+run-to-run trace diffs (:mod:`~repro.obs.critical_path`),
+self-describing run manifests (:mod:`~repro.obs.manifest`), live SLO
+monitors with burn-rate alerting (:mod:`~repro.obs.monitor`), and
+dollar-denominated cost metering with per-tenant show-back
+(:mod:`~repro.obs.cost`).
 
-The cardinal rule: tracing observes and never perturbs.  A run with a
-tracer attached is bit-exact against the same run without one.
+The cardinal rule: observing never perturbs.  A run with a tracer,
+monitor or price book attached is bit-exact against the same run
+without them — only the opt-in alert->action bus (``--alert-actions``)
+may change a schedule, and then on purpose.
 """
+from repro.obs.cost import (PRICEBOOKS, PriceBook, fleet_cost,
+                            format_showback, resolve_pricebook,
+                            tenant_showback)
 from repro.obs.critical_path import (AttributionReport, attribute,
                                      extract_paths, render_diff,
                                      trace_diff)
 from repro.obs.export import chrome_trace, flame_summary, write_chrome_trace
 from repro.obs.manifest import run_manifest
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.monitor import (DEFAULT_RULES, ActionBus, Alert, AlertLog,
+                               BurnRateRule, FleetMonitor, MonitorConfig,
+                               SLOMonitor)
 from repro.obs.trace import NULL_TRACER, NullTracer, Span, Tracer
 
 __all__ = [
@@ -25,4 +36,8 @@ __all__ = [
     "attribute", "extract_paths", "AttributionReport",
     "trace_diff", "render_diff",
     "run_manifest",
+    "MonitorConfig", "FleetMonitor", "SLOMonitor", "BurnRateRule",
+    "Alert", "AlertLog", "ActionBus", "DEFAULT_RULES",
+    "PriceBook", "PRICEBOOKS", "resolve_pricebook",
+    "fleet_cost", "tenant_showback", "format_showback",
 ]

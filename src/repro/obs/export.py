@@ -9,7 +9,12 @@ The export maps a run onto trace-viewer concepts:
   queue/fetch/compute legs;
 * hedges draw **flow arrows** from the round that launched them to the
   wasted attempt; sheds, faults, recoveries and autoscale decisions are
-  **instant** events; registry snapshots become **counter** tracks.
+  **instant** events; registry snapshots become **counter** tracks
+  (``cost.*`` dollar and ``slo.*`` burn-rate gauges included, when a
+  price book / monitor is attached);
+* alert lifecycle events (``alert_fired`` / ``alert_cleared`` and the
+  ``alert_action_*`` actuations) get their own ``alert`` category so
+  they can be isolated in the viewer's filter box.
 
 All slices are emitted as async begin/end pairs (``ph: "b"/"e"``) keyed
 by the local tree root, because many queries overlap on one lane and
@@ -90,7 +95,8 @@ def chrome_trace(tracer) -> dict:
         events.append(dict(common, ph="e", ts=sp.t1 * _US))
 
     for name, t, attrs in tracer.instants:
-        events.append(dict(ph="i", cat="sim", name=name, ts=t * _US,
+        cat = "alert" if name.startswith("alert_") else "sim"
+        events.append(dict(ph="i", cat=cat, name=name, ts=t * _US,
                            pid=_ROUTER_PID, tid=0, s="g",
                            args=_jsonable(attrs or {})))
 

@@ -51,8 +51,18 @@ class Histogram:
     geometric sub-buckets covering [``lo``, ``hi``); samples outside the
     range clamp into the first/last bucket.  Quantiles interpolate
     within the winning bucket, which is plenty for attribution-grade
-    summaries (relative error <= the bucket width, ~12% at the default
-    8 buckets/decade).
+    summaries.
+
+    Error bound (tested by ``test_histogram_quantile_exactness``): for
+    in-range samples, the estimate and the true (inverted-CDF) sample
+    quantile land in the *same* bucket, so the ratio estimate/true lies
+    in ``[1/base, base]`` with ``base = 10**(1/buckets_per_decade)`` —
+    a worst-case relative error of ``base - 1`` (~33% at the default 8
+    buckets/decade — an earlier doc claimed ~12%, which the bound does
+    not support; that would need ~20 buckets/decade).  The final clamp
+    to [``min``, ``max``] makes q=0/q=1 exact for in-range samples and
+    keeps every estimate inside the observed value range even when
+    samples clamped into the edge buckets distort their bucket's edges.
     """
 
     __slots__ = ("name", "lo", "hi", "_base", "_n_buckets", "counts",

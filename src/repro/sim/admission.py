@@ -76,9 +76,16 @@ class AdmissionWindow:
     # ------------------------------------------------------ completions --
     def release(self, t: float) -> bool:
         """One in-service item finished at virtual time ``t``: start the
-        next backlogged item at exactly ``t``, or shrink the window.
-        Returns True when a backlogged item was started."""
-        if self.backlog:
+        next backlogged item at exactly ``t``, or shrink the in-service
+        count.  Returns True when a backlogged item was started.
+
+        The ``in_window <= window`` guard only matters when ``window``
+        was shrunk mid-run (alert-driven tenant deprioritization,
+        ``repro.obs.monitor``): in-flight items above the new window
+        drain off instead of being replaced from the backlog.  With a
+        static window the guard always holds at this point, so the
+        behavior (and the golden files) are unchanged."""
+        if self.backlog and self.in_window <= self.window:
             self._start(self.backlog.popleft(), t)
             return True
         self.in_window -= 1

@@ -113,3 +113,27 @@ class Autoscaler:
                 tr.instant(f"autoscale_{action}", now, p99_s=round(p99, 6),
                            error=round(err, 4),
                            instances=self.fleet.total_instances)
+
+    # ------------------------------------------------------- alert hook --
+    def alert_scale_up(self, now: float, alert) -> bool:
+        """Action-bus subscriber (``repro.obs.monitor``): a fired
+        page-severity burn alert forces a scale-up decision *between*
+        periodic checks.  The cooldown still applies — the burn windows
+        and the controller share one actuation budget, so the two
+        policies cannot fight each other into oscillation."""
+        if now - self._last_action_t < self.cfg.cooldown_s:
+            return False
+        if not self.fleet.scale_up_one():
+            return False
+        self._last_action_t = now
+        self.events.append(dict(
+            t=round(now, 6), action="up",
+            reason=f"alert:{alert.monitor}/{alert.rule}",
+            instances=self.fleet.total_instances))
+        if self._kernel is not None:
+            tr = self._kernel.tracer
+            if tr.enabled:
+                tr.instant("autoscale_up", now,
+                           reason=f"alert:{alert.monitor}/{alert.rule}",
+                           instances=self.fleet.total_instances)
+        return True

@@ -108,9 +108,13 @@ class StorageSim:
         self._start_evs: dict[int, Event] = {}
         self._completion_ev: Event | None = None
         self.completed: list[BatchTicket] = []   # callback-less tickets
-        # aggregates
+        # aggregates (puts are also included in the totals: a PUT is
+        # admitted and transferred exactly like a GET, it just bills
+        # differently — repro.obs.cost meters the split)
         self.total_bytes = 0
         self.total_requests = 0
+        self.total_put_bytes = 0
+        self.total_put_requests = 0
 
     # ----------------------------------------------------------- submit --
     def sample_ttfb(self) -> float:
@@ -119,9 +123,14 @@ class StorageSim:
         return float(np.exp(self.rng.normal(mu, s)))
 
     def submit_batch(self, nbytes: int, n_requests: int,
-                     on_done: Callable[[BatchTicket], None] | None = None
-                     ) -> BatchTicket:
-        """Admit a dependency-free batch of GETs at the current time."""
+                     on_done: Callable[[BatchTicket], None] | None = None,
+                     *, put: bool = False) -> BatchTicket:
+        """Admit a dependency-free batch of GETs at the current time.
+
+        ``put=True`` marks the batch as object-store writes (compaction
+        flushes): identical simulation behavior, but metered separately
+        so the cost model can price PUT requests at their (much higher)
+        rate."""
         t = self.kernel.now
         tid = self._next_id
         self._next_id += 1
@@ -138,6 +147,9 @@ class StorageSim:
         self._start_evs[tid] = self.kernel.at(start_t, self._start, tid)
         self.total_bytes += nbytes
         self.total_requests += n_requests
+        if put:
+            self.total_put_bytes += nbytes
+            self.total_put_requests += n_requests
         return ticket
 
     # ------------------------------------------------------------ events --

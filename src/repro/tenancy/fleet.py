@@ -193,7 +193,8 @@ class MultiTenantRouter(FleetRouter):
 
     def run_tenants(self, *, faults=None, autoscale=None,
                     series_dt: float | None = None,
-                    tracer=None) -> MultiTenantReport:
+                    tracer=None, monitor=None,
+                    pricebook=None) -> MultiTenantReport:
         cfg = self.cfg
         windows = fair_share_windows(
             cfg.concurrency, [t.spec.weight for t in self.tenants])
@@ -218,7 +219,8 @@ class MultiTenantRouter(FleetRouter):
                 name=t.spec.name, updates=t.updates,
                 ingest_cfg=t.ingest_cfg))
         wall = self._execute(ctxs, faults=faults, autoscale=autoscale,
-                             series_dt=series_dt, tracer=tracer)
+                             series_dt=series_dt, tracer=tracer,
+                             monitor=monitor, pricebook=pricebook)
         return self._build_report(ctxs, wall, faults)
 
     # ------------------------------------------------------------ report --
@@ -270,10 +272,19 @@ class MultiTenantRouter(FleetRouter):
             scale_events=(self._autoscaler.events
                           if self._autoscaler is not None else None),
             fault_log=self._fault_log if faults is not None else None)
+        self.attach_obs(fleet)
+        showback = None
+        if self._pricebook is not None:
+            from repro.obs.cost import tenant_showback
+            showback = tenant_showback(slices, fleet, cfg,
+                                       self._pricebook)
+            for sl, row in zip(slices, showback["rows"]):
+                sl.cost = row
         reallocs = sum(getattr(a, "reallocations", 0) for a in assemblies)
         return MultiTenantReport(tenants=slices, fleet=fleet,
                                  cache_policy=self.cache_policy,
-                                 reallocations=reallocs)
+                                 reallocations=reallocs,
+                                 showback=showback)
 
 
 def run_tenant_fleet(tenants: list[Tenant] | list[TenantSpec],
@@ -282,7 +293,8 @@ def run_tenant_fleet(tenants: list[Tenant] | list[TenantSpec],
                      series_dt: float | None = None,
                      policy_kwargs: dict | None = None,
                      quota_weights: dict[int, float] | None = None,
-                     tracer=None) -> MultiTenantReport:
+                     tracer=None, monitor=None,
+                     pricebook=None) -> MultiTenantReport:
     """One-call multi-tenant evaluation (the tenancy analogue of
     :func:`repro.fleet.run_fleet`).  Accepts either materialised
     :class:`Tenant` s or bare :class:`TenantSpec` s (materialised with
@@ -294,14 +306,16 @@ def run_tenant_fleet(tenants: list[Tenant] | list[TenantSpec],
                                policy_kwargs=policy_kwargs,
                                quota_weights=quota_weights)
     return router.run_tenants(faults=faults, autoscale=autoscale,
-                              series_dt=series_dt, tracer=tracer)
+                              series_dt=series_dt, tracer=tracer,
+                              monitor=monitor, pricebook=pricebook)
 
 
 def measure_interference(make_tenants: Callable[[], list[Tenant]],
                          cfg: FleetConfig, cache_policy: str = "shared",
                          *, policy_kwargs: dict | None = None,
                          series_dt: float | None = None,
-                         tracer=None) -> MultiTenantReport:
+                         tracer=None, monitor=None,
+                         pricebook=None) -> MultiTenantReport:
     """Run the shared fleet, then each tenant **solo** on an identical
     fleet, and attach the solo p99 sojourns so every slice reports its
     interference ratio (p99 shared / p99 solo).  ``make_tenants`` is a
@@ -309,10 +323,12 @@ def measure_interference(make_tenants: Callable[[], list[Tenant]],
     arrival seeding guarantees the solo run replays the tenant's exact
     shared-run arrival sample, so the ratio measures contention, not
     seed noise."""
-    # only the shared run is traced: solo reruns are per-tenant controls
+    # only the shared run is traced (and monitored/priced): solo reruns
+    # are per-tenant controls
     shared = run_tenant_fleet(make_tenants(), cfg, cache_policy,
                               policy_kwargs=policy_kwargs,
-                              series_dt=series_dt, tracer=tracer)
+                              series_dt=series_dt, tracer=tracer,
+                              monitor=monitor, pricebook=pricebook)
     fresh = make_tenants()
     for i, sl in enumerate(shared.tenants):
         solo = run_tenant_fleet([fresh[i]], cfg, cache_policy,

@@ -41,6 +41,7 @@ class TenantSlice:
     window: int                    # admission fair share
     solo_p99_s: float | None = None    # attached by interference probes
     ingest: dict | None = None
+    cost: dict | None = None       # this tenant's show-back row ($)
 
     # ------------------------------------------------------------ stats --
     @property
@@ -121,6 +122,8 @@ class TenantSlice:
                 interference_ratio=round(self.interference_ratio, 4))
         if self.ingest is not None:
             out["ingest"] = self.ingest
+        if self.cost is not None:
+            out["cost"] = self.cost
         return out
 
 
@@ -132,6 +135,7 @@ class MultiTenantReport:
     fleet: FleetReport             # aggregate (all records, shard stats)
     cache_policy: str
     reallocations: int = 0         # weighted-policy quota moves (Σ inst.)
+    showback: dict | None = None   # per-tenant $ table (repro.obs.cost)
 
     def tenant(self, name: str) -> TenantSlice:
         for t in self.tenants:
@@ -163,6 +167,8 @@ class MultiTenantReport:
             fleet=self.fleet.summary())
         if self.cache_policy == "weighted":
             out["reallocations"] = self.reallocations
+        if self.showback is not None:
+            out["showback"] = self.showback
         return out
 
     def to_json(self, indent: int | None = 2) -> str:

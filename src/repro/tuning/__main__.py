@@ -24,9 +24,10 @@ import dataclasses
 import sys
 import time
 
-from repro.cli import (add_common_args, add_obs_args, add_scenario_args,
-                       emit_json, emit_obs, scenario_from_args,
-                       tracer_from_args)
+from repro.cli import (add_common_args, add_monitor_args, add_obs_args,
+                       add_scenario_args, emit_json, emit_obs,
+                       monitor_from_args, pricebook_from_args,
+                       scenario_from_args, tracer_from_args)
 from repro.tuning.evaluate import EvalBudget
 from repro.tuning.fleet import tune_fleet, tune_fleet_for_load
 from repro.tuning.recommend import autotune
@@ -77,6 +78,7 @@ def build_parser() -> argparse.ArgumentParser:
                    help="consider hedged fleets (R >= 2 points)")
     add_scenario_args(p, faults=False)
     add_obs_args(p)
+    add_monitor_args(p)
     add_common_args(p)
     return p
 
@@ -96,6 +98,17 @@ def main(argv: list[str] | None = None) -> int:
                   cache_bytes=int(args.cache_gb * 2**30))
 
     tracer = tracer_from_args(args)
+    parser = build_parser()
+    monitor = monitor_from_args(args, parser)
+    pricebook = pricebook_from_args(args, parser)
+    if (monitor is not None or pricebook is not None) and not args.fleet:
+        parser.error("--monitor/--pricebook apply to the fleet-sizing "
+                     "validation rerun; add --fleet (index tuning has no "
+                     "serving run to monitor or meter)")
+    if monitor is not None and monitor.recall_target is not None:
+        parser.error("--recall-slo is a serving-run knob (python -m "
+                     "repro.fleet); the sizing rerun has no precomputed "
+                     "ground truth to judge live recall against")
     from repro.obs import run_manifest
 
     if args.fleet:
@@ -111,13 +124,20 @@ def main(argv: list[str] | None = None) -> int:
             rec = tune_fleet_for_load(w, env, scenario,
                                       goodput_target=args.goodput,
                                       hedge=args.hedge, seed=args.seed)
-        if tracer is not None:
-            # traced validation rerun of the winning point (the sweep
-            # itself stays untraced; see trace_fleet_point)
-            from repro.tuning.fleet import trace_fleet_point
-            trace_fleet_point(w, env, rec.point, scenario=scenario,
-                              tracer=tracer, seed=args.seed)
         out = rec.to_dict()
+        if tracer is not None or monitor is not None \
+                or pricebook is not None:
+            # validation rerun of the winning point (the sweep itself
+            # stays untraced/unmetered; see trace_fleet_point) — the
+            # recommendation carries its alert log and dollar estimate
+            from repro.tuning.fleet import trace_fleet_point
+            vrep = trace_fleet_point(w, env, rec.point, scenario=scenario,
+                                     tracer=tracer, monitor=monitor,
+                                     pricebook=pricebook, seed=args.seed)
+            if vrep.alerts is not None:
+                out["alerts"] = vrep.alerts
+            if vrep.cost is not None:
+                out["cost"] = vrep.cost
         out["meta"] = run_manifest(
             seed=args.seed,
             config=dict(mode="fleet", **dataclasses.asdict(w)),

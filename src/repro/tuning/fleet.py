@@ -332,6 +332,7 @@ def tune_fleet_for_load(w: WorkloadSpec, env: EnvSpec, scenario: Scenario,
 
 def trace_fleet_point(w: WorkloadSpec, env: EnvSpec, point: FleetPoint,
                       *, scenario: Scenario | None = None, tracer=None,
+                      monitor=None, pricebook=None,
                       eval_n: int = 1200, nq: int = 48, nprobe: int = 32,
                       seed: int = 0):
     """Re-run one (typically: the recommended) fleet point with a tracer
@@ -339,8 +340,10 @@ def trace_fleet_point(w: WorkloadSpec, env: EnvSpec, point: FleetPoint,
 
     The sweep itself stays untraced — tracing all grid points would slow
     the search for spans nobody reads; the validation rerun shows *why*
-    the winning point behaves as it does.  Returns the FleetReport; the
-    spans land in ``tracer``.
+    the winning point behaves as it does.  ``monitor``/``pricebook``
+    (repro.obs) attach live SLO monitors and dollar metering to the same
+    rerun, so a sizing recommendation can carry an alert log and a cost
+    estimate.  Returns the FleetReport; the spans land in ``tracer``.
     """
     index, queries, _ = _eval_index(w, eval_n, nq, seed)
     params = SearchParams(k=w.k, nprobe=min(nprobe, index.meta.n_lists))
@@ -354,4 +357,5 @@ def trace_fleet_point(w: WorkloadSpec, env: EnvSpec, point: FleetPoint,
                                           seed=seed)
         slo_s = scenario.slo_s
     return FleetRouter(index, cfg, partition=partition).run(
-        queries, params, arrivals=arrivals, slo_s=slo_s, tracer=tracer)
+        queries, params, arrivals=arrivals, slo_s=slo_s, tracer=tracer,
+        monitor=monitor, pricebook=pricebook)

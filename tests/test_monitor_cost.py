@@ -1,0 +1,590 @@
+"""repro.obs.monitor + repro.obs.cost: live SLO monitors and dollar
+metering observe without perturbing (golden bit-exactness), burn-rate
+alerts fire and actuate only when asked, and per-tenant show-back sums
+to the fleet total exactly.  Plus the histogram-quantile error-bound
+property test and MetricsRegistry edge cases (PR 7 satellites)."""
+import dataclasses
+import hashlib
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.cluster_index import ClusterIndex
+from repro.core.types import ClusterIndexParams, SearchParams
+from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
+from repro.fleet import FleetConfig, run_fleet
+from repro.obs import (PRICEBOOKS, ActionBus, AlertLog, BurnRateRule,
+                       MetricsRegistry, MonitorConfig, PriceBook,
+                       SLOMonitor, Tracer, chrome_trace, fleet_cost,
+                       flame_summary, format_showback, resolve_pricebook,
+                       tenant_showback)
+from repro.sim.arrivals import Poisson
+from repro.tenancy import run_tenant_fleet
+from repro.tenancy.spec import TenantSpec
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
+                           "golden_fleet_prerefactor.json")
+
+HEDGED_CFG = FleetConfig(n_shards=4, replication=2, concurrency=16,
+                         shard_concurrency=4, queue_depth=16,
+                         hedge=True, hedge_percentile=75.0, seed=5)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = scaled(DEEP_ANALOG, 1200, 32)
+    data, queries = make_dataset(spec)
+    ci = ClusterIndex.build(data, ClusterIndexParams(kmeans_iters=4, seed=0))
+    return data, queries, ci
+
+
+def _ids_sha256(report) -> str:
+    h = hashlib.sha256()
+    for r in sorted(report.records, key=lambda r: r.qid):
+        h.update(np.asarray(r.qid).tobytes())
+        h.update(np.asarray(r.ids, dtype=np.int64).tobytes())
+    return h.hexdigest()
+
+
+# ----------------------------------------------------- bit-exactness --
+
+def test_monitored_priced_run_reproduces_golden(setup):
+    """Acceptance: monitoring + costing (without alert actions) still
+    reproduces the pre-refactor golden reports bit for bit — the
+    monitor ticker only consumes kernel sequence numbers and pricing is
+    post-hoc arithmetic."""
+    _, queries, ci = setup
+    golden = json.load(open(GOLDEN_PATH))
+    p = SearchParams(k=golden["params"]["k"],
+                     nprobe=golden["params"]["nprobe"])
+    configs = dict(
+        one_shard=FleetConfig(n_shards=1, replication=1, concurrency=8,
+                              shard_concurrency=8, queue_depth=64, seed=0),
+        four_shard=HEDGED_CFG)
+    for name, cfg in configs.items():
+        rep = run_fleet(ci, queries, p, cfg, monitor=MonitorConfig(),
+                        pricebook=PRICEBOOKS["default"])
+        g = golden[name]
+        assert rep.wall_time_s == pytest.approx(g["wall_time_s"],
+                                                rel=1e-9, abs=1e-12)
+        assert rep.qps == pytest.approx(g["qps"], rel=1e-9)
+        assert _ids_sha256(rep) == g["ids_sha256"]
+
+
+def test_monitored_summary_equals_plain_minus_obs_blocks(setup):
+    """The report of a monitored + priced run is the plain report plus
+    exactly two new keys (``alerts``, ``cost``) — nothing else moves."""
+    _, queries, ci = setup
+    p = SearchParams(k=10, nprobe=16)
+    plain = run_fleet(ci, queries, p, HEDGED_CFG)
+    mon = run_fleet(ci, queries, p, HEDGED_CFG, monitor=MonitorConfig(),
+                    pricebook=PRICEBOOKS["default"])
+    s_plain, s_mon = plain.summary(), mon.summary()
+    assert "alerts" not in s_plain and "cost" not in s_plain
+    assert s_mon.pop("alerts") is not None
+    assert s_mon.pop("cost") is not None
+    assert s_mon == s_plain
+
+
+def test_monitored_traced_open_loop_bit_exact(setup):
+    """Monitor + pricebook + tracer stacked on an open-loop run with an
+    SLO (the monitor actually observing misses) stays bit-exact."""
+    _, queries, ci = setup
+    p = SearchParams(k=10, nprobe=16)
+    cfg = FleetConfig(n_shards=2, replication=1, concurrency=8, seed=7)
+    mk = lambda: Poisson(rate_qps=600.0, n_total=2 * len(queries))
+    plain = run_fleet(ci, queries, p, cfg, arrivals=mk(), slo_s=0.02)
+    mon = run_fleet(ci, queries, p, cfg, arrivals=mk(), slo_s=0.02,
+                    tracer=Tracer(), monitor=MonitorConfig(),
+                    pricebook=PRICEBOOKS["default"])
+    s = mon.summary()
+    s.pop("alerts"), s.pop("cost")
+    assert s == plain.summary()
+
+
+# --------------------------------------------------- alerts + actions --
+
+@pytest.fixture(scope="module")
+def overload(setup):
+    """One sustained-overload run observed, one with actions enabled."""
+    _, queries, ci = setup
+    p = SearchParams(k=10, nprobe=16)
+    cfg = FleetConfig(n_shards=2, replication=1, concurrency=8, seed=3)
+    mk = lambda: Poisson(rate_qps=3000.0, n_total=8 * len(queries))
+    observed = run_fleet(ci, queries, p, cfg, arrivals=mk(), slo_s=0.005,
+                         monitor=MonitorConfig(),
+                         pricebook=PRICEBOOKS["default"])
+    acted = run_fleet(ci, queries, p, cfg, arrivals=mk(), slo_s=0.005,
+                      monitor=MonitorConfig(actions=True),
+                      pricebook=PRICEBOOKS["default"])
+    return observed, acted
+
+
+def test_sustained_overload_fires_burn_alerts(overload):
+    observed, _ = overload
+    fired = observed.alerts["fired"]
+    assert fired, "sustained SLO miss must fire at least one alert"
+    by_rule = {a["rule"] for a in fired}
+    assert "fast" in by_rule            # page on the hard burn
+    for a in fired:
+        assert a["monitor"] == "fleet.latency"
+        assert a["peak_burn"] > 0
+    # observation only: no actions were taken
+    assert observed.alerts["actions"] == []
+
+
+def test_alert_actions_scale_out_under_overload(overload):
+    """Acceptance: with actions on, a sustained p99 burn produces at
+    least one alert-driven scale-out in the fleet report."""
+    _, acted = overload
+    actions = acted.alerts["actions"]
+    assert any(a["action"] == "scale_up" for a in actions)
+    up = next(a for a in actions if a["action"] == "scale_up")
+    assert up["monitor"] == "fleet.latency"
+    assert up["instances"] > 2          # 2 shards x 1 replica at start
+
+
+def test_alert_actions_deprioritize_over_budget_tenant():
+    """The admission-layer subscriber: a tenant sustaining a ticket-
+    severity latency burn gets its admission window shrunk."""
+    cfg = FleetConfig(n_shards=2, replication=1, concurrency=4, seed=3)
+    hog = TenantSpec(name="hog", n=500, dim=32, n_queries=32, nprobe=16,
+                     scenario="poisson", rate_qps=2500.0, n_arrivals=600,
+                     slo_ms=4.0)
+    quiet = TenantSpec(name="quiet", n=500, dim=32, n_queries=16,
+                       nprobe=4, scenario="poisson", rate_qps=50.0,
+                       n_arrivals=60, slo_ms=200.0)
+    rep = run_tenant_fleet([hog, quiet], cfg, "shared",
+                           monitor=MonitorConfig(actions=True))
+    actions = rep.fleet.alerts["actions"]
+    dep = [a for a in actions if a["action"] == "deprioritize"]
+    assert dep and dep[0]["tenant"] == "hog"
+    assert dep[0]["window"] >= 1
+
+
+def test_autoscaler_alert_hook_respects_cooldown():
+    from repro.sim.autoscale import AutoscaleConfig, Autoscaler
+    from repro.obs.monitor import Alert
+
+    class StubFleet:
+        total_instances = 2
+        recent_sojourns = ()
+
+        def scale_up_one(self):
+            self.total_instances += 1
+            return True
+
+        def scale_down_one(self):
+            return False
+
+    a = Autoscaler(AutoscaleConfig(slo_p99_s=0.05, cooldown_s=0.25),
+                   StubFleet())
+    alert = Alert(monitor="fleet.latency", rule="fast", severity="page",
+                  fired_t=1.0)
+    assert a.alert_scale_up(1.0, alert) is True
+    assert a.alert_scale_up(1.1, alert) is False     # inside cooldown
+    assert a.alert_scale_up(1.3, alert) is True      # cooldown elapsed
+    assert a.events[0]["reason"] == "alert:fleet.latency/fast"
+
+
+def test_admission_window_shrink_drains_in_flight():
+    """Mid-run window shrink (the deprioritize action): in-flight items
+    above the new window drain off before the backlog moves again."""
+    from repro.sim.admission import AdmissionWindow
+    from repro.sim.kernel import Kernel
+
+    started = []
+    win = AdmissionWindow(Kernel(seed=0), 2, lambda it, t: started.append(it))
+    for i in range(4):
+        win.offer(i)
+    assert started == [0, 1] and win.in_window == 2
+    win.window = 1                       # the deprioritize action
+    assert win.release(0.1) is False     # drains: 2 in flight > window 1
+    assert win.in_window == 1 and started == [0, 1]
+    assert win.release(0.2) is True      # now the backlog moves again
+    assert started == [0, 1, 2] and win.in_window == 1
+
+
+# --------------------------------------------- monitor unit behaviour --
+
+def test_burn_rate_math_and_min_samples():
+    m = SLOMonitor("x", objective=0.99, min_samples=8)
+    for i in range(6):
+        m.observe(i * 0.01, bad=True)
+    assert m.burn_rate(0.06, 0.25) == 0.0        # below min_samples
+    for i in range(6, 10):
+        m.observe(i * 0.01, bad=(i % 2 == 0))
+    n, bad = m.window_counts(0.09, 0.25)
+    assert (n, bad) == (10, 8)
+    assert m.burn_rate(0.09, 0.25) == pytest.approx((8 / 10) / 0.01)
+
+
+def test_alert_log_fire_update_clear_cycle():
+    log = AlertLog()
+    m = SLOMonitor("fleet.latency", objective=0.99)
+    rule = BurnRateRule("fast", long_s=0.25, short_s=0.05, threshold=8.0)
+    a = log.fire(0.1, m, rule, burn=12.0)
+    assert a is not None and a.active and a.peak_burn == 12.0
+    assert log.fire(0.2, m, rule, burn=20.0) is None   # already firing
+    assert a.peak_burn == 20.0                         # peak updated
+    cleared = log.clear(0.3, m, rule)
+    assert cleared is a and a.cleared_t == 0.3 and not a.active
+    assert log.clear(0.4, m, rule) is None
+    assert [d["peak_burn"] for d in log.to_dicts()] == [20.0]
+
+
+def test_action_bus_disabled_never_calls_subscribers():
+    calls = []
+    bus = ActionBus(enabled=False)
+    bus.subscribe(lambda ev, al, now: calls.append(ev))
+    bus.publish("fired", None, 0.0)
+    assert calls == []
+    bus.enabled = True
+    bus.publish("fired", None, 0.0)
+    assert calls == ["fired"]
+
+
+def test_rule_and_config_validation():
+    with pytest.raises(ValueError):
+        BurnRateRule("bad", long_s=0.05, short_s=0.25, threshold=8.0)
+    with pytest.raises(ValueError):
+        BurnRateRule("bad", long_s=0.25, short_s=0.05, threshold=0.0)
+    with pytest.raises(ValueError):
+        MonitorConfig(interval_s=0.0)
+    with pytest.raises(ValueError):
+        MonitorConfig(rules=())
+    with pytest.raises(ValueError):
+        SLOMonitor("x", objective=1.0)
+    # gt_ids is carried data, not config
+    assert "gt_ids" not in MonitorConfig(gt_ids=np.zeros((4, 10))).to_dict()
+
+
+# -------------------------------------------------------------- cost --
+
+def test_pricebook_validation_and_resolution(tmp_path):
+    with pytest.raises(ValueError):
+        PriceBook(get_per_million_usd=-0.1)
+    with pytest.raises(ValueError):
+        PriceBook.from_dict(dict(gets_per_million=1.0))
+    assert resolve_pricebook("egress-heavy").egress_per_gib_usd == 0.09
+    custom = tmp_path / "book.json"
+    custom.write_text(json.dumps(dict(get_per_million_usd=1.0)))
+    book = resolve_pricebook(str(custom))
+    assert book.name == "book.json"
+    assert book.get_per_million_usd == 1.0
+    with pytest.raises(KeyError):
+        resolve_pricebook("no-such-book")
+
+
+def test_fleet_cost_components_and_unit_economics(setup):
+    _, queries, ci = setup
+    p = SearchParams(k=10, nprobe=16)
+    rep = run_fleet(ci, queries, p, HEDGED_CFG)
+    book = PRICEBOOKS["default"]
+    cost = fleet_cost(rep, HEDGED_CFG, book)
+    comp_sum = sum(cost[k] for k in ("get_usd", "put_usd", "egress_usd",
+                                     "instance_usd", "cache_usd"))
+    assert cost["total_usd"] == pytest.approx(comp_sum, abs=5e-9)
+    assert cost["get_usd"] > 0 and cost["egress_usd"] > 0
+    assert cost["put_usd"] == 0.0          # pure-query run: no PUTs
+    assert cost["usd_per_1k_queries"] == pytest.approx(
+        cost["total_usd"] / len(rep.records) * 1000.0, rel=1e-5)
+    assert cost["queries_per_usd"] > 0
+    # doubling every price doubles the bill
+    double = PriceBook.from_dict({
+        f.name: (getattr(book, f.name) * 2
+                 if f.name != "name" else "double")
+        for f in dataclasses.fields(PriceBook)})
+    assert fleet_cost(rep, HEDGED_CFG, double)["total_usd"] == \
+        pytest.approx(2 * cost["total_usd"], abs=5e-9)
+
+
+def test_rw_run_meters_compaction_puts(setup):
+    """PUT metering: compaction writes show up as PUT requests (priced
+    ~12x a GET) and are a subset of the storage totals."""
+    from repro.ingest.compaction import IngestConfig
+    from repro.ingest.stream import synth_updates
+    data, queries, ci = setup
+    stream = synth_updates(data, rate_qps=600.0, n_updates=120,
+                           delete_frac=0.2, seed=3)
+    cfg = FleetConfig(n_shards=2, replication=1, concurrency=8, seed=3)
+    rep = run_fleet(ci, queries, SearchParams(k=10, nprobe=16), cfg,
+                    updates=stream,
+                    ingest=IngestConfig(delta_cap_bytes=4 * 1024),
+                    pricebook=PRICEBOOKS["default"])
+    puts = sum(s.storage_put_requests for s in rep.shard_stats)
+    put_bytes = sum(s.storage_put_bytes for s in rep.shard_stats)
+    assert puts > 0 and put_bytes > 0
+    assert puts <= rep.storage_requests
+    assert put_bytes <= rep.storage_bytes
+    assert rep.cost["put_usd"] > 0
+
+
+def test_showback_rows_sum_to_fleet_total():
+    """Acceptance: per-tenant dollars + the (unattributed) row sum to
+    the fleet total within float error, with shared costs apportioned
+    by executed-job share."""
+    cfg = FleetConfig(n_shards=2, replication=2, concurrency=6,
+                      cache_bytes=64 * 1024, cache_policy="slru", seed=3)
+    a = TenantSpec(name="a", n=500, dim=32, n_queries=24, nprobe=8)
+    b = TenantSpec(name="b", n=400, dim=32, n_queries=16, nprobe=8)
+    rep = run_tenant_fleet([a, b], cfg, "weighted",
+                           pricebook=PRICEBOOKS["default"])
+    sb = rep.showback
+    assert math.isclose(sb["sum_usd"], sb["fleet_total_usd"],
+                        rel_tol=1e-9, abs_tol=1e-12)
+    assert [r["tenant"] for r in sb["rows"]] == ["a", "b",
+                                                "(unattributed)"]
+    shares = [r["shared_share"] for r in sb["rows"]]
+    assert sum(shares) == pytest.approx(1.0, abs=1e-5)
+    for r in sb["rows"]:
+        assert r["total_usd"] == pytest.approx(
+            r["get_usd"] + r["put_usd"] + r["egress_usd"]
+            + r["shared_usd"], abs=5e-9)
+    # each tenant's cost row also rides on its slice
+    assert rep.tenants[0].cost["tenant"] == "a"
+    table = format_showback(sb)
+    assert "(unattributed)" in table and "pricebook=default" in table
+
+
+def test_tenancy_monitored_summary_bit_exact():
+    cfg = FleetConfig(n_shards=2, replication=2, concurrency=6,
+                      cache_bytes=64 * 1024, cache_policy="slru", seed=3)
+    mk = lambda: [TenantSpec(name="a", n=500, dim=32, n_queries=24,
+                             nprobe=8),
+                  TenantSpec(name="b", n=400, dim=32, n_queries=16,
+                             nprobe=8)]
+    plain = run_tenant_fleet(mk(), cfg, "weighted").summary()
+    mon = run_tenant_fleet(mk(), cfg, "weighted",
+                           monitor=MonitorConfig(),
+                           pricebook=PRICEBOOKS["default"]).summary()
+    assert mon.pop("showback") is not None
+    assert mon["fleet"].pop("alerts") is not None
+    assert mon["fleet"].pop("cost") is not None
+    for t in mon["tenants"]:
+        assert t.pop("cost") is not None
+    plain.pop("showback", None)
+    for t in plain["tenants"]:
+        t.pop("cost", None)
+    assert mon == plain
+
+
+def test_showback_synthetic_exact_sum():
+    """Unit-level: hand-built slices with known counts sum exactly and
+    the residual row carries exactly the unattributed I/O."""
+
+    class Metrics:
+        def __init__(self, lookups, hits, nbytes):
+            self.cache_lookups = lookups
+            self.cache_hits = hits
+            self.bytes_storage = nbytes
+
+    class Rec:
+        def __init__(self, lookups, hits, nbytes, n_jobs):
+            self.metrics = Metrics(lookups, hits, nbytes)
+            self.n_jobs = n_jobs
+
+    class Slice:
+        def __init__(self, name, records, ingest=None):
+            self.name = name
+            self.records = records
+            self.ingest = ingest
+
+    class Stats:
+        storage_put_requests = 10
+        storage_put_bytes = 1000
+
+    class Report:
+        shard_stats = [Stats()]
+        storage_requests = 100 + 10     # 90 attributable + 10 stray GETs
+        storage_bytes = 20000 + 1000
+        shards_seconds = 7.2
+        records = []
+        good_total = None
+
+    cfg = FleetConfig(n_shards=1, replication=1, cache_bytes=2**30)
+    book = PriceBook()
+    tenants = [
+        Slice("a", [Rec(40, 10, 8000, 3)],
+              ingest=dict(compaction_read_requests=20,
+                          compaction_read_bytes=4000,
+                          compaction_write_requests=10)),
+        Slice("b", [Rec(50, 10, 6000, 1)]),
+    ]
+    sb = tenant_showback(tenants, Report(), cfg, book)
+    assert math.isclose(sb["sum_usd"], sb["fleet_total_usd"],
+                        rel_tol=1e-12, abs_tol=1e-15)
+    un = sb["rows"][-1]
+    # stray = 100 total GETs - (30+20) - 40 attributed
+    assert un["get_usd"] == pytest.approx(10 / 1e6 * 0.40)
+    assert un["put_usd"] == 0.0
+    assert sb["rows"][0]["shared_share"] == 0.75   # 3 of 4 jobs
+
+
+# ---------------------------------- histogram exactness (satellite 1) --
+
+def test_histogram_quantile_exactness():
+    """Property sweep: for in-range samples the estimate is within the
+    documented per-bucket relative-error bound of the true inverted-CDF
+    sample quantile — ratio within [1/base, base], base =
+    10**(1/buckets_per_decade)."""
+    from repro.obs.metrics import Histogram
+    rng = np.random.default_rng(0)
+    base = 10.0 ** (1.0 / 8)
+    for trial in range(60):
+        h = Histogram("x")
+        n = int(rng.integers(5, 400))
+        kind = trial % 3
+        if kind == 0:
+            xs = rng.lognormal(mean=-6, sigma=2.0, size=n)
+        elif kind == 1:
+            xs = rng.exponential(0.01, size=n)
+        else:
+            xs = rng.uniform(1e-5, 10.0, size=n)
+        xs = np.clip(xs, h.lo, h.hi * 0.999)
+        for x in xs:
+            h.observe(float(x))
+        for q in (0.1, 0.25, 0.5, 0.75, 0.9, 0.99):
+            est = h.quantile(q)
+            true = float(np.quantile(xs, q, method="inverted_cdf"))
+            ratio = est / true
+            assert 1.0 / base - 1e-9 <= ratio <= base + 1e-9, \
+                (trial, q, est, true)
+        # the clamp makes the extremes exact
+        assert h.quantile(0.0) == pytest.approx(float(xs.min()))
+        assert h.quantile(1.0) == pytest.approx(float(xs.max()))
+
+
+def test_histogram_out_of_range_stays_inside_observed():
+    """Samples outside [lo, hi) clamp into the edge buckets, whose
+    edges no longer bracket them — but every quantile estimate still
+    stays inside the observed [min, max]."""
+    from repro.obs.metrics import Histogram
+    h = Histogram("x", lo=1e-3, hi=1.0)
+    h.observe(1e-6)          # below lo: first bucket
+    h.observe(50.0)          # above hi: last bucket
+    for q in (0.0, 0.25, 0.5, 0.75, 1.0):
+        assert 1e-6 <= h.quantile(q) <= 50.0
+
+
+# ------------------------------- registry edge cases (satellite 2) --
+
+def test_empty_histogram_quantile_is_zero():
+    from repro.obs.metrics import Histogram
+    h = Histogram("x")
+    assert h.quantile(0.5) == 0.0
+    d = h.to_dict()
+    assert d["count"] == 0 and d["min"] == 0.0 and d["max"] == 0.0
+
+
+def test_gauge_snapshot_after_set_ordering():
+    """A snapshot sees the latest set() before it, never one after."""
+    m = MetricsRegistry()
+    m.gauge("depth").set(3)
+    m.snapshot(0.1)
+    m.gauge("depth").set(9)
+    m.snapshot(0.2)
+    m.gauge("depth").set(1)          # after the last snapshot: unseen
+    assert [row["depth"] for _, row in m.series] == [3.0, 9.0]
+
+
+def test_counter_first_published_mid_run():
+    """A counter that first appears between snapshots shows up in rows
+    from that point on — earlier rows do not retroactively gain it."""
+    m = MetricsRegistry()
+    m.counter("q").inc()
+    m.snapshot(0.1)
+    m.counter("late").inc(5)         # first published mid-run
+    m.snapshot(0.2)
+    (t0, row0), (t1, row1) = m.series
+    assert "late" not in row0
+    assert row1["late"] == 5.0
+    # and the export's counter tracks stay deterministic across calls
+    tr = Tracer()
+    tr.metrics = m
+    a = [e for e in chrome_trace(tr)["traceEvents"] if e["ph"] == "C"]
+    b = [e for e in chrome_trace(tr)["traceEvents"] if e["ph"] == "C"]
+    assert a == b
+    assert [e["name"] for e in a] == ["q", "late", "q"]
+
+
+# -------------------------------------- trace export (satellite 3) --
+
+@pytest.fixture(scope="module")
+def traced_overload(setup):
+    _, queries, ci = setup
+    p = SearchParams(k=10, nprobe=16)
+    cfg = FleetConfig(n_shards=2, replication=1, concurrency=8, seed=3)
+    tracer = Tracer()
+    rep = run_fleet(ci, queries, p, cfg,
+                    arrivals=Poisson(rate_qps=3000.0,
+                                     n_total=8 * len(queries)),
+                    slo_s=0.005, tracer=tracer,
+                    monitor=MonitorConfig(actions=True),
+                    pricebook=PRICEBOOKS["default"])
+    return rep, tracer
+
+
+def test_export_alert_instants_and_cost_tracks(traced_overload):
+    rep, tracer = traced_overload
+    doc = chrome_trace(tracer)
+    events = doc["traceEvents"]
+    alert_ev = [e for e in events if e.get("cat") == "alert"]
+    assert {e["name"] for e in alert_ev} >= {"alert_fired"}
+    assert any(e["name"].startswith("alert_action_") for e in alert_ev)
+    for e in alert_ev:
+        assert e["ph"] == "i"
+    counters = {e["name"] for e in events if e["ph"] == "C"}
+    assert {"cost.total_usd", "cost.get_usd",
+            "slo.fleet.latency.burn", "slo.fleet.latency.p99_s"} <= counters
+    # cost counter track is monotone non-decreasing in time
+    track = [(e["ts"], e["args"]["value"]) for e in events
+             if e["ph"] == "C" and e["name"] == "cost.total_usd"]
+    assert track == sorted(track)
+    vals = [v for _, v in track]
+    assert vals == sorted(vals) and vals[-1] > 0
+
+
+def test_export_deterministic_with_monitor(traced_overload):
+    _, tracer = traced_overload
+    assert chrome_trace(tracer) == chrome_trace(tracer)
+    assert flame_summary(tracer) == flame_summary(tracer)
+    assert "query" in flame_summary(tracer)
+
+
+# ---------------------------------------------------------------- CLI --
+
+def test_fleet_cli_monitor_and_pricebook(capsys):
+    from repro.fleet.__main__ import main
+    rc = main(["--shards", "2", "--n", "600", "--queries", "16",
+               "--monitor", "--pricebook", "default", "--compact"])
+    assert rc == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["report"]["cost"]["pricebook"] == "default"
+    assert "monitors" in out["report"]["alerts"]
+
+
+def test_fleet_cli_flags_unset_emit_no_obs_blocks(capsys):
+    from repro.fleet.__main__ import main
+    rc = main(["--shards", "2", "--n", "600", "--queries", "16",
+               "--compact"])
+    assert rc == 0
+    out = json.loads(capsys.readouterr().out)
+    assert "cost" not in out["report"] and "alerts" not in out["report"]
+
+
+def test_cli_alert_actions_requires_monitor():
+    from repro.fleet.__main__ import main
+    with pytest.raises(SystemExit):
+        main(["--shards", "2", "--n", "600", "--queries", "16",
+              "--alert-actions", "--compact"])
+
+
+def test_cli_unknown_pricebook_errors():
+    from repro.fleet.__main__ import main
+    with pytest.raises(SystemExit):
+        main(["--shards", "2", "--n", "600", "--queries", "16",
+              "--pricebook", "no-such-book", "--compact"])
