@@ -41,6 +41,7 @@ from repro.core.flat import exact_topk
 from repro.core.types import ClusterIndexParams, SearchParams
 from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
 from repro.fleet import FleetConfig, run_fleet
+from repro.fleet.router import FleetRouter
 from repro.obs import (PRICEBOOKS, MonitorConfig, Tracer, attribute,
                        run_manifest)
 from repro.serving.engine import run_workload
@@ -236,6 +237,63 @@ def bench_faults(index, queries, gt) -> dict:
     return row
 
 
+def bench_batch_window(index, queries, gt) -> dict:
+    """Kernel execution backend (repro.exec): hard parity at window=0 —
+    per-query result ids bit-identical to the analytic backend — plus
+    the batch-window frontier (MXU-tile occupancy and p99 vs window),
+    priced from the committed CalibrationTable."""
+    params = SearchParams(k=10, nprobe=64)
+    base = dict(n_shards=2, replication=1, storage=TOS, concurrency=32,
+                shard_concurrency=8, queue_depth=64, seed=1)
+    analytic = run_fleet(index, queries, params, FleetConfig(**base))
+    by_qid = {r.qid: r for r in analytic.records}
+    rows = []
+    windows = (0.0, 200.0, 1000.0) if QUICK \
+        else (0.0, 100.0, 200.0, 500.0, 1000.0)
+    for us_w in windows:
+        cfg = FleetConfig(**base, backend="kernel",
+                          batch_window_s=us_w * 1e-6)
+        router = FleetRouter(index, cfg)
+        rep = router.run(queries, params)
+        batches = jobs = 0
+        occ = 0.0
+        for g in router.groups:
+            for srv in g.all_servers():
+                be = srv.engine.backend
+                batches += be.batches
+                jobs += be.jobs_batched
+                occ += be.occupancy_sum
+        ids_eq = all(np.array_equal(r.ids, by_qid[r.qid].ids)
+                     for r in rep.records)
+        rows.append(dict(
+            window_us=us_w, qps=round(rep.qps, 2),
+            p99_s=round(rep.latency_percentile(99), 6),
+            recall=round(rep.recall_against(gt), 4),
+            mean_occupancy=round(occ / batches, 4) if batches else 0.0,
+            mean_batch_jobs=round(jobs / batches, 3) if batches else 0.0,
+            batches=batches, ids_identical=ids_eq))
+        emit(f"fleet/window-{us_w:.0f}us", 1e6 / max(rep.qps, 1e-9),
+             qps=rep.qps, p99_ms=rep.latency_percentile(99) * 1e3,
+             occupancy=rows[-1]["mean_occupancy"],
+             batch_jobs=rows[-1]["mean_batch_jobs"])
+    _check("fleet-kernel-parity", all(r["ids_identical"] for r in rows),
+           "kernel-backend result ids bit-identical to analytic per "
+           "query at every window")
+    rec_a = round(analytic.recall_against(gt), 4)
+    _check("fleet-kernel-recall",
+           all(r["recall"] == rec_a for r in rows),
+           f"kernel-backend recall {sorted({r['recall'] for r in rows})} "
+           f"vs analytic {rec_a} (want identical)")
+    _check("fleet-window-batches",
+           rows[-1]["mean_batch_jobs"] >= rows[0]["mean_batch_jobs"],
+           f"jobs per batch {rows[0]['mean_batch_jobs']} at window 0 vs "
+           f"{rows[-1]['mean_batch_jobs']} at {rows[-1]['window_us']:.0f}"
+           "us (want coalescing to grow with the window)")
+    return dict(analytic_qps=round(analytic.qps, 2),
+                analytic_p99_s=round(analytic.latency_percentile(99), 6),
+                sweep=rows)
+
+
 def bench_obs(index, queries, gt) -> dict:
     """Tracing observes, never perturbs: a traced run must reproduce the
     untraced report bit for bit, cost at most 1.5x the wall time, and
@@ -321,6 +379,7 @@ def main() -> int:
         parity=bench_parity(index, queries, gt),
         scenarios=dict(open_loop=bench_open_loop(index, queries, gt),
                        fault=bench_faults(index, queries, gt)),
+        batch_window=bench_batch_window(index, queries, gt),
         obs=bench_obs(index, queries, gt),
         cost=bench_cost(index, queries, gt),
         failures=_failures,

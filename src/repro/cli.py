@@ -27,6 +27,39 @@ def add_common_args(p: argparse.ArgumentParser, *, seed: int = 0) -> None:
                    help="also write the JSON report to PATH")
 
 
+def add_exec_args(p: argparse.ArgumentParser) -> None:
+    """--backend / --batch-window-us / --calibration: the execution-
+    backend axis (repro.exec; see docs/execution.md)."""
+    g = p.add_argument_group("execution backend")
+    g.add_argument("--backend", choices=["analytic", "kernel"],
+                   default="analytic",
+                   help="compute pricing: hand-set ComputeSpec constants "
+                        "(analytic) or batch-coalesced, measured "
+                        "CalibrationTable pricing (kernel)")
+    g.add_argument("--batch-window-us", type=float, default=0.0,
+                   metavar="US",
+                   help="kernel backend: per-shard batch-coalescing "
+                        "window in microseconds (0 = per-job dispatch)")
+    g.add_argument("--calibration", default=None, metavar="TABLE.JSON",
+                   help="kernel backend: CalibrationTable JSON to price "
+                        "from (default: the committed measured table)")
+
+
+def exec_fields_from_args(args, parser: argparse.ArgumentParser = None
+                          ) -> dict:
+    """FleetConfig kwargs for the execution-backend axis (validated)."""
+    if args.backend == "analytic" and (args.batch_window_us
+                                       or args.calibration):
+        msg = ("--batch-window-us/--calibration are kernel-backend "
+               "knobs; add --backend kernel")
+        if parser is not None:
+            parser.error(msg)
+        raise ValueError(msg)
+    return dict(backend=args.backend,
+                batch_window_s=args.batch_window_us * 1e-6,
+                calibration=args.calibration)
+
+
 def add_obs_args(p: argparse.ArgumentParser) -> None:
     """--trace / --attrib: the observability axis (repro.obs)."""
     g = p.add_argument_group("observability")

@@ -1,0 +1,27 @@
+"""repro.exec — the batched execution backend (kernel <-> serving loop).
+
+Three pieces close the loop between the Pallas kernels and the serving
+simulation (see ``docs/execution.md``):
+
+* :mod:`repro.exec.batched` — real pad-to-tile batched execution of the
+  fused top-k kernel (property-tested bit-identical to the per-query
+  reference oracles);
+* :mod:`repro.exec.calibrate` — measures that backend over a
+  (dim, pq_m, batch) grid and persists a :class:`CalibrationTable`, the
+  measured replacement for the analytic ``ComputeSpec`` constants;
+* :mod:`repro.exec.backend` — the per-shard :class:`KernelBackend`
+  coalescer that batches concurrent jobs within a window and prices
+  them from the table (``--backend kernel`` on the fleet/tuning CLIs).
+"""
+from repro.exec.backend import KernelBackend
+from repro.exec.batched import (CAND_TILE, QUERY_TILE, batched_topk,
+                                coalesce_scan, pad_amount, scan_topk_oracle)
+from repro.exec.table import (DEFAULT_TABLE_PATH, CalibEntry,
+                              CalibrationTable, load_table)
+
+__all__ = [
+    "KernelBackend",
+    "CalibEntry", "CalibrationTable", "DEFAULT_TABLE_PATH", "load_table",
+    "QUERY_TILE", "CAND_TILE", "pad_amount",
+    "batched_topk", "scan_topk_oracle", "coalesce_scan",
+]

@@ -1,0 +1,122 @@
+"""Pad-to-tile batched execution of the fused top-k kernel.
+
+The coalescer's data-plane contract: many concurrent scan jobs against
+one shard's candidate pool become *one* MXU-shaped ``fused_topk``
+dispatch.  Queries pad up to the f32 sublane tile (8) and candidates up
+to the lane tile (128); candidate padding is masked inside the kernel
+(``n_total``), query padding rows are computed and dropped — pad waste,
+which the occupancy gauges account for.
+
+Bit-exactness contract (property-tested in ``tests/test_exec.py``):
+:func:`batched_topk` result *ids* are identical to the per-query
+:func:`scan_topk_oracle` built on :mod:`repro.kernels.ref`, including
+tie-break order for duplicate distances, for ragged batch sizes and
+``k > n_candidates`` (tail filled with ``(+inf, -1)``).  Both sides
+canonicalize each row by ``(distance, id)``, which pins the order even
+where float reduction order could differ.  Distances are bit-identical
+too whenever the inputs are integer-valued (sums below 2**24 are exact
+in f32 regardless of association); for arbitrary floats the kernel and
+the reference accumulate in different orders, so distances agree only
+to the last ulp.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels import ops
+
+__all__ = ["QUERY_TILE", "CAND_TILE", "pad_amount", "batched_topk",
+           "scan_topk_oracle", "coalesce_scan"]
+
+#: MXU-facing tile sizes for float32 (sublane x lane — see the Pallas
+#: guide's tiling table; the MXU itself is 128x128).
+QUERY_TILE = 8
+CAND_TILE = 128
+
+
+def pad_amount(n: int, tile: int) -> int:
+    """Rows of padding needed to round ``n`` up to a multiple of ``tile``."""
+    return (-int(n)) % tile
+
+
+def _canonicalize(vals: np.ndarray, ids: np.ndarray) -> None:
+    """Sort each row by (distance, id) in place — the tie-break contract."""
+    for i in range(vals.shape[0]):
+        order = np.lexsort((ids[i], vals[i]))
+        vals[i] = vals[i][order]
+        ids[i] = ids[i][order]
+
+
+def batched_topk(qs, x, k: int, *, interpret: bool | None = None):
+    """Cross-query fused top-k with explicit pad-to-tile.
+
+    ``qs`` is a ragged batch of B queries (B, D); ``x`` the shared
+    candidate matrix (N, D).  Queries are zero-padded to a QUERY_TILE
+    multiple and dispatched as ONE ``ops.l2_topk`` call with tile-shaped
+    blocks (the kernel pads/masks candidates to CAND_TILE internally).
+    Returns ``(vals (B, k) f32, ids (B, k) i32)`` with rows sorted by
+    (distance, id); when ``k > N`` the tail is ``(+inf, -1)``.
+    """
+    qs = np.ascontiguousarray(np.asarray(qs, dtype=np.float32))
+    x = np.ascontiguousarray(np.asarray(x, dtype=np.float32))
+    B = qs.shape[0]
+    N = x.shape[0]
+    out_vals = np.full((B, k), np.inf, dtype=np.float32)
+    out_ids = np.full((B, k), -1, dtype=np.int32)
+    if B == 0 or N == 0 or k == 0:
+        return out_vals, out_ids
+    k_eff = min(k, N)
+    padq = pad_amount(B, QUERY_TILE)
+    qp = np.pad(qs, ((0, padq), (0, 0))) if padq else qs
+    vals, ids = ops.l2_topk(qp, x, k_eff, block_q=QUERY_TILE,
+                            block_n=CAND_TILE, interpret=interpret)
+    out_vals[:, :k_eff] = np.asarray(vals)[:B]
+    out_ids[:, :k_eff] = np.asarray(ids)[:B]
+    _canonicalize(out_vals, out_ids)
+    return out_vals, out_ids
+
+
+def scan_topk_oracle(qs, x, k: int):
+    """Per-query oracle on the kernel-free :mod:`repro.kernels.ref` path.
+
+    Same output contract as :func:`batched_topk` (shape, (+inf, -1)
+    fill, (distance, id) row order) but computed one query at a time
+    from the full reference distance matrix — no batching, no padding.
+    """
+    qs = np.asarray(qs, dtype=np.float32)
+    x = np.asarray(x, dtype=np.float32)
+    B = qs.shape[0]
+    N = x.shape[0]
+    out_vals = np.full((B, k), np.inf, dtype=np.float32)
+    out_ids = np.full((B, k), -1, dtype=np.int32)
+    if B == 0 or N == 0 or k == 0:
+        return out_vals, out_ids
+    k_eff = min(k, N)
+    row_ids = np.arange(N, dtype=np.int32)
+    for i in range(B):
+        d = np.asarray(ops.ref.l2_distance_ref(qs[i:i + 1], x))[0]
+        order = np.lexsort((row_ids, d))[:k_eff]
+        out_vals[i, :k_eff] = d[order]
+        out_ids[i, :k_eff] = row_ids[order]
+    _canonicalize(out_vals, out_ids)
+    return out_vals, out_ids
+
+
+def coalesce_scan(queries, x, global_ids, k: int, *,
+                  interpret: bool | None = None):
+    """Execute a coalesced batch and scatter results back per owner.
+
+    ``queries`` is the list of B owning jobs' query vectors; ``x`` the
+    shard's candidate rows with ``global_ids`` giving each row's vector
+    id.  One batched dispatch, then row ``i`` of the padded result is
+    scattered back to job ``i`` as ``(dists, global ids)`` — padding
+    rows and the ``k > N`` tail never leak (-1 ids stay -1).
+    """
+    gid = np.asarray(global_ids, dtype=np.int64)
+    vals, idx = batched_topk(queries, x, k, interpret=interpret)
+    out = []
+    for i in range(len(queries)):
+        valid = idx[i] >= 0
+        mapped = np.where(valid, gid[np.clip(idx[i], 0, None)], -1)
+        out.append((vals[i].copy(), mapped.astype(np.int64)))
+    return out

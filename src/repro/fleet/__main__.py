@@ -29,11 +29,13 @@ import argparse
 import sys
 import time
 
-from repro.cli import (add_common_args, add_monitor_args, add_obs_args,
-                       add_scenario_args, autoscale_from_args, emit_json,
-                       emit_obs, faults_from_args, ingest_from_args,
-                       monitor_from_args, pricebook_from_args,
-                       scenario_from_args, tracer_from_args)
+from repro.cli import (add_common_args, add_exec_args, add_monitor_args,
+                       add_obs_args, add_scenario_args,
+                       autoscale_from_args, emit_json, emit_obs,
+                       exec_fields_from_args, faults_from_args,
+                       ingest_from_args, monitor_from_args,
+                       pricebook_from_args, scenario_from_args,
+                       tracer_from_args)
 from repro.core.cluster_index import ClusterIndex
 from repro.core.flat import exact_topk
 from repro.core.graph_index import GraphIndex
@@ -90,6 +92,7 @@ def build_parser() -> argparse.ArgumentParser:
     t.add_argument("--no-solo", action="store_true",
                    help="skip the per-tenant solo baseline runs (no "
                         "interference ratios in the report)")
+    add_exec_args(p)
     add_scenario_args(p)
     add_obs_args(p)
     add_monitor_args(p)
@@ -107,7 +110,8 @@ def fleet_config_from_args(args, storage) -> FleetConfig:
         cache_bytes=int(args.cache_mb * 2**20),
         cache_policy="slru" if args.cache_mb > 0 else "none",
         hedge=args.hedge, hedge_percentile=args.hedge_percentile,
-        seed=args.seed)
+        seed=args.seed,
+        **exec_fields_from_args(args, build_parser()))
 
 
 def validated_faults(args):

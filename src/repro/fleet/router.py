@@ -58,6 +58,7 @@ seeded RNG streams — identical seeds give bit-identical
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import deque
 from typing import Iterable
 
@@ -105,9 +106,28 @@ class FleetConfig:
     shed_retry_s: float = 1e-3
     hit_latency_s: float = 100e-6
     compute: ComputeSpec = dataclasses.field(default_factory=ComputeSpec)
+    #: "analytic" prices compute from the ComputeSpec constants;
+    #: "kernel" routes every shard's compute through a repro.exec
+    #: KernelBackend — batch-coalesced and priced from a measured
+    #: CalibrationTable (see docs/execution.md)
+    backend: str = "analytic"
+    batch_window_s: float = 0.0    # kernel backend: coalescing window
+    calibration: str | None = None  # table path; None = committed default
     seed: int = 0
 
     def __post_init__(self):
+        if self.backend not in ("analytic", "kernel"):
+            raise ValueError(
+                f"backend must be 'analytic' or 'kernel', got "
+                f"{self.backend!r}")
+        if self.batch_window_s < 0:
+            raise ValueError(f"batch_window_s must be >= 0, got "
+                             f"{self.batch_window_s}")
+        if self.backend == "analytic" and (self.batch_window_s
+                                           or self.calibration):
+            raise ValueError(
+                "batch_window_s/calibration are kernel-backend knobs "
+                "(set backend='kernel')")
         if self.n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
         if not 1 <= self.replication <= self.n_shards:
@@ -131,14 +151,21 @@ class FleetConfig:
                 f"{self.hedge_percentile}")
 
     def to_dict(self) -> dict:
-        return dict(n_shards=self.n_shards, replication=self.replication,
-                    storage=self.storage.name,
-                    concurrency=self.concurrency,
-                    shard_concurrency=self.shard_concurrency,
-                    queue_depth=self.queue_depth,
-                    cache_bytes=self.cache_bytes,
-                    cache_policy=self.cache_policy, hedge=self.hedge,
-                    hedge_percentile=self.hedge_percentile, seed=self.seed)
+        d = dict(n_shards=self.n_shards, replication=self.replication,
+                 storage=self.storage.name,
+                 concurrency=self.concurrency,
+                 shard_concurrency=self.shard_concurrency,
+                 queue_depth=self.queue_depth,
+                 cache_bytes=self.cache_bytes,
+                 cache_policy=self.cache_policy, hedge=self.hedge,
+                 hedge_percentile=self.hedge_percentile, seed=self.seed)
+        # keys appear only off the default so analytic config dicts stay
+        # byte-identical to pre-backend goldens/baselines
+        if self.backend != "analytic":
+            d.update(backend=self.backend,
+                     batch_window_us=round(self.batch_window_s * 1e6, 3),
+                     calibration=self.calibration or "default")
+        return d
 
 
 def merge_topk(results: list[SearchResult], k: int
@@ -317,6 +344,17 @@ class FleetRouter:
         #: (None -> each ShardServer builds cfg.make_cache())
         self._cache_factory = None
 
+    @functools.cached_property
+    def _exec_table(self):
+        """--backend kernel: the calibration table, resolved once per
+        router (lazy so subclasses with their own __init__ — the
+        tenancy router — get it too); every shard instance gets its own
+        coalescer over this shared table."""
+        if self.cfg.backend != "kernel":
+            return None
+        from repro.exec import load_table
+        return load_table(self.cfg.calibration)
+
     def _shard_engine_cfg(self, shard_id: int, instance: int
                           ) -> EngineConfig:
         cfg = self.cfg
@@ -328,13 +366,20 @@ class FleetRouter:
 
     def _spawn_server(self, shard_id: int, instance: int) -> ShardServer:
         cfg = self.cfg
+        backend_factory = None
+        if self._exec_table is not None:
+            from repro.exec import KernelBackend
+            backend_factory = lambda: KernelBackend(  # noqa: E731
+                self._exec_table, window_s=cfg.batch_window_s,
+                shard_id=shard_id, instance=instance)
         return ShardServer(
             shard_id, self._shard_engine_cfg(shard_id, instance),
             self._store, kernel=self.kernel, dim=self.ctxs[0].dim,
             pq_m=self.ctxs[0].pq_m, instance=instance,
             max_inflight=cfg.shard_concurrency,
             queue_depth=cfg.queue_depth, on_complete=self._job_done,
-            cache_factory=self._cache_factory)
+            cache_factory=self._cache_factory,
+            backend_factory=backend_factory)
 
     # ------------------------------------------------------------- run ---
     def run(self, queries: np.ndarray, params: SearchParams,
@@ -661,10 +706,18 @@ class FleetRouter:
 
     # ----------------------------------------------------- query driver --
     def _price(self, fq: _FleetQuery) -> float:
-        """Charge router-side compute since the last checkpoint."""
+        """Charge router-side compute since the last checkpoint.
+
+        On the kernel backend the router's own work (list selection,
+        merges) is priced from the same calibration table as the shards
+        — at batch-of-one, since router work is per-query."""
         m = fq.metrics
         d0, p0 = fq.snapshot
         fq.snapshot = (m.dist_comps, m.pq_dist_comps)
+        if self._exec_table is not None:
+            return self._exec_table.plan_seconds(
+                m.dist_comps - d0, m.pq_dist_comps - p0,
+                fq.ctx.dim, fq.ctx.pq_m)
         return plan_compute_seconds(m.dist_comps - d0,
                                     m.pq_dist_comps - p0,
                                     fq.ctx.dim, fq.ctx.pq_m,

@@ -73,7 +73,8 @@ class ShardServer:
                  max_inflight: int = 4, queue_depth: int = 16,
                  on_complete: Callable[["ShardServer", JobRecord], None]
                  | None = None,
-                 cache_factory: Callable[[], object] | None = None):
+                 cache_factory: Callable[[], object] | None = None,
+                 backend_factory: Callable[[], object] | None = None):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         if queue_depth < 0:
@@ -89,9 +90,13 @@ class ShardServer:
         # assemblies; default is the config's single-tenant cache path
         self._cache_factory = cache_factory if cache_factory is not None \
             else cfg.make_cache
+        # --backend kernel hands in a factory building this instance's
+        # batch coalescer (repro.exec.KernelBackend); None = analytic
+        backend = backend_factory() if backend_factory is not None else None
         self.engine = SteppableEngine(cfg, store, self._cache_factory(),
                                       kernel=kernel, dim=dim, pq_m=pq_m,
-                                      on_complete=self._job_done)
+                                      on_complete=self._job_done,
+                                      backend=backend)
         self._queue: deque = deque()       # (plan, metrics, tag, dim, pq_m)
         self.stats = ShardStats(shard_id=shard_id, instance=instance)
         self.alive = True

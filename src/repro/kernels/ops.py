@@ -15,10 +15,32 @@ from repro.kernels import pq_adc as _pq_adc
 from repro.kernels import ref as ref  # re-export oracles
 
 
+# Backend detection is resolved once (jax.default_backend() initializes
+# the platform backend — too heavy for the per-op hot path) and cached;
+# tests and TPU-vs-interpret comparisons override via
+# set_default_interpret().
+_DEFAULT_INTERPRET: bool | None = None
+
+
+def default_interpret() -> bool:
+    """The cached module-level interpret default (True off-TPU)."""
+    global _DEFAULT_INTERPRET
+    if _DEFAULT_INTERPRET is None:
+        _DEFAULT_INTERPRET = jax.default_backend() != "tpu"
+    return _DEFAULT_INTERPRET
+
+
+def set_default_interpret(value: bool | None) -> None:
+    """Override (or, with ``None``, re-arm auto-detection of) the
+    interpret default used when a call site passes ``interpret=None``."""
+    global _DEFAULT_INTERPRET
+    _DEFAULT_INTERPRET = value
+
+
 def _auto_interpret(interpret: bool | None) -> bool:
     if interpret is not None:
         return interpret
-    return jax.default_backend() != "tpu"
+    return default_interpret()
 
 
 def l2_distance(q, x, *, interpret: bool | None = None, **kw):

@@ -8,6 +8,8 @@ each instant of the query's sojourn to exactly one *stage*:
 ``dispatch``      gap between a round opening and its winning shard job
                   being submitted (retry backoff after sheds)
 ``queue``         winning job waiting in the shard's run queue
+``batching``      waiting in a kernel-backend batch window (coalescing;
+                  zero on the analytic backend)
 ``cache_fetch``   fetch legs served entirely from the shard cache
 ``storage_fetch`` fetch legs that went to remote storage
 ``compute``       scan/ADC/distance work between fetch legs
@@ -32,10 +34,11 @@ from dataclasses import dataclass, field
 __all__ = ["STAGES", "QueryPath", "AttributionReport", "extract_paths",
            "attribute", "trace_diff", "render_diff"]
 
-STAGES = ("admission", "route", "dispatch", "queue", "cache_fetch",
-          "storage_fetch", "compute", "merge", "other")
+STAGES = ("admission", "route", "dispatch", "queue", "batching",
+          "cache_fetch", "storage_fetch", "compute", "merge", "other")
 
-_LEG_NAMES = frozenset(("queue", "cache_fetch", "storage_fetch", "compute"))
+_LEG_NAMES = frozenset(("queue", "batching", "cache_fetch",
+                        "storage_fetch", "compute"))
 
 
 @dataclass

@@ -51,7 +51,7 @@ def _jsonable(attrs: dict) -> dict:
 def _lane(span, attrs, roots) -> tuple[int, int]:
     """(pid, tid) for a span: shard process for shard work, else the
     router process with one lane per tenant (tid from root attrs)."""
-    if span.name in ("shard_job", "compaction"):
+    if span.name in ("shard_job", "compaction", "batch_compute"):
         shard = attrs.get("shard", 0)
         return _SHARD_PID0 + int(shard), int(attrs.get("instance", 0))
     root_attrs = roots.get(span.sid, {})

@@ -192,18 +192,38 @@ def emit_job_spans(tr: Tracer, parent: Span | None, submit_t: float,
     enough to tile the interval exactly: queue wait (submit -> engine
     start), alternating ``compute`` and fetch legs, final compute.
     Fetch legs are ``storage_fetch`` when any request missed to storage
-    and ``cache_fetch`` when the whole batch was served locally.
+    and ``cache_fetch`` when the whole batch was served locally.  On a
+    kernel backend the job's ``coalesce`` intervals (waits in the batch
+    window) are tiled out of the compute gaps as ``batching`` legs; with
+    no coalescing the emitted spans are identical to before the backend
+    existed.
     """
+    coalesce = getattr(job, "coalesce", None) or ()
+
+    def compute_legs(lo: float, hi: float) -> None:
+        cur = lo
+        for iv in coalesce:
+            e, f = iv[0], iv[1]
+            if f is None or f <= cur or e >= hi:
+                continue
+            e, f = max(e, cur), min(f, hi)
+            if e > cur:
+                tr.record("compute", cur, e, parent=parent)
+            tr.record("batching", e, f, parent=parent)
+            cur = f
+        if hi > cur:
+            tr.record("compute", cur, hi, parent=parent)
+
     if job.start_t > submit_t:
         tr.record("queue", submit_t, job.start_t, parent=parent)
     cursor = job.start_t
     for b in job.batches:
         if b.submit_t > cursor:
-            tr.record("compute", cursor, b.submit_t, parent=parent)
+            compute_legs(cursor, b.submit_t)
         name = "storage_fetch" if b.n_requests > 0 else "cache_fetch"
         tr.record(name, b.submit_t, b.done_t, parent=parent,
                   requests=b.n_requests, hits=b.n_hits,
                   bytes_storage=b.nbytes_storage, bytes=b.nbytes_total)
         cursor = b.done_t
     if job.end_t > cursor:
-        tr.record("compute", cursor, job.end_t, parent=parent)
+        compute_legs(cursor, job.end_t)

@@ -97,6 +97,9 @@ class _JobState:
     pending_total_bytes: int = 0
     pending_ev: Event | None = None     # next engine event for this job
     alive: bool = True                  # False once aborted (shard death)
+    #: [enq_t, flush_t] intervals spent waiting in a KernelBackend batch
+    #: window (empty on the analytic backend)
+    coalesce: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -114,6 +117,9 @@ class JobRecord:
     result: Any
     metrics: QueryMetrics
     batches: list[BatchTrace]
+    #: batch-coalescing waits ([enq_t, flush_t] pairs) when the job ran
+    #: on a kernel backend; tiled as "batching" legs in the span tree
+    coalesce: list = dataclasses.field(default_factory=list)
 
     @property
     def latency(self) -> float:
@@ -134,7 +140,8 @@ class SteppableEngine:
 
     def __init__(self, cfg: EngineConfig, store, cache=None, *,
                  kernel: Kernel | None = None, dim: int, pq_m: int = 0,
-                 on_complete: Callable[[JobRecord], None] | None = None):
+                 on_complete: Callable[[JobRecord], None] | None = None,
+                 backend=None):
         self.cfg = cfg
         self.store = store
         self.cache = cache
@@ -143,6 +150,11 @@ class SteppableEngine:
         self.on_complete = on_complete
         self.kernel = kernel if kernel is not None else Kernel(seed=cfg.seed)
         self.sim = StorageSim(cfg.storage, self.kernel, seed=cfg.seed)
+        # Optional repro.exec.KernelBackend: compute is then batch-
+        # coalesced and priced from a measured CalibrationTable instead
+        # of the analytic ComputeSpec.  None keeps the analytic path
+        # event-for-event identical to before the backend existed.
+        self.backend = backend.attach(self) if backend is not None else None
         self._jobs: list[_JobState] = []
         self.in_flight = 0
         self.jobs_done = 0
@@ -182,35 +194,68 @@ class SteppableEngine:
         return tags
 
     # ---------------------------------------------------------- internal --
-    def _compute_seconds(self, st: _JobState) -> float:
-        """Price the compute the plan did since the last yield."""
+    def _work_delta(self, st: _JobState) -> tuple[int, int]:
+        """Distance comps / PQ lookups the plan did since the last yield."""
         m = st.metrics
         d0, p0 = st.last_snapshot
         st.last_snapshot = (m.dist_comps, m.pq_dist_comps)
-        return plan_compute_seconds(m.dist_comps - d0, m.pq_dist_comps - p0,
+        return m.dist_comps - d0, m.pq_dist_comps - p0
+
+    def _compute_seconds(self, st: _JobState) -> float:
+        """Price the compute the plan did since the last yield."""
+        d_dist, d_pq = self._work_delta(st)
+        return plan_compute_seconds(d_dist, d_pq,
                                     st.dim, st.pq_m, self.cfg.compute)
 
     def _advance_job(self, st: _JobState, t: float, first: bool = False,
                      payloads: dict | None = None) -> None:
-        """Resume the generator; charge compute; schedule the next batch."""
+        """Resume the generator; charge compute; schedule the next batch.
+
+        On the analytic backend compute is priced inline and the next
+        step scheduled at ``t + dt``.  On a kernel backend the work
+        delta is handed to the batch coalescer, which calls back (at
+        flush + calibrated batch time) with the completion instant."""
         try:
             if first:
                 batch = next(st.gen)
             else:
                 batch = st.gen.send(payloads)
         except StopIteration as stop:
-            dt = self._compute_seconds(st)
-            self.in_flight -= 1
-            self.jobs_done += 1
-            self._jobs.remove(st)
-            record = JobRecord(tag=st.tag, start_t=st.start_t,
-                               end_t=t + dt, result=stop.value,
-                               metrics=st.metrics, batches=st.batches)
-            if self.on_complete is not None:
-                self.on_complete(record)
+            if self.backend is not None:
+                d_dist, d_pq = self._work_delta(st)
+                self.backend.submit(
+                    st, t, d_dist, d_pq,
+                    lambda td, st=st, v=stop.value:
+                        self._finish_job(st, td, v))
+                return
+            self._finish_job(st, t + self._compute_seconds(st), stop.value)
+            return
+        if self.backend is not None:
+            d_dist, d_pq = self._work_delta(st)
+            self.backend.submit(
+                st, t, d_dist, d_pq,
+                lambda td, st=st, b=batch: self._dispatch_batch(st, b, td))
             return
         dt = self._compute_seconds(st)
         st.pending_ev = self.kernel.at(t + dt, self._submit_batch, st, batch)
+
+    def _finish_job(self, st: _JobState, end_t: float, value: Any) -> None:
+        """Retire a completed plan and fire ``on_complete`` synchronously."""
+        self.in_flight -= 1
+        self.jobs_done += 1
+        self._jobs.remove(st)
+        record = JobRecord(tag=st.tag, start_t=st.start_t,
+                           end_t=end_t, result=value,
+                           metrics=st.metrics, batches=st.batches,
+                           coalesce=st.coalesce)
+        if self.on_complete is not None:
+            self.on_complete(record)
+
+    def _dispatch_batch(self, st: _JobState, batch, t: float) -> None:
+        """Kernel-backend continuation: fetch round starts at batch end."""
+        if not st.alive:
+            return
+        st.pending_ev = self.kernel.at(t, self._submit_batch, st, batch)
 
     def _submit_batch(self, st: _JobState, batch) -> None:
         """Cache-split the batch and route misses to storage."""

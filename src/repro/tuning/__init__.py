@@ -13,8 +13,10 @@ from repro.tuning.evaluate import (EvalBudget, EvalOutcome, default_budget,
                                    successive_halving)
 from repro.tuning.fleet import (FleetOutcome, FleetPoint,
                                 FleetRecommendation, LoadOutcome,
-                                LoadRecommendation, evaluate_fleet_load,
-                                evaluate_fleet_point, tune_fleet,
+                                LoadRecommendation, WindowOutcome,
+                                WindowRecommendation, evaluate_batch_window,
+                                evaluate_fleet_load, evaluate_fleet_point,
+                                tune_batch_window, tune_fleet,
                                 tune_fleet_for_load)
 from repro.tuning.ingest import (IngestOutcome, IngestPoint,
                                  IngestPrediction, IngestRecommendation,
@@ -43,6 +45,8 @@ __all__ = [
     "evaluate_fleet_point", "tune_fleet",
     "LoadOutcome", "LoadRecommendation", "evaluate_fleet_load",
     "tune_fleet_for_load",
+    "WindowOutcome", "WindowRecommendation", "evaluate_batch_window",
+    "tune_batch_window",
     "IngestPoint", "IngestPrediction", "IngestOutcome",
     "IngestRecommendation", "enumerate_ingest_space", "screen_ingest",
     "analytic_write_amplification", "tune_ingest",

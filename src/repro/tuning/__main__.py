@@ -16,6 +16,14 @@ Two modes:
 
       python -m repro.tuning --fleet --scenario poisson --rate 400 \\
           --duration 1 --slo-ms 50
+
+* **batch-window tuning** (``--tune-window``): sweep the kernel
+  execution backend's per-shard batch-coalescing window on a fixed
+  fleet point and map the occupancy vs p99 frontier.  Both fleet modes
+  also accept ``--backend kernel`` to price the sweep from a measured
+  CalibrationTable instead of the analytic ComputeSpec constants.
+
+      python -m repro.tuning --tune-window --scenario poisson --rate 400
 """
 from __future__ import annotations
 
@@ -24,12 +32,14 @@ import dataclasses
 import sys
 import time
 
-from repro.cli import (add_common_args, add_monitor_args, add_obs_args,
-                       add_scenario_args, emit_json, emit_obs,
-                       monitor_from_args, pricebook_from_args,
-                       scenario_from_args, tracer_from_args)
+from repro.cli import (add_common_args, add_exec_args, add_monitor_args,
+                       add_obs_args, add_scenario_args, emit_json,
+                       emit_obs, exec_fields_from_args, monitor_from_args,
+                       pricebook_from_args, scenario_from_args,
+                       tracer_from_args)
 from repro.tuning.evaluate import EvalBudget
-from repro.tuning.fleet import tune_fleet, tune_fleet_for_load
+from repro.tuning.fleet import (tune_batch_window, tune_fleet,
+                                tune_fleet_for_load)
 from repro.tuning.recommend import autotune
 from repro.tuning.space import (STORAGE_ALIASES, EnvSpec, WorkloadSpec,
                                 resolve_storage)
@@ -76,6 +86,11 @@ def build_parser() -> argparse.ArgumentParser:
                         "served within the SLO")
     p.add_argument("--hedge", action="store_true",
                    help="consider hedged fleets (R >= 2 points)")
+    p.add_argument("--tune-window", action="store_true",
+                   help="sweep the kernel backend's batch-coalescing "
+                        "window on a fixed fleet point and map the "
+                        "occupancy vs p99 frontier (docs/execution.md)")
+    add_exec_args(p)
     add_scenario_args(p, faults=False)
     add_obs_args(p)
     add_monitor_args(p)
@@ -109,7 +124,54 @@ def main(argv: list[str] | None = None) -> int:
         parser.error("--recall-slo is a serving-run knob (python -m "
                      "repro.fleet); the sizing rerun has no precomputed "
                      "ground truth to judge live recall against")
+    exec_kw = None
+    if args.tune_window:
+        if args.batch_window_us:
+            parser.error("--batch-window-us conflicts with --tune-window "
+                         "(the window is the swept axis)")
+        if args.fleet:
+            parser.error("--tune-window sweeps one fixed fleet point; "
+                         "drop --fleet (size the fleet first, then tune "
+                         "its window)")
+    else:
+        fields = exec_fields_from_args(args, parser)
+        if args.backend == "kernel":
+            if not args.fleet:
+                parser.error("--backend kernel applies to fleet sweeps; "
+                             "add --fleet (or --tune-window; the index "
+                             "tuner has no serving fleet to price)")
+            exec_kw = fields
     from repro.obs import run_manifest
+
+    if args.tune_window:
+        try:
+            scenario = scenario_from_args(args)
+        except ValueError as e:
+            build_parser().error(str(e))
+        t0 = time.perf_counter()
+        rec = tune_batch_window(
+            w, env,
+            scenario=scenario if scenario.kind != "closed" else None,
+            calibration=args.calibration, goodput_target=args.goodput,
+            seed=args.seed)
+        out = rec.to_dict()
+        if tracer is not None:
+            # traced validation rerun at the recommended window (the
+            # sweep itself stays untraced; see trace_fleet_point)
+            from repro.tuning.fleet import trace_fleet_point
+            trace_fleet_point(
+                w, env, rec.point, scenario=scenario, tracer=tracer,
+                exec_kw=dict(backend="kernel",
+                             batch_window_s=rec.window_us * 1e-6,
+                             calibration=args.calibration),
+                seed=args.seed)
+        out["meta"] = run_manifest(
+            seed=args.seed,
+            config=dict(mode="batch-window", **dataclasses.asdict(w)),
+            wall_s=time.perf_counter() - t0)
+        emit_obs(out, args, tracer)
+        emit_json(out, args)
+        return 0
 
     if args.fleet:
         try:
@@ -119,11 +181,13 @@ def main(argv: list[str] | None = None) -> int:
         t0 = time.perf_counter()
         if scenario.kind == "closed":
             rec = tune_fleet(w, env, target_speedup=args.target_speedup,
-                             hedge=args.hedge, seed=args.seed)
+                             hedge=args.hedge, exec_kw=exec_kw,
+                             seed=args.seed)
         else:
             rec = tune_fleet_for_load(w, env, scenario,
                                       goodput_target=args.goodput,
-                                      hedge=args.hedge, seed=args.seed)
+                                      hedge=args.hedge, exec_kw=exec_kw,
+                                      seed=args.seed)
         out = rec.to_dict()
         if tracer is not None or monitor is not None \
                 or pricebook is not None:
@@ -133,7 +197,8 @@ def main(argv: list[str] | None = None) -> int:
             from repro.tuning.fleet import trace_fleet_point
             vrep = trace_fleet_point(w, env, rec.point, scenario=scenario,
                                      tracer=tracer, monitor=monitor,
-                                     pricebook=pricebook, seed=args.seed)
+                                     pricebook=pricebook, exec_kw=exec_kw,
+                                     seed=args.seed)
             if vrep.alerts is not None:
                 out["alerts"] = vrep.alerts
             if vrep.cost is not None:
