@@ -112,6 +112,22 @@ def _attrib_diff_lines(fresh: dict, base: dict) -> list[str]:
     return render_diff(trace_diff(ba, fa)).splitlines()
 
 
+def _explain_lines(fresh: dict) -> list[str]:
+    """What the fresh tail looked like: the explain probe's headline and
+    top exemplar clusters (present when the bench ran an explained
+    probe), printed next to the critical-path diff so a gate failure
+    comes with its own forensics."""
+    exp = fresh.get("explain")
+    if not (isinstance(exp, dict) and exp.get("headline")):
+        return []
+    lines = [f"tail explanation: {exp['headline']}"]
+    for c in exp.get("clusters", []):
+        events = ", ".join(c.get("events", [])) or "no concurrent events"
+        lines.append(f"  {c['n']}x {c['stage']}@shard{c['shard']} "
+                     f"during {events}")
+    return lines
+
+
 def _meta_lines(fresh: dict) -> list[str]:
     meta = fresh.get("meta")
     if not isinstance(meta, dict):
@@ -156,6 +172,8 @@ def main(argv: list[str] | None = None) -> int:
                   f"{fresh['failures']}")
             for line in _meta_lines(fresh):
                 print(f"  {line}")
+            for line in _explain_lines(fresh):
+                print(f"  {line}")
             failed = True
             continue
         if args.update:
@@ -182,6 +200,8 @@ def main(argv: list[str] | None = None) -> int:
             for line in _meta_lines(fresh):
                 print(f"  {line}")
             for line in _attrib_diff_lines(fresh, base):
+                print(f"  {line}")
+            for line in _explain_lines(fresh):
                 print(f"  {line}")
         else:
             print(f"OK   {label} matches "

@@ -344,6 +344,69 @@ def bench_obs(index, queries, gt) -> dict:
                 attrib=d)
 
 
+def bench_explain(index, queries, gt) -> dict:
+    """Tail explanation + online MRC observe, never perturb: an
+    explained, MRC-profiled run must reproduce the plain report bit for
+    bit, cost at most 1.5x the plain wall time, and its explain/MRC
+    blocks must be identical across reruns (seeded reservoir, RNG-free
+    spatial sampling)."""
+    params = SearchParams(k=10, nprobe=64)
+    cfg = FleetConfig(
+        n_shards=4, replication=2, storage=TOS, concurrency=16,
+        shard_concurrency=4, queue_depth=16, seed=5,
+        hedge=True, hedge_percentile=75.0, hedge_min_samples=16,
+        cache_bytes=64 * 1024, cache_policy="slru")
+
+    def _run(**kw):
+        t0 = time.perf_counter()
+        rep = run_fleet(index, queries, params, cfg, **kw)
+        return rep, time.perf_counter() - t0
+
+    # min of two runs each: the guard measures observer cost, not noise
+    plain, t_plain = _run()
+    _, t_plain2 = _run()
+    t_plain = min(t_plain, t_plain2)
+    obs, t_obs = _run(tracer=Tracer(), explain=True, mrc=True)
+    obs2, t_obs2 = _run(tracer=Tracer(), explain=True, mrc=True)
+    t_obs = min(t_obs, t_obs2)
+
+    s = obs.summary()
+    exp, mrc = s.pop("explain"), s.pop("mrc")
+    bit_exact = s == plain.summary()
+    _check("obs-explain-bit-exact", bit_exact,
+           "explained + MRC-profiled fleet report is bit-identical to "
+           "the plain run minus the explain/mrc blocks")
+    ratio = t_obs / max(t_plain, 1e-9)
+    _check("obs-explain-overhead", t_obs <= 1.5 * t_plain + 0.05,
+           f"explained {t_obs * 1e3:.0f}ms vs plain "
+           f"{t_plain * 1e3:.0f}ms ({ratio:.2f}x, want <= 1.5x)")
+    deterministic = (
+        json.dumps(exp, sort_keys=True)
+        == json.dumps(obs2.explain, sort_keys=True)
+        and json.dumps(mrc, sort_keys=True)
+        == json.dumps(obs2.mrc, sort_keys=True))
+    _check("obs-explain-deterministic", deterministic,
+           "explain + mrc blocks identical across two identical runs")
+
+    top = exp["clusters"][0]
+    emit("fleet/obs-explain", 1e6 / max(obs.qps, 1e-9),
+         overhead_ratio=ratio, n_exemplars=exp["n_exemplars"],
+         top_stage=top["stage"],
+         mrc_sampled=sum(t["sampled"] for t in mrc["tenants"]))
+    # wall times stay out of the returned row (timing noise would flake
+    # the regression gate); the headline + clusters are virtual-time
+    # deterministic and double as forensics when the gate trips
+    return dict(bit_exact=bit_exact, deterministic=deterministic,
+                headline=exp["headline"],
+                clusters=[dict(stage=c["stage"], shard=c["shard"],
+                               n=c["n"], events=c["events"])
+                          for c in exp["clusters"][:3]],
+                n_exemplars=exp["n_exemplars"],
+                tail_pct=exp["tail_pct"],
+                mrc_sampled=sum(t["sampled"] for t in mrc["tenants"]),
+                mrc_accesses=sum(t["accesses"] for t in mrc["tenants"]))
+
+
 def bench_cost(index, queries, gt) -> dict:
     """Monitoring + costing observe, never perturb: a monitored, priced
     run must reproduce the plain report bit for bit, and the dollar fold
@@ -381,6 +444,7 @@ def main() -> int:
                        fault=bench_faults(index, queries, gt)),
         batch_window=bench_batch_window(index, queries, gt),
         obs=bench_obs(index, queries, gt),
+        explain=bench_explain(index, queries, gt),
         cost=bench_cost(index, queries, gt),
         failures=_failures,
     )

@@ -54,6 +54,12 @@ class SLRUCache:
         #: (not on explicit remove/invalidate) — the hook ghost lists and
         #: other second-chance structures attach to.
         self.on_evict: Callable[[Hashable, int], None] | None = None
+        #: optional pure observer of the access stream: ``record_get(key,
+        #: hit)`` on every lookup, ``record_put(key, nbytes)`` on every
+        #: miss-fill.  The sampled-ghost MRC estimator
+        #: (:mod:`repro.obs.mrc`) attaches here; observers read, never
+        #: mutate, so cache behaviour is byte-identical with one attached.
+        self.observer = None
 
     # ------------------------------------------------------------ stats --
     @property
@@ -78,6 +84,12 @@ class SLRUCache:
     # ------------------------------------------------------------ logic --
     def get(self, key: Hashable) -> bool:
         """Lookup; promotes on probation hit.  Returns hit/miss."""
+        hit = self._get(key)
+        if self.observer is not None:
+            self.observer.record_get(key, hit)
+        return hit
+
+    def _get(self, key: Hashable) -> bool:
         if self.capacity == 0:
             self.misses += 1
             return False
@@ -96,6 +108,8 @@ class SLRUCache:
 
     def put(self, key: Hashable, nbytes: int) -> None:
         """Insert after a miss-fetch.  New entries go to probation."""
+        if self.observer is not None:
+            self.observer.record_put(key, nbytes)
         if self.capacity == 0 or nbytes > self.capacity:
             return
         if key in self.protected or key in self.probation:

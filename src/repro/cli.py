@@ -69,23 +69,63 @@ def add_obs_args(p: argparse.ArgumentParser) -> None:
     g.add_argument("--attrib", action="store_true",
                    help="print a critical-path attribution breakdown "
                         "(and include it in the JSON report)")
+    g.add_argument("--explain", nargs="?", const="-", default=None,
+                   metavar="PATH",
+                   help="explain the latency tail: exemplar reservoirs, "
+                        "windowed attribution and alert forensics "
+                        "(repro.obs.explain); the report gains an "
+                        "'explain' block, a summary renders to stderr, "
+                        "and with PATH the full report is also written "
+                        "there as JSON (implies tracing)")
+    g.add_argument("--mrc", nargs="?", const="-", default=None,
+                   metavar="PATH",
+                   help="profile online miss-ratio curves per tenant "
+                        "(SHARDS sampled ghost, repro.obs.mrc); the "
+                        "report gains an 'mrc' block, and with PATH the "
+                        "curves artifact is also written there — feed it "
+                        "to 'python -m repro.tuning --tune-split --mrc'")
 
 
 def tracer_from_args(args):
-    """A live Tracer when --trace/--attrib asked for one, else None."""
+    """A live Tracer when --trace/--attrib/--explain asked for one,
+    else None."""
     from repro.obs import Tracer
-    if getattr(args, "trace", None) or getattr(args, "attrib", False):
+    if (getattr(args, "trace", None) or getattr(args, "attrib", False)
+            or getattr(args, "explain", None)):
         return Tracer()
     return None
+
+
+def _write_artifact(path: str, payload: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 def emit_obs(out: dict, args, tracer) -> None:
     """Fold the observability outputs into the report payload.
 
-    The attribution breakdown lands in the JSON (and renders to stderr
-    so stdout stays machine-parseable); the Chrome trace goes to the
-    ``--trace`` path.
+    Renderings go to stderr so stdout stays machine-parseable; the
+    Chrome trace goes to the ``--trace`` path, and the ``--explain`` /
+    ``--mrc`` blocks (already inside ``out`` via the report summary)
+    are additionally written as standalone artifacts when those flags
+    carry a PATH.
     """
+    def block(key):
+        # the report summary nests the block at report.<key> (single
+        # fleet run) or report.fleet.<key> (multi-tenant run)
+        rep = out.get("report", out)
+        return rep.get(key, rep.get("fleet", {}).get(key))
+
+    if getattr(args, "explain", None) and block("explain") is not None:
+        from repro.obs.explain import render_explain
+        print(render_explain(block("explain")), file=sys.stderr)
+        if args.explain != "-":
+            _write_artifact(args.explain, block("explain"))
+    if getattr(args, "mrc", None) and args.mrc != "-" \
+            and block("mrc") is not None:
+        _write_artifact(args.mrc, block("mrc"))
     if tracer is None:
         return
     from repro.obs import attribute, write_chrome_trace

@@ -205,12 +205,16 @@ def run_tenancy(args, storage) -> int:
         rep = run_tenant_fleet(tenants_once(), cfg, args.cache_policy,
                                faults=faults,
                                series_dt=args.series_dt, tracer=tracer,
-                               monitor=monitor, pricebook=pricebook)
+                               monitor=monitor, pricebook=pricebook,
+                               explain=bool(args.explain),
+                               mrc=bool(args.mrc))
     else:
         rep = measure_interference(tenants_once, cfg, args.cache_policy,
                                    series_dt=args.series_dt,
                                    tracer=tracer, monitor=monitor,
-                                   pricebook=pricebook)
+                                   pricebook=pricebook,
+                                   explain=bool(args.explain),
+                                   mrc=bool(args.mrc))
     wall_s = time.perf_counter() - t0
     if rep.showback is not None:
         from repro.obs import format_showback
@@ -317,7 +321,8 @@ def main(argv: list[str] | None = None) -> int:
                        series_dt=args.series_dt,
                        updates=updates, ingest=ingest_cfg,
                        tracer=tracer, monitor=monitor,
-                       pricebook=pricebook)
+                       pricebook=pricebook,
+                       explain=bool(args.explain), mrc=bool(args.mrc))
     wall_s = time.perf_counter() - t0
 
     from repro.obs import run_manifest

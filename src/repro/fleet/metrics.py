@@ -114,6 +114,9 @@ class FleetReport:
     # ------------------------------------------- live obs (PR 7) fields --
     alerts: dict | None = None            # repro.obs.monitor summary
     cost: dict | None = None              # repro.obs.cost fleet_cost
+    # ------------------------------------------ tail obs (PR 9) fields --
+    explain: dict | None = None           # repro.obs.explain tail report
+    mrc: dict | None = None               # repro.obs.mrc curves
 
     # ------------------------------------------------------- throughput --
     @property
@@ -298,6 +301,10 @@ class FleetReport:
             out["alerts"] = self.alerts
         if self.cost is not None:
             out["cost"] = self.cost
+        if self.explain is not None:
+            out["explain"] = self.explain
+        if self.mrc is not None:
+            out["mrc"] = self.mrc
         return out
 
     def to_json(self, indent: int | None = 2) -> str:

@@ -73,7 +73,9 @@ from repro.fleet.metrics import FleetQueryRecord, FleetReport, FleetSeries
 from repro.fleet.partition import partition_for_index
 from repro.fleet.server import ShardGroup, ShardServer
 from repro.obs.cost import PriceBook, fleet_cost
+from repro.obs.explain import ExplainCollector, ExplainConfig
 from repro.obs.monitor import FleetMonitor, MonitorConfig
+from repro.obs.mrc import MRCConfig, MRCProfiler
 from repro.obs.trace import NULL_TRACER, Tracer, emit_job_spans
 from repro.serving.engine import EngineConfig, JobRecord
 from repro.sim.admission import AdmissionWindow
@@ -392,7 +394,9 @@ class FleetRouter:
             updates=None, ingest=None,
             tracer: Tracer | None = None,
             monitor: MonitorConfig | None = None,
-            pricebook: PriceBook | None = None) -> FleetReport:
+            pricebook: PriceBook | None = None,
+            explain: bool | ExplainConfig = False,
+            mrc: bool | MRCConfig = False) -> FleetReport:
         """``updates`` (an :class:`repro.ingest.stream.UpdateStream`)
         turns the run into a read-write workload: the router forwards
         each update to the shard groups owning its keys, every owner
@@ -406,7 +410,13 @@ class FleetRouter:
         (``repro.obs.monitor``); unless ``monitor.actions`` is set they
         only observe, and the run stays bit-exact.  ``pricebook``
         prices the run (``repro.obs.cost``) into the report's ``cost``
-        block — pure post-hoc arithmetic, never a kernel event."""
+        block — pure post-hoc arithmetic, never a kernel event.
+
+        ``explain`` attaches the tail-explanation collector
+        (``repro.obs.explain``; requires ``tracer``) and ``mrc`` the
+        online miss-ratio-curve profiler (``repro.obs.mrc``).  Both are
+        pure observers — explained/profiled runs stay bit-exact — and
+        land in the report's ``explain`` / ``mrc`` blocks."""
         cfg = self.cfg
         qids = list(query_ids) if query_ids is not None else list(
             range(len(queries)))
@@ -421,7 +431,8 @@ class FleetRouter:
             updates=updates, ingest_cfg=ingest)
         wall = self._execute([ctx], faults=faults, autoscale=autoscale,
                              series_dt=series_dt, tracer=tracer,
-                             monitor=monitor, pricebook=pricebook)
+                             monitor=monitor, pricebook=pricebook,
+                             explain=explain, mrc=mrc)
         self.index = ctx.index          # make_mutable may have wrapped it
         stats = [srv.finalize_stats() for g in self.groups
                  for srv in g.all_servers()]
@@ -459,6 +470,10 @@ class FleetRouter:
             report.alerts["actions"] = list(self._alert_actions)
         if self._pricebook is not None:
             report.cost = fleet_cost(report, self.cfg, self._pricebook)
+        if self._explain is not None:
+            report.explain = self._explain.explain_tail()
+        if self._mrc is not None:
+            report.mrc = self._mrc.to_dict(wall_s=report.wall_time_s)
 
     def _execute(self, ctxs: list[_TenantCtx], *,
                  faults: FaultSchedule | None = None,
@@ -466,7 +481,9 @@ class FleetRouter:
                  series_dt: float | None = None,
                  tracer: Tracer | None = None,
                  monitor: MonitorConfig | None = None,
-                 pricebook: PriceBook | None = None) -> float:
+                 pricebook: PriceBook | None = None,
+                 explain: bool | ExplainConfig = False,
+                 mrc: bool | MRCConfig = False) -> float:
         """Drive the shared kernel over all tenant contexts; returns the
         run's wall time.  One context reproduces the pre-tenancy event
         sequence exactly (same RNG streams, same scheduling order).
@@ -481,6 +498,31 @@ class FleetRouter:
         self.kernel = Kernel(seed=cfg.seed)
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.tracer.attach(self.kernel)
+        # Tail-explanation collector: folds every finished query's span
+        # tree into exemplar reservoirs + windowed attribution.  Pure
+        # observer — it reads spans the tracer already holds.
+        self._explain = None
+        if explain:
+            if not self.tracer.enabled:
+                raise ValueError("explain requires a tracer")
+            self._explain = ExplainCollector(
+                self.tracer,
+                explain if isinstance(explain, ExplainConfig) else None)
+        # Online MRC profiler: attaches to every instance cache as a
+        # read-only access-stream observer.  Wrapping the cache factory
+        # (rather than the built caches) keeps the observer attached
+        # across cold-cache fault recovery and autoscale spawns.
+        self._mrc = None
+        if mrc:
+            names = {c.tid: ("fleet" if len(ctxs) == 1 else c.name)
+                     for c in ctxs}
+            self._mrc = MRCProfiler(
+                mrc if isinstance(mrc, MRCConfig) else None,
+                ref_bytes=cfg.cache_bytes, tenant_names=names)
+            base_factory = self._cache_factory
+            if base_factory is None:
+                base_factory = self._shard_engine_cfg(0, 0).make_cache
+            self._cache_factory = self._mrc.wrap_factory(base_factory)
         self.groups = [ShardGroup(s, self._spawn_server)
                        for s in range(cfg.n_shards)]
         for ctx in ctxs:
@@ -531,6 +573,11 @@ class FleetRouter:
         self._alert_actions: list[dict] = []
         if monitor is not None:
             self._slo_monitor = FleetMonitor(monitor, tracer=self.tracer)
+            if self._explain is not None:
+                # every fired alert snapshots its own root-cause bundle
+                self._slo_monitor.forensics_provider = (
+                    lambda now: self._explain.forensics(
+                        now, self.tracer.metrics))
             for ctx in ctxs:
                 if ctx.slo_s is not None:
                     self._slo_monitor.monitor(
@@ -1066,6 +1113,8 @@ class FleetRouter:
             tr.end(fq.span, t)
             tr.metrics.histogram("fleet.sojourn_s").observe(sojourn)
             tr.metrics.histogram("fleet.latency_s").observe(t - fq.start_t)
+            if self._explain is not None:
+                self._explain.on_query(fq.span)
         self.recent_sojourns.append(sojourn)
         self._slice_counts[1] += 1
         if ctx.slo_s is not None and sojourn <= ctx.slo_s:
@@ -1271,6 +1320,10 @@ class FleetRouter:
         if self._pricebook is not None:
             for k, v in self._running_cost(now).items():
                 m.gauge(f"cost.{k}").set(round(v, 9))
+        if self._explain is not None:
+            self._explain.publish(m)
+        if self._mrc is not None:
+            self._mrc.publish(m)
         m.snapshot(now)
 
     def _flush_slice(self, now: float) -> None:
@@ -1292,10 +1345,13 @@ def run_fleet(index, queries: np.ndarray, params: SearchParams,
               updates=None, ingest=None,
               tracer: Tracer | None = None,
               monitor: MonitorConfig | None = None,
-              pricebook: PriceBook | None = None) -> FleetReport:
+              pricebook: PriceBook | None = None,
+              explain: bool | ExplainConfig = False,
+              mrc: bool | MRCConfig = False) -> FleetReport:
     """One-call fleet evaluation (the fleet analogue of run_workload)."""
     return FleetRouter(index, cfg).run(
         queries, params, query_ids=query_ids, arrivals=arrivals,
         faults=faults, autoscale=autoscale, slo_s=slo_s,
         series_dt=series_dt, updates=updates, ingest=ingest,
-        tracer=tracer, monitor=monitor, pricebook=pricebook)
+        tracer=tracer, monitor=monitor, pricebook=pricebook,
+        explain=explain, mrc=mrc)

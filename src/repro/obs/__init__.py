@@ -6,9 +6,12 @@ trees (:mod:`~repro.obs.trace`), a fixed-memory metrics registry
 (:mod:`~repro.obs.export`), per-query critical-path attribution and
 run-to-run trace diffs (:mod:`~repro.obs.critical_path`),
 self-describing run manifests (:mod:`~repro.obs.manifest`), live SLO
-monitors with burn-rate alerting (:mod:`~repro.obs.monitor`), and
+monitors with burn-rate alerting (:mod:`~repro.obs.monitor`),
 dollar-denominated cost metering with per-tenant show-back
-(:mod:`~repro.obs.cost`).
+(:mod:`~repro.obs.cost`), tail-latency exemplars with deterministic
+``explain_tail`` reports (:mod:`~repro.obs.explain`), and online
+miss-ratio-curve profiling via SHARDS spatial sampling
+(:mod:`~repro.obs.mrc`).
 
 The cardinal rule: observing never perturbs.  A run with a tracer,
 monitor or price book attached is bit-exact against the same run
@@ -21,8 +24,11 @@ from repro.obs.cost import (PRICEBOOKS, PriceBook, fleet_cost,
 from repro.obs.critical_path import (AttributionReport, attribute,
                                      extract_paths, render_diff,
                                      trace_diff)
+from repro.obs.explain import (ExplainCollector, ExplainConfig,
+                               render_explain)
 from repro.obs.export import chrome_trace, flame_summary, write_chrome_trace
 from repro.obs.manifest import run_manifest
+from repro.obs.mrc import MRCConfig, MRCProfiler, mrc_miss_ratio
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.monitor import (DEFAULT_RULES, ActionBus, Alert, AlertLog,
                                BurnRateRule, FleetMonitor, MonitorConfig,
@@ -40,4 +46,6 @@ __all__ = [
     "Alert", "AlertLog", "ActionBus", "DEFAULT_RULES",
     "PriceBook", "PRICEBOOKS", "resolve_pricebook",
     "fleet_cost", "tenant_showback", "format_showback",
+    "ExplainConfig", "ExplainCollector", "render_explain",
+    "MRCConfig", "MRCProfiler", "mrc_miss_ratio",
 ]

@@ -32,7 +32,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 __all__ = ["STAGES", "QueryPath", "AttributionReport", "extract_paths",
-           "attribute", "trace_diff", "render_diff"]
+           "query_path", "path_shares", "attribute", "trace_diff",
+           "render_diff"]
 
 STAGES = ("admission", "route", "dispatch", "queue", "batching",
           "cache_fetch", "storage_fetch", "compute", "merge", "other")
@@ -55,13 +56,21 @@ class QueryPath:
         return sum(self.stages.values())
 
 
+def _dur(span, clamp_hi: float) -> float:
+    """A span's duration, treating an unclosed span (query aborted
+    mid-round by a fault, or a leg cut off at trace end) as running to
+    ``clamp_hi`` — never None arithmetic, never negative."""
+    t1 = span.t1 if span.t1 is not None else clamp_hi
+    return max(0.0, t1 - span.t0)
+
+
 def _leg_stages(children: list, lo: float, hi: float) -> dict[str, float]:
     """Charge [lo, hi] to queue/fetch/compute legs among ``children``."""
     out: dict[str, float] = {}
     covered = 0.0
     for ch in children:
         if ch.name in _LEG_NAMES:
-            d = ch.t1 - ch.t0
+            d = _dur(ch, hi)
             out[ch.name] = out.get(ch.name, 0.0) + d
             covered += d
     residue = (hi - lo) - covered
@@ -70,48 +79,74 @@ def _leg_stages(children: list, lo: float, hi: float) -> dict[str, float]:
     return out
 
 
+def query_path(root, kids_of) -> QueryPath | None:
+    """One query root's critical path.  ``kids_of`` maps span sid ->
+    child span list (any index shaped like ``Tracer.children_index()``).
+
+    Degenerate trees are hardened, never fatal: unclosed children clamp
+    to the root's end, jobless rounds charge to ``other``, and a
+    zero-duration root yields an all-zero (finite) stage vector.
+    Returns None for a root that never closed.
+    """
+    if root.t1 is None:
+        return None
+    root_hi = root.t1
+    stages = dict.fromkeys(STAGES, 0.0)
+    kids = kids_of.get(root.sid, [])
+    # Single-engine traces put the job legs directly under the root.
+    if not any(k.name == "round" for k in kids):
+        for name, d in _leg_stages(kids, root.t0, root_hi).items():
+            stages[name] += d
+        for ch in kids:
+            if ch.name in ("admission", "route", "merge"):
+                d = _dur(ch, root_hi)
+                stages[ch.name] += d
+                stages["other"] = max(0.0, stages["other"] - d)
+    else:
+        for ch in kids:
+            if ch.name in ("admission", "route", "merge"):
+                stages[ch.name] += _dur(ch, root_hi)
+            elif ch.name == "round":
+                ch_hi = ch.t1 if ch.t1 is not None else root_hi
+                jobs = [j for j in kids_of.get(ch.sid, [])
+                        if j.name == "shard_job" and j.t1 is not None]
+                if not jobs:
+                    stages["other"] += max(0.0, ch_hi - ch.t0)
+                    continue
+                # the job whose completion closed the round
+                winner = max(jobs, key=lambda j: j.t1)
+                stages["dispatch"] += max(0.0, winner.t0 - ch.t0)
+                legs = _leg_stages(kids_of.get(winner.sid, []),
+                                   winner.t0, winner.t1)
+                for name, d in legs.items():
+                    stages[name] += d
+                # gather fired at round close; job may end earlier
+                # than the round boundary only by float error
+                stages["other"] += max(0.0, ch_hi - winner.t1)
+    attrs = root.attrs or {}
+    return QueryPath(
+        qid=attrs.get("qid", -1), tenant=attrs.get("tenant"),
+        sojourn=max(0.0, root.t1 - root.t0), stages=stages)
+
+
+def path_shares(path: QueryPath) -> dict[str, float]:
+    """A path's stage vector normalised to fractions of its sojourn
+    (all-zero for a zero-duration query — finite, never NaN)."""
+    if path.sojourn <= 0.0:
+        return dict.fromkeys(STAGES, 0.0)
+    return {k: path.stages.get(k, 0.0) / path.sojourn for k in STAGES}
+
+
 def extract_paths(tracer) -> list[QueryPath]:
     """Per-query critical paths from a tracer's span trees."""
     idx = tracer.children_index()
     paths: list[QueryPath] = []
     for root in idx.get(None, []):
-        if root.name != "query" or root.t1 is None:
+        if root.name != "query":
             continue
-        stages = dict.fromkeys(STAGES, 0.0)
-        kids = idx.get(root.sid, [])
-        # Single-engine traces put the job legs directly under the root.
-        if not any(k.name == "round" for k in kids):
-            for name, d in _leg_stages(kids, root.t0, root.t1).items():
-                stages[name] += d
-            for ch in kids:
-                if ch.name in ("admission", "route", "merge"):
-                    stages[ch.name] += ch.t1 - ch.t0
-                    stages["other"] = max(
-                        0.0, stages["other"] - (ch.t1 - ch.t0))
-        else:
-            for ch in kids:
-                if ch.name in ("admission", "route", "merge"):
-                    stages[ch.name] += ch.t1 - ch.t0
-                elif ch.name == "round":
-                    jobs = [j for j in idx.get(ch.sid, [])
-                            if j.name == "shard_job" and j.t1 is not None]
-                    if not jobs:
-                        stages["other"] += ch.t1 - ch.t0
-                        continue
-                    # the job whose completion closed the round
-                    winner = max(jobs, key=lambda j: j.t1)
-                    stages["dispatch"] += winner.t0 - ch.t0
-                    legs = _leg_stages(idx.get(winner.sid, []),
-                                       winner.t0, winner.t1)
-                    for name, d in legs.items():
-                        stages[name] += d
-                    # gather fired at round close; job may end earlier
-                    # than the round boundary only by float error
-                    stages["other"] += max(0.0, ch.t1 - winner.t1)
-        attrs = root.attrs or {}
-        paths.append(QueryPath(
-            qid=attrs.get("qid", -1), tenant=attrs.get("tenant"),
-            sojourn=root.t1 - root.t0, stages=stages))
+        qp = query_path(root, idx)
+        if qp is not None:
+            paths.append(qp)
     return paths
 
 

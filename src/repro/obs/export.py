@@ -22,6 +22,13 @@ synchronous ``X`` slices would force the viewer to mis-nest them.
 
 Load the output at https://ui.perfetto.dev (or chrome://tracing).
 Timestamps are simulated seconds scaled to microseconds.
+
+The export is **byte-deterministic**: events follow span/instant/flow
+recording order (itself deterministic under the simulator's
+``(time, seq)`` discipline), counter rows and lane metadata are
+explicitly sorted, and the JSON is written with pinned separators —
+two identical runs produce identical trace files, so trace artifacts
+can be diffed byte-for-byte across runs and CI uploads.
 """
 from __future__ import annotations
 
@@ -134,8 +141,10 @@ def chrome_trace(tracer) -> dict:
 
 
 def write_chrome_trace(path, tracer) -> None:
+    # pinned separators + insertion-ordered dicts => byte-identical
+    # files for identical runs (asserted in tests/test_obs.py)
     with open(path, "w") as f:
-        json.dump(chrome_trace(tracer), f)
+        json.dump(chrome_trace(tracer), f, separators=(",", ":"))
 
 
 def flame_summary(tracer, top: int = 20) -> str:

@@ -119,6 +119,7 @@ class Histogram:
 
     def to_dict(self) -> dict:
         return dict(count=self.count,
+                    sum=round(self.total, 9),
                     mean=round(self.mean, 9),
                     min=round(self.min, 9) if self.count else 0.0,
                     max=round(self.max, 9) if self.count else 0.0,
@@ -155,9 +156,17 @@ class MetricsRegistry:
         return h
 
     def snapshot(self, t: float) -> None:
-        """Append one time-series row of every counter and gauge."""
+        """Append one time-series row of every counter and gauge, plus
+        each histogram's running ``count``/``sum`` — with both, the delta
+        between any two ticks reconstructs that window's observation
+        count and mean without re-tracing (windowed means =
+        Δsum / Δcount; the deltas across all ticks telescope to the
+        final histogram totals)."""
         row = {c.name: c.value for c in self._counters.values()}
         row.update({g.name: g.value for g in self._gauges.values()})
+        for h in self._histograms.values():
+            row[f"{h.name}.count"] = float(h.count)
+            row[f"{h.name}.sum"] = h.total
         self.series.append((t, row))
 
     def to_dict(self) -> dict:

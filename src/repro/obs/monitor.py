@@ -171,6 +171,11 @@ class Alert:
     tenant: str | None = None
     cleared_t: float | None = None
     peak_burn: float = 0.0
+    #: root-cause bundle snapshotted at fire time (exemplars, counter
+    #: deltas, stage shares) when an explain collector is attached;
+    #: omitted from the dict when absent so existing alert payloads
+    #: are unchanged.
+    forensics: dict | None = None
 
     @property
     def active(self) -> bool:
@@ -185,6 +190,8 @@ class Alert:
                  peak_burn=round(self.peak_burn, 4))
         if self.tenant is not None:
             d["tenant"] = self.tenant
+        if self.forensics is not None:
+            d["forensics"] = self.forensics
         return d
 
 
@@ -308,6 +315,11 @@ class FleetMonitor:
         self.monitors: dict[str, SLOMonitor] = {}
         self.log = AlertLog()
         self.bus = ActionBus(enabled=cfg.actions)
+        #: optional ``fn(now) -> dict`` snapshotting forensics (tail
+        #: exemplars, counter deltas, stage shares) onto each freshly
+        #: fired alert — installed by the router when ``--explain`` is
+        #: on; a pure read of observer state, so bit-exactness holds.
+        self.forensics_provider = None
 
     def monitor(self, name: str, *, kind: str = "latency",
                 tenant: str | None = None,
@@ -362,6 +374,8 @@ class FleetMonitor:
                     alert = self.log.fire(now, m, rule,
                                           max(burn_long, burn_short))
                     if alert is not None:
+                        if self.forensics_provider is not None:
+                            alert.forensics = self.forensics_provider(now)
                         if tr.enabled:
                             tr.instant("alert_fired", now,
                                        monitor=m.name, rule=rule.name,

@@ -194,7 +194,8 @@ class MultiTenantRouter(FleetRouter):
     def run_tenants(self, *, faults=None, autoscale=None,
                     series_dt: float | None = None,
                     tracer=None, monitor=None,
-                    pricebook=None) -> MultiTenantReport:
+                    pricebook=None, explain=False,
+                    mrc=False) -> MultiTenantReport:
         cfg = self.cfg
         windows = fair_share_windows(
             cfg.concurrency, [t.spec.weight for t in self.tenants])
@@ -220,7 +221,8 @@ class MultiTenantRouter(FleetRouter):
                 ingest_cfg=t.ingest_cfg))
         wall = self._execute(ctxs, faults=faults, autoscale=autoscale,
                              series_dt=series_dt, tracer=tracer,
-                             monitor=monitor, pricebook=pricebook)
+                             monitor=monitor, pricebook=pricebook,
+                             explain=explain, mrc=mrc)
         return self._build_report(ctxs, wall, faults)
 
     # ------------------------------------------------------------ report --
@@ -294,7 +296,8 @@ def run_tenant_fleet(tenants: list[Tenant] | list[TenantSpec],
                      policy_kwargs: dict | None = None,
                      quota_weights: dict[int, float] | None = None,
                      tracer=None, monitor=None,
-                     pricebook=None) -> MultiTenantReport:
+                     pricebook=None, explain=False,
+                     mrc=False) -> MultiTenantReport:
     """One-call multi-tenant evaluation (the tenancy analogue of
     :func:`repro.fleet.run_fleet`).  Accepts either materialised
     :class:`Tenant` s or bare :class:`TenantSpec` s (materialised with
@@ -307,7 +310,8 @@ def run_tenant_fleet(tenants: list[Tenant] | list[TenantSpec],
                                quota_weights=quota_weights)
     return router.run_tenants(faults=faults, autoscale=autoscale,
                               series_dt=series_dt, tracer=tracer,
-                              monitor=monitor, pricebook=pricebook)
+                              monitor=monitor, pricebook=pricebook,
+                              explain=explain, mrc=mrc)
 
 
 def measure_interference(make_tenants: Callable[[], list[Tenant]],
@@ -315,7 +319,8 @@ def measure_interference(make_tenants: Callable[[], list[Tenant]],
                          *, policy_kwargs: dict | None = None,
                          series_dt: float | None = None,
                          tracer=None, monitor=None,
-                         pricebook=None) -> MultiTenantReport:
+                         pricebook=None, explain=False,
+                         mrc=False) -> MultiTenantReport:
     """Run the shared fleet, then each tenant **solo** on an identical
     fleet, and attach the solo p99 sojourns so every slice reports its
     interference ratio (p99 shared / p99 solo).  ``make_tenants`` is a
@@ -328,7 +333,8 @@ def measure_interference(make_tenants: Callable[[], list[Tenant]],
     shared = run_tenant_fleet(make_tenants(), cfg, cache_policy,
                               policy_kwargs=policy_kwargs,
                               series_dt=series_dt, tracer=tracer,
-                              monitor=monitor, pricebook=pricebook)
+                              monitor=monitor, pricebook=pricebook,
+                              explain=explain, mrc=mrc)
     fresh = make_tenants()
     for i, sl in enumerate(shared.tenants):
         solo = run_tenant_fleet([fresh[i]], cfg, cache_policy,

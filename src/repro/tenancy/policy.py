@@ -88,6 +88,17 @@ class TenantCacheBase:
         """Current byte quota for ``tid`` (None: no per-tenant bound)."""
         return None
 
+    def set_observer(self, observer) -> None:
+        """Attach a read-only access-stream observer (the sampled-ghost
+        MRC estimator, :mod:`repro.obs.mrc`) to every underlying SLRU.
+        Observers see the tenant-namespaced key stream exactly as the
+        segments do; they never mutate cache state."""
+        inner = getattr(self, "inner", None)
+        if inner is not None:
+            inner.observer = observer
+        for part in getattr(self, "parts", {}).values():
+            part.observer = observer
+
 
 class SharedTenantCache(TenantCacheBase):
     """One fleet-wide SLRU; tenant keys compete in the same segments."""

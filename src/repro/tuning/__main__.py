@@ -24,6 +24,15 @@ Two modes:
   CalibrationTable instead of the analytic ComputeSpec constants.
 
       python -m repro.tuning --tune-window --scenario poisson --rate 400
+
+* **cache-split tuning** (``--tune-split``): split a shared cache
+  budget across tenants.  The analytic screen prices candidates from
+  Che-approximation curves, or — with ``--mrc-curves`` — from measured
+  miss-ratio curves written by a live ``--mrc``-profiled fleet run
+  (docs/observability.md).
+
+      python -m repro.tuning --tune-split --tenants tenants.json \\
+          --cache-gb 0.004 --mrc-curves mrc.json
 """
 from __future__ import annotations
 
@@ -90,6 +99,27 @@ def build_parser() -> argparse.ArgumentParser:
                    help="sweep the kernel backend's batch-coalescing "
                         "window on a fixed fleet point and map the "
                         "occupancy vs p99 frontier (docs/execution.md)")
+    g = p.add_argument_group("cache-split tuning (--tune-split)")
+    g.add_argument("--tune-split", action="store_true",
+                   help="split the --cache-gb budget across --tenants: "
+                        "analytic screen + refinement on real static-"
+                        "policy fleet runs (docs/tenancy.md)")
+    g.add_argument("--tenants", default=None, metavar="SPEC.JSON",
+                   help="tenant spec file (same schema as python -m "
+                        "repro.fleet --tenants)")
+    g.add_argument("--mrc-curves", default=None, metavar="MRC.JSON",
+                   help="price the split screen from measured miss-"
+                        "ratio curves (an artifact written by a fleet "
+                        "run's --mrc PATH) instead of the analytic "
+                        "Che-approximation profiles")
+    g.add_argument("--split-steps", type=int, default=8,
+                   help="screen granularity: simplex steps per tenant")
+    g.add_argument("--refine-top", type=int, default=3,
+                   help="screen candidates to refine on real runs")
+    g.add_argument("--shards", type=int, default=2,
+                   help="fleet point for the refinement runs")
+    g.add_argument("--replicas", type=int, default=1,
+                   help="fleet point for the refinement runs")
     add_exec_args(p)
     add_scenario_args(p, faults=False)
     add_obs_args(p)
@@ -124,6 +154,17 @@ def main(argv: list[str] | None = None) -> int:
         parser.error("--recall-slo is a serving-run knob (python -m "
                      "repro.fleet); the sizing rerun has no precomputed "
                      "ground truth to judge live recall against")
+    if args.tune_split:
+        if args.fleet or args.tune_window:
+            parser.error("--tune-split is its own mode; drop --fleet/"
+                         "--tune-window")
+        if not args.tenants:
+            parser.error("--tune-split needs --tenants SPEC.JSON")
+        if args.cache_gb <= 0:
+            parser.error("--tune-split splits the --cache-gb budget; "
+                         "give a budget > 0")
+    elif args.tenants or args.mrc_curves:
+        parser.error("--tenants/--mrc-curves belong to --tune-split")
     exec_kw = None
     if args.tune_window:
         if args.batch_window_us:
@@ -136,12 +177,41 @@ def main(argv: list[str] | None = None) -> int:
     else:
         fields = exec_fields_from_args(args, parser)
         if args.backend == "kernel":
-            if not args.fleet:
+            if not args.fleet and not args.tune_split:
                 parser.error("--backend kernel applies to fleet sweeps; "
                              "add --fleet (or --tune-window; the index "
                              "tuner has no serving fleet to price)")
             exec_kw = fields
     from repro.obs import run_manifest
+
+    if args.tune_split:
+        import json as _json
+
+        from repro.fleet import FleetConfig
+        from repro.tenancy import load_tenant_specs
+        from repro.tuning.tenancy import tune_cache_split
+        specs = load_tenant_specs(args.tenants)
+        mrc = None
+        if args.mrc_curves:
+            with open(args.mrc_curves) as f:
+                mrc = _json.load(f)
+        cfg = FleetConfig(
+            n_shards=args.shards, replication=args.replicas,
+            storage=storage, concurrency=args.concurrency,
+            cache_bytes=env.cache_bytes, cache_policy="slru",
+            seed=args.seed, **fields)
+        t0 = time.perf_counter()
+        rec = tune_cache_split(specs, cfg, steps=args.split_steps,
+                               refine_top=args.refine_top, mrc=mrc)
+        out = rec.to_dict()
+        out["meta"] = run_manifest(
+            seed=args.seed,
+            config=dict(mode="cache-split", tenants=args.tenants,
+                        mrc_curves=args.mrc_curves,
+                        cache_bytes=env.cache_bytes),
+            wall_s=time.perf_counter() - t0)
+        emit_json(out, args)
+        return 0
 
     if args.tune_window:
         try:

@@ -179,32 +179,69 @@ def enumerate_splits(n_tenants: int, steps: int = 8) -> list[CacheSplit]:
     return out
 
 
+def _mrc_rows(tenants: list[Tenant], mrc: dict) -> list[dict]:
+    """Match an ``repro.obs.mrc`` artifact's per-tenant curves to the
+    tenant list by name, loudly."""
+    rows = {r.get("name"): r for r in mrc.get("tenants", [])}
+    missing = [t.spec.name for t in tenants if t.spec.name not in rows]
+    if missing:
+        raise ValueError(
+            f"mrc curves missing tenants {missing}; artifact has "
+            f"{sorted(k for k in rows if k)}")
+    return [rows[t.spec.name] for t in tenants]
+
+
 def screen_cache_splits(tenants: list[Tenant], total_cache_bytes: int,
                         splits: list[CacheSplit] | None = None,
-                        steps: int = 8) -> list[SplitPrediction]:
+                        steps: int = 8,
+                        mrc: dict | None = None) -> list[SplitPrediction]:
     """Rank candidate splits by predicted aggregate miss bytes/s
-    (ascending — the screen's best candidate first)."""
+    (ascending — the screen's best candidate first).
+
+    ``mrc`` swaps the analytic model out for **measured** curves: an
+    ``repro.obs.mrc`` artifact (``MRCProfiler.to_dict()`` — the
+    ``--mrc`` output of a monitored fleet run) supplies each tenant's
+    online miss-ratio curve and demand rate, and the screen prices
+    splits by interpolating those curves instead of replaying probe
+    selection through Che's approximation."""
     if total_cache_bytes <= 0:
         raise ValueError("total_cache_bytes must be > 0 to tune a split")
     cands = splits if splits is not None else \
         enumerate_splits(len(tenants), steps=steps)
-    profiles = [object_access_profile(t) for t in tenants]
-    rates = [t.spec.rate_qps if t.spec.scenario not in ("closed", "rw")
-             else 1.0 for t in tenants]
-    bytes_per_query = [
-        sum(v[0] * v[1] for v in prof.values())
-        / max(1, sum(v[1] for v in prof.values()))
-        * (t.params.nprobe if t.spec.index == "cluster"
-           else t.params.search_len)
-        for t, prof in zip(tenants, profiles)]
+    if mrc is not None:
+        from repro.obs.mrc import mrc_miss_ratio
+        rows = _mrc_rows(tenants, mrc)
+        # miss bytes/s = demand bytes/s × miss ratio; fall back to raw
+        # access volume when the artifact carries no wall time (scale
+        # is global, so the ranking is unchanged)
+        demand = [r.get("demand_bytes_per_s")
+                  or r["accesses"] * r.get("mean_obj_bytes", 1.0)
+                  for r in rows]
+
+        def miss_at(i: int, cache_bytes: int) -> float:
+            return mrc_miss_ratio(rows[i]["sizes"],
+                                  rows[i]["miss_ratio"], cache_bytes)
+    else:
+        profiles = [object_access_profile(t) for t in tenants]
+        rates = [t.spec.rate_qps
+                 if t.spec.scenario not in ("closed", "rw") else 1.0
+                 for t in tenants]
+        bytes_per_query = [
+            sum(v[0] * v[1] for v in prof.values())
+            / max(1, sum(v[1] for v in prof.values()))
+            * (t.params.nprobe if t.spec.index == "cluster"
+               else t.params.search_len)
+            for t, prof in zip(tenants, profiles)]
+        demand = [r * b for r, b in zip(rates, bytes_per_query)]
+
+        def miss_at(i: int, cache_bytes: int) -> float:
+            return 1.0 - che_hit_rate(profiles[i], cache_bytes)
     preds = []
     for split in cands:
         miss = tuple(
-            1.0 - che_hit_rate(profiles[i],
-                               int(split.fractions[i] * total_cache_bytes))
+            miss_at(i, int(split.fractions[i] * total_cache_bytes))
             for i in range(len(tenants)))
-        cost = sum(r * m * b for r, m, b
-                   in zip(rates, miss, bytes_per_query))
+        cost = sum(d * m for d, m in zip(demand, miss))
         preds.append(SplitPrediction(split, miss, cost))
     preds.sort(key=lambda p: (p.miss_bytes_per_s,
                               p.split.fractions))
@@ -253,10 +290,16 @@ class CacheSplitRecommendation:
 
 def tune_cache_split(specs: list[TenantSpec], cfg: FleetConfig, *,
                      steps: int = 8, refine_top: int = 3,
+                     mrc: dict | None = None,
                      ) -> CacheSplitRecommendation:
     """Screen the split simplex analytically, then refine the top
     candidates on real ``static``-policy fleet runs; recommend the
-    split with the best measured aggregate goodput."""
+    split with the best measured aggregate goodput.
+
+    ``mrc`` (an ``repro.obs.mrc`` artifact from a live profiled run)
+    replaces the analytic screen's access profiles with measured
+    miss-ratio curves — the online path from a running fleet straight
+    into the tuner."""
     if len(specs) < 2:
         raise ValueError("cache-split tuning needs >= 2 tenants")
     if cfg.cache_bytes <= 0:
@@ -264,7 +307,8 @@ def tune_cache_split(specs: list[TenantSpec], cfg: FleetConfig, *,
                          "cache split")
     tenants = [materialize_tenant(s, base_seed=cfg.seed, tid=i)
                for i, s in enumerate(specs)]
-    preds = screen_cache_splits(tenants, cfg.cache_bytes, steps=steps)
+    preds = screen_cache_splits(tenants, cfg.cache_bytes, steps=steps,
+                                mrc=mrc)
     outcomes = []
     for pred in preds[:max(1, refine_top)]:
         quota = {i: f for i, f in enumerate(pred.split.fractions)}

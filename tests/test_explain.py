@@ -1,0 +1,563 @@
+"""repro.obs.explain + repro.obs.mrc: tail exemplars, windowed
+attribution, alert forensics and online miss-ratio curves observe
+without perturbing (golden bit-exactness), the compaction-storm tail is
+attributed to a queue/storage stage with the concurrent compaction
+named, and the SHARDS estimator tracks the exact Che-approximation
+curve within its documented tolerance.  Plus the PR 9 satellites:
+histogram running sums that telescope across snapshot ticks,
+degenerate-span-tree hardening, the byte-identical Perfetto double
+export, and the --tune-split CLI path end-to-end."""
+import dataclasses
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.cluster_index import ClusterIndex
+from repro.core.types import ClusterIndexParams, SearchParams
+from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
+from repro.fleet import FleetConfig, run_fleet
+from repro.obs import (MetricsRegistry, MonitorConfig, Tracer,
+                       chrome_trace, render_explain, write_chrome_trace)
+from repro.obs.critical_path import (STAGES, extract_paths, path_shares,
+                                     query_path)
+from repro.obs.mrc import (MRCConfig, MRCProfiler, TenantMRC,
+                           default_size_grid, mrc_miss_ratio)
+from repro.obs.trace import Span
+from repro.sim.arrivals import Poisson, Scenario
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
+                           "golden_fleet_prerefactor.json")
+
+HEDGED_CFG = FleetConfig(n_shards=4, replication=2, concurrency=16,
+                         shard_concurrency=4, queue_depth=16,
+                         hedge=True, hedge_percentile=75.0, seed=5)
+
+#: the cfg most non-golden tests share: hedged + a real cache so the
+#: MRC estimator sees an access stream
+CACHED_CFG = dataclasses.replace(HEDGED_CFG, cache_bytes=64 * 1024,
+                                 cache_policy="slru")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = scaled(DEEP_ANALOG, 1200, 32)
+    data, queries = make_dataset(spec)
+    ci = ClusterIndex.build(data, ClusterIndexParams(kmeans_iters=4, seed=0))
+    return data, queries, ci
+
+
+@pytest.fixture(scope="module")
+def explained(setup):
+    """One plain and one fully-observed (traced+explained+MRC) run of
+    the same cached hedged fleet, shared across the contract tests."""
+    _, queries, ci = setup
+    p = SearchParams(k=10, nprobe=16)
+    plain = run_fleet(ci, queries, p, CACHED_CFG)
+    tracer = Tracer()
+    obs = run_fleet(ci, queries, p, CACHED_CFG, tracer=tracer,
+                    explain=True, mrc=True)
+    return plain, obs, tracer
+
+
+def _ids_sha256(report) -> str:
+    h = hashlib.sha256()
+    for r in sorted(report.records, key=lambda r: r.qid):
+        h.update(np.asarray(r.qid).tobytes())
+        h.update(np.asarray(r.ids, dtype=np.int64).tobytes())
+    return h.hexdigest()
+
+
+# ----------------------------------------------------- bit-exactness --
+
+def test_explained_run_reproduces_golden(setup):
+    """Acceptance: explain + MRC are pure observers — an explained,
+    MRC-profiled run still reproduces the pre-refactor goldens bit for
+    bit (the explain reservoir uses its own seeded PRNG and the SHARDS
+    hash touches no RNG at all)."""
+    _, queries, ci = setup
+    golden = json.load(open(GOLDEN_PATH))
+    p = SearchParams(k=golden["params"]["k"],
+                     nprobe=golden["params"]["nprobe"])
+    configs = dict(
+        one_shard=FleetConfig(n_shards=1, replication=1, concurrency=8,
+                              shard_concurrency=8, queue_depth=64, seed=0),
+        four_shard=HEDGED_CFG)
+    for name, cfg in configs.items():
+        rep = run_fleet(ci, queries, p, cfg, tracer=Tracer(),
+                        explain=True, mrc=True)
+        g = golden[name]
+        assert rep.wall_time_s == pytest.approx(g["wall_time_s"],
+                                                rel=1e-9, abs=1e-12)
+        assert rep.qps == pytest.approx(g["qps"], rel=1e-9)
+        assert _ids_sha256(rep) == g["ids_sha256"]
+
+
+def test_explained_summary_equals_plain_minus_obs_blocks(explained):
+    """An explained+profiled report is the plain report plus exactly
+    the ``explain`` and ``mrc`` keys — nothing else moves."""
+    plain, obs, _ = explained
+    s_plain, s_obs = plain.summary(), obs.summary()
+    assert "explain" not in s_plain and "mrc" not in s_plain
+    exp = s_obs.pop("explain")
+    mrc = s_obs.pop("mrc")
+    assert s_obs == s_plain
+    assert exp["n_queries"] == s_plain["n_queries"]
+    assert exp["clusters"] and exp["headline"]
+    assert mrc["tenants"] and mrc["tenants"][0]["name"] == "fleet"
+
+
+def test_explain_report_deterministic(setup, explained):
+    """Same seed, same run → byte-identical explain and MRC blocks
+    (reservoirs and sampling are deterministic by construction)."""
+    _, queries, ci = setup
+    _, obs, _ = explained
+    rep2 = run_fleet(ci, queries, SearchParams(k=10, nprobe=16),
+                     CACHED_CFG, tracer=Tracer(), explain=True, mrc=True)
+    assert json.dumps(obs.explain, sort_keys=True) == \
+        json.dumps(rep2.explain, sort_keys=True)
+    assert json.dumps(obs.mrc, sort_keys=True) == \
+        json.dumps(rep2.mrc, sort_keys=True)
+
+
+def test_explain_requires_tracer(setup):
+    _, queries, ci = setup
+    with pytest.raises(ValueError, match="tracer"):
+        run_fleet(ci, queries, SearchParams(k=10, nprobe=16),
+                  CACHED_CFG, explain=True)
+
+
+# ------------------------------------------------ windowed attribution --
+
+def test_windowed_attrib_published_as_counter_tracks(explained):
+    """Stage shares land in the metrics time series (and therefore the
+    Perfetto counter tracks): every snapshot row carries
+    ``attrib.<stage>.share`` gauges in [0, 1] plus the window's query
+    count, and windows with queries have shares that sum to ~1."""
+    _, obs, tracer = explained
+    rows = [row for _, row in tracer.metrics.series]
+    assert rows
+    for row in rows:
+        assert "attrib.window.queries" in row
+        for name in STAGES:
+            share = row[f"attrib.{name}.share"]
+            assert 0.0 <= share <= 1.0 + 1e-9
+    busy = [row for row in rows if row["attrib.window.queries"] > 0]
+    assert busy, "no snapshot window saw a completed query"
+    for row in busy:
+        tot = sum(row[f"attrib.{name}.share"] for name in STAGES)
+        assert tot == pytest.approx(1.0, abs=1e-6)
+    # the export renders them as counter tracks
+    doc = chrome_trace(tracer)
+    counter_names = {ev["name"] for ev in doc["traceEvents"]
+                     if ev["ph"] == "C"}
+    assert any(n.startswith("attrib.") and n.endswith(".share")
+               for n in counter_names)
+    # MRC gauges ride the same ticker
+    assert any(n.startswith("cache.mrc.") for n in counter_names)
+
+
+# --------------------------------------------------------- forensics --
+
+def test_alert_forensics_attached_to_fired_alerts(setup):
+    """When a burn-rate rule fires with an explain collector attached,
+    the alert entry carries its root-cause bundle (window shares, worst
+    exemplars, counter deltas) — and alerts without explain do not."""
+    _, queries, ci = setup
+    p = SearchParams(k=10, nprobe=16)
+    cfg = FleetConfig(n_shards=2, replication=1, concurrency=8, seed=3)
+    mk = lambda: Poisson(rate_qps=3000.0, n_total=8 * len(queries))
+    rep = run_fleet(ci, queries, p, cfg, arrivals=mk(), slo_s=0.005,
+                    tracer=Tracer(), monitor=MonitorConfig(),
+                    explain=True)
+    fired = rep.alerts["fired"]
+    assert fired, "overload run fired no alerts"
+    with_forensics = [a for a in fired if "forensics" in a]
+    assert with_forensics
+    f = with_forensics[0]["forensics"]
+    assert set(f) == {"at", "window", "exemplars", "counter_deltas"}
+    assert f["at"] == pytest.approx(with_forensics[0]["fired_t"],
+                                    abs=1e-6)
+    for ex in f["exemplars"]:
+        assert ex["stage"] in STAGES and ex["sojourn_s"] > 0
+    # without explain, alert payloads are unchanged (no forensics key)
+    rep2 = run_fleet(ci, queries, p, cfg, arrivals=mk(), slo_s=0.005,
+                     monitor=MonitorConfig())
+    assert all("forensics" not in a for a in rep2.alerts["fired"])
+
+
+# ------------------------------------------------- compaction storm --
+
+def test_compaction_storm_tail_names_the_compaction(setup):
+    """Acceptance: on a write-storm rw scenario the p99.9 cluster is
+    attributed to a queue/storage stage and the report names the
+    concurrent compaction event."""
+    from repro.ingest import IngestConfig, make_mutable, synth_updates
+    data, queries, _ = setup
+    ci = ClusterIndex.build(data, ClusterIndexParams(kmeans_iters=4,
+                                                     seed=0))
+    p = SearchParams(k=10, nprobe=32)
+    # wide admission window so the wait surfaces at the shards, narrow
+    # per-shard concurrency so compaction contention shows up as queue
+    cfg = FleetConfig(n_shards=2, replication=1, concurrency=256,
+                      shard_concurrency=2, queue_depth=128, seed=2)
+    stream = synth_updates(data, rate_qps=3000.0, n_updates=600,
+                           delete_frac=0.2, seed=5)
+    arr = Scenario(kind="rw", n_arrivals=4 * len(queries))
+    rep = run_fleet(make_mutable(ci), queries, p, cfg,
+                    arrivals=arr.make_arrivals(len(queries),
+                                               cfg.concurrency),
+                    updates=stream,
+                    ingest=IngestConfig(delta_cap_bytes=16 * 1024,
+                                        recluster=False),
+                    tracer=Tracer(), explain=True)
+    exp = rep.explain
+    top = exp["clusters"][0]
+    assert top["stage"] in ("queue", "storage_fetch")
+    assert any(ev.startswith("compaction:") for ev in top["events"])
+    assert "compaction:" in exp["headline"]
+    assert top["shard"] >= 0
+    # the renderer carries the same diagnosis
+    text = render_explain(exp)
+    assert "compaction:" in text and top["stage"] in text
+
+
+# -------------------------------------- degenerate trees (satellite) --
+
+def _mk(sid, name, t0, t1, parent=None, attrs=None):
+    sp = Span(sid, name, t0, parent=parent, attrs=attrs)
+    sp.t1 = t1
+    return sp
+
+
+def test_query_path_degenerate_trees_stay_finite():
+    """Zero-duration queries, jobless rounds, unclosed children and
+    aborted roots never produce NaN/KeyError — shares stay finite."""
+    # unclosed root (query aborted before finishing): skipped, not fatal
+    root = Span(0, "query", 1.0, attrs=dict(qid=7))
+    assert query_path(root, {0: []}) is None
+
+    # zero-duration root: all-zero finite shares
+    z = _mk(0, "query", 2.0, 2.0, attrs=dict(qid=1))
+    qp = query_path(z, {0: [_mk(1, "round", 2.0, 2.0, parent=0)]})
+    assert qp is not None and qp.sojourn == 0.0
+    shares = path_shares(qp)
+    assert all(v == 0.0 for v in shares.values())
+    assert all(np.isfinite(v) for v in shares.values())
+
+    # jobless round (every shard job lost to a fault): charged to other
+    r = _mk(0, "query", 0.0, 1.0, attrs=dict(qid=2))
+    kids = {0: [_mk(1, "round", 0.0, 1.0, parent=0)], 1: []}
+    qp = query_path(r, kids)
+    assert qp.stages["other"] == pytest.approx(1.0)
+    assert qp.accounted == pytest.approx(qp.sojourn)
+
+    # unclosed legs clamp to the job end, unclosed job drops to the
+    # jobless path — still finite
+    r = _mk(0, "query", 0.0, 1.0, attrs=dict(qid=3))
+    job = _mk(2, "shard_job", 0.1, 0.9, parent=1,
+              attrs=dict(shard=0))
+    leg = Span(3, "storage_fetch", 0.2, parent=2)        # never closed
+    kids = {0: [_mk(1, "round", 0.0, 1.0, parent=0)],
+            1: [job], 2: [leg]}
+    kids[0][0].t1 = 1.0
+    qp = query_path(r, kids)
+    assert qp is not None
+    assert all(np.isfinite(v) for v in qp.stages.values())
+    assert all(v >= 0.0 for v in qp.stages.values())
+    assert qp.stages["storage_fetch"] == pytest.approx(0.7)  # clamped
+
+    # aborted mid-round: the round's only job never closed
+    r = _mk(0, "query", 0.0, 0.5, attrs=dict(qid=4))
+    open_job = Span(2, "shard_job", 0.1, parent=1, attrs=dict(shard=1))
+    kids = {0: [_mk(1, "round", 0.0, 0.5, parent=0)], 1: [open_job]}
+    qp = query_path(r, kids)
+    assert qp.stages["other"] == pytest.approx(0.5)
+    assert sum(path_shares(qp).values()) == pytest.approx(1.0)
+
+
+def test_extract_paths_skips_malformed_roots():
+    tr = Tracer()
+    tr.spans.append(_mk(0, "query", 0.0, 1.0, attrs=dict(qid=0)))
+    tr.spans.append(Span(1, "query", 0.5, attrs=dict(qid=1)))  # unclosed
+    tr.spans.append(_mk(2, "compaction", 0.0, 2.0))            # not a query
+    paths = extract_paths(tr)
+    assert [p.qid for p in paths] == [0]
+    assert paths[0].accounted == pytest.approx(paths[0].sojourn)
+
+
+# ------------------------------------- histogram sums (satellite) --
+
+def test_histogram_sum_and_snapshot_deltas_telescope():
+    """Snapshot rows carry each histogram's running count/sum, so the
+    delta between any two ticks reconstructs that window's mean without
+    re-tracing, and the deltas telescope to the final totals."""
+    m = MetricsRegistry()
+    h = m.histogram("lat_s")
+    windows = [(0.001, 0.002), (0.004,), (0.1, 0.2, 0.3)]
+    for i, vals in enumerate(windows):
+        for v in vals:
+            h.observe(v)
+        m.snapshot(float(i))
+    d = h.to_dict()
+    flat = [v for vals in windows for v in vals]
+    assert d["count"] == len(flat)
+    assert d["sum"] == pytest.approx(sum(flat))
+    assert d["mean"] == pytest.approx(sum(flat) / len(flat))
+    rows = [row for _, row in m.series]
+    prev_c = prev_s = 0.0
+    for vals, row in zip(windows, rows):
+        dc = row["lat_s.count"] - prev_c
+        ds = row["lat_s.sum"] - prev_s
+        assert dc == len(vals)
+        assert ds == pytest.approx(sum(vals))
+        assert ds / dc == pytest.approx(np.mean(vals))   # windowed mean
+        prev_c, prev_s = row["lat_s.count"], row["lat_s.sum"]
+    # telescoped: last row equals the final histogram totals
+    assert prev_c == d["count"]
+    assert prev_s == pytest.approx(d["sum"])
+
+
+# ------------------------------- Perfetto determinism (satellite) --
+
+def test_perfetto_double_export_byte_identical(setup, tmp_path):
+    """Two identical runs exported to disk produce byte-identical
+    trace files (sorted counter tracks and lane metadata, pinned JSON
+    separators)."""
+    _, queries, ci = setup
+    p = SearchParams(k=10, nprobe=16)
+
+    def once(path):
+        tr = Tracer()
+        run_fleet(ci, queries, p, CACHED_CFG, tracer=tr,
+                  explain=True, mrc=True)
+        write_chrome_trace(path, tr)
+        return tr
+
+    tr = once(tmp_path / "a.json")
+    once(tmp_path / "b.json")
+    a = (tmp_path / "a.json").read_bytes()
+    assert a == (tmp_path / "b.json").read_bytes()
+    # re-exporting the same tracer is also stable
+    write_chrome_trace(tmp_path / "a2.json", tr)
+    assert a == (tmp_path / "a2.json").read_bytes()
+
+
+# ----------------------------------------------------- SHARDS MRC --
+
+def _zipf_stream(n_keys=200, n_accesses=20000, a=1.1, seed=0):
+    rng = np.random.default_rng(seed)
+    sizes = (rng.integers(1, 9, n_keys) * 64).astype(int)
+    w = 1.0 / np.arange(1, n_keys + 1) ** a
+    w /= w.sum()
+    stream = rng.choice(n_keys, size=n_accesses, p=w)
+    return sizes, stream
+
+
+def test_shards_mrc_tracks_che_within_documented_tolerance():
+    """Acceptance: on a synthetic zipf profile the SHARDS estimate
+    stays within the tolerance documented in repro/obs/mrc.py —
+    0.05 mean / 0.10 max abs miss-ratio error at sample_rate=1.0,
+    0.08 / 0.15 at 0.25 — against the exact Che-approximation curve."""
+    from repro.tuning.tenancy import che_hit_rate
+    sizes, stream = _zipf_stream()
+    profile = {("k", int(i)): [int(sizes[i]), int((stream == i).sum())]
+               for i in np.unique(stream)}
+    total = int(sizes.sum())
+    grid = [total // 32, total // 16, total // 8, total // 4,
+            total // 2, total]
+    for rate, (tol_mean, tol_max) in ((1.0, (0.05, 0.10)),
+                                      (0.25, (0.08, 0.15))):
+        est = TenantMRC(rate)
+        for i in stream:
+            est.access(("k", int(i)), int(sizes[i]))
+        errs = [abs(est.miss_ratio(c) - (1.0 - che_hit_rate(profile, c)))
+                for c in grid]
+        assert np.mean(errs) <= tol_mean, (rate, errs)
+        assert np.max(errs) <= tol_max, (rate, errs)
+        # curves are monotone non-increasing in cache size
+        curve = est.curve(grid)
+        assert all(a >= b - 1e-9 for a, b in zip(curve, curve[1:]))
+
+
+def test_tenant_mrc_deterministic_and_bounded():
+    sizes, stream = _zipf_stream(n_keys=100, n_accesses=5000)
+
+    def run():
+        est = TenantMRC(0.5)
+        for i in stream:
+            est.access(("k", int(i)), int(sizes[i]))
+        return est
+    a, b = run(), run()
+    grid = default_size_grid(4096)
+    assert a.to_dict(grid) == b.to_dict(grid)
+    # ghost memory is bounded by the sampled key universe, not the
+    # stream length
+    assert len(a._stack) <= 100
+    assert a.sampled < a.accesses == len(stream)
+
+
+def test_mrc_profiler_observer_and_gauges():
+    prof = MRCProfiler(MRCConfig(sample_rate=1.0), ref_bytes=512,
+                       tenant_names={0: "hot", 1: "cold"})
+    for _ in range(3):
+        for tid in (0, 1):
+            for k in range(4):
+                prof.record_get((tid, "list", k), hit=False)
+                prof.record_put((tid, "list", k), nbytes=128)
+    assert sorted(prof._tenants) == [0, 1]
+    reg = MetricsRegistry()
+    prof.publish(reg)
+    g = reg.to_dict()["gauges"]
+    for name in ("hot", "cold"):
+        assert f"cache.mrc.{name}.mr" in g
+        assert f"cache.mrc.{name}.samples" in g
+        assert 0.0 <= g[f"cache.mrc.{name}.mr"] <= 1.0
+    d = prof.to_dict(wall_s=2.0)
+    assert [t["name"] for t in d["tenants"]] == ["hot", "cold"]
+    assert all(t["demand_bytes_per_s"] > 0 for t in d["tenants"])
+
+
+def test_mrc_profiler_installs_on_cache_shapes():
+    from repro.cache.slru import make_cache
+    from repro.tenancy.policy import make_tenant_cache
+    prof = MRCProfiler(MRCConfig(sample_rate=1.0), ref_bytes=1024)
+    bare = make_cache("slru", 4096, ())
+    prof.install(bare)
+    bare.put((0, "list", 1), 100)
+    bare.get((0, "list", 1))
+    assert prof._tenants[0].accesses == 1
+    shared = make_tenant_cache("shared", 4096, {0: 1.0, 1: 1.0})
+    prof.install(shared)
+    static = make_tenant_cache("static", 4096, {0: 0.5, 1: 0.5})
+    prof.install(static)
+    for part in static.parts.values():
+        assert part.observer is prof
+    prof.install(None)                      # silently skipped
+
+
+def test_mrc_miss_ratio_interpolation_and_clamping():
+    sizes = [1024, 4096, 16384]
+    curve = [0.9, 0.5, 0.1]
+    assert mrc_miss_ratio(sizes, curve, 10) == 0.9        # clamp low
+    assert mrc_miss_ratio(sizes, curve, 10 ** 9) == 0.1   # clamp high
+    mid = mrc_miss_ratio(sizes, curve, 2048)
+    assert 0.5 < mid < 0.9
+    assert mrc_miss_ratio(sizes, curve, 2048) == \
+        pytest.approx(0.7)                 # log midpoint of 1024..4096
+    with pytest.raises(ValueError):
+        mrc_miss_ratio([], [], 100)
+
+
+# ------------------------------------------------ tuner integration --
+
+def _mrc_artifact(names, sizes, curves):
+    return dict(sample_rate=1.0, ref_bytes=sizes[len(sizes) // 2],
+                sizes=list(sizes),
+                tenants=[dict(tid=i, name=n, accesses=1000,
+                              sampled=1000, cold=10,
+                              mean_obj_bytes=256.0,
+                              sizes=list(sizes), miss_ratio=list(c),
+                              demand_bytes_per_s=d)
+                         for i, (n, c, d) in enumerate(
+                             zip(names, curves, (4e6, 1e6)))])
+
+
+def test_screen_cache_splits_accepts_mrc_curves():
+    from repro.tenancy.fleet import materialize_tenant
+    from repro.tenancy.spec import TenantSpec
+    from repro.tuning.tenancy import screen_cache_splits
+    specs = [TenantSpec(name="hot", n=500, dim=32, n_queries=8,
+                        nprobe=8),
+             TenantSpec(name="cold", n=500, dim=32, n_queries=8,
+                        nprobe=8)]
+    tenants = [materialize_tenant(s, base_seed=0, tid=i)
+               for i, s in enumerate(specs)]
+    sizes = [16 * 1024, 64 * 1024, 256 * 1024]
+    # hot tenant's curve knees late (wants bytes), cold is flat
+    art = _mrc_artifact(["hot", "cold"], sizes,
+                        [[0.9, 0.6, 0.1], [0.3, 0.28, 0.27]])
+    preds = screen_cache_splits(tenants, 256 * 1024, steps=4, mrc=art)
+    assert preds[0].miss_bytes_per_s <= preds[-1].miss_bytes_per_s
+    # the high-demand, kneed tenant gets the larger share
+    assert preds[0].split.fractions[0] > preds[0].split.fractions[1]
+    # unknown tenant names fail loudly
+    bad = _mrc_artifact(["hot", "WRONG"], sizes,
+                        [[0.9, 0.6, 0.1], [0.3, 0.28, 0.27]])
+    with pytest.raises(ValueError, match="cold"):
+        screen_cache_splits(tenants, 256 * 1024, steps=4, mrc=bad)
+
+
+def test_live_mrc_feeds_tune_cache_split(setup):
+    """End-to-end: profile a multi-tenant run online, hand the mrc
+    block straight to the tuner."""
+    from repro.tenancy.fleet import materialize_tenant, run_tenant_fleet
+    from repro.tenancy.spec import TenantSpec
+    from repro.tuning.tenancy import tune_cache_split
+    cfg = FleetConfig(n_shards=2, replication=1, concurrency=8,
+                      cache_bytes=96 * 1024, cache_policy="slru", seed=0)
+    specs = [TenantSpec(name="hot", n=500, dim=32, n_queries=24,
+                        nprobe=8),
+             TenantSpec(name="cold", n=900, dim=32, n_queries=16,
+                        nprobe=32)]
+    tenants = [materialize_tenant(s, base_seed=0, tid=i)
+               for i, s in enumerate(specs)]
+    rep = run_tenant_fleet(tenants, cfg, "shared", mrc=True)
+    mrc = rep.fleet.mrc
+    assert {t["name"] for t in mrc["tenants"]} == {"hot", "cold"}
+    rec = tune_cache_split(specs, cfg, steps=4, refine_top=1, mrc=mrc)
+    assert abs(sum(rec.split.fractions) - 1.0) < 1e-9
+    assert rec.outcomes
+
+
+# ---------------------------------------------------------------- CLI --
+
+def test_fleet_cli_explain_and_mrc_artifacts(tmp_path, capsys):
+    from repro.fleet.__main__ import main
+    epath, mpath = tmp_path / "explain.json", tmp_path / "mrc.json"
+    rc = main(["--shards", "2", "--n", "600", "--queries", "16",
+               "--cache-mb", "1", "--explain", str(epath),
+               "--mrc", str(mpath), "--compact"])
+    assert rc == 0
+    captured = capsys.readouterr()
+    out = json.loads(captured.out)
+    assert "explain" in out["report"] and "mrc" in out["report"]
+    assert "tail explanation" in captured.err
+    exp = json.loads(epath.read_text())
+    assert exp == out["report"]["explain"]
+    mrc = json.loads(mpath.read_text())
+    assert mrc == out["report"]["mrc"]
+    assert out["report"]["explain"]["headline"]
+
+
+def test_fleet_cli_without_flags_has_no_obs_blocks(capsys):
+    from repro.fleet.__main__ import main
+    rc = main(["--shards", "2", "--n", "600", "--queries", "16",
+               "--cache-mb", "1", "--compact"])
+    assert rc == 0
+    out = json.loads(capsys.readouterr().out)
+    assert "explain" not in out["report"] and "mrc" not in out["report"]
+
+
+def test_tuning_cli_tune_split_with_mrc_curves(tmp_path, capsys):
+    from repro.tuning.__main__ import main
+    tenants = tmp_path / "tenants.json"
+    tenants.write_text(json.dumps(dict(tenants=[
+        dict(name="hot", n=500, dim=32, n_queries=8, nprobe=8),
+        dict(name="cold", n=500, dim=32, n_queries=8, nprobe=8)])))
+    sizes = [16 * 1024, 64 * 1024, 256 * 1024]
+    art = tmp_path / "mrc.json"
+    art.write_text(json.dumps(_mrc_artifact(
+        ["hot", "cold"], sizes, [[0.9, 0.6, 0.1], [0.3, 0.28, 0.27]])))
+    rc = main(["--tune-split", "--tenants", str(tenants),
+               "--cache-gb", str(256 * 1024 / 2 ** 30),
+               "--concurrency", "8", "--split-steps", "4",
+               "--refine-top", "1", "--mrc-curves", str(art),
+               "--compact"])
+    assert rc == 0
+    out = json.loads(capsys.readouterr().out)
+    assert abs(sum(out["recommendation"]) - 1.0) < 1e-9
+    assert out["screened"] and out["refined"]
+    assert "meta" in out
