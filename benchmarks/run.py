@@ -32,6 +32,7 @@ MODULES = [
     "benchmarks.fleet_bench",
     "benchmarks.ingest_bench",
     "benchmarks.tenancy_bench",
+    "benchmarks.tier_bench",
 ]
 
 

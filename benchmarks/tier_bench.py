@@ -1,0 +1,246 @@
+"""Tiered storage bench: DRAM -> local NVMe -> object store.
+
+Four measurements (written to ``BENCH_tier.json`` at the repo root and
+emitted as CSV rows):
+
+1. **Policy sweep** — the same DRAM-starved fleet flat, with a
+   second-hit NVMe tier, and with admit-always.  Hard checks: result
+   ids are bit-identical across all three (the tier moves bytes, never
+   answers), and the best tiered p99 beats the flat p99 — the tier's
+   reason to exist.
+2. **nvme=0 parity** — ``nvme_bytes=0`` must construct no tier and
+   reproduce the flat fleet report bit for bit (same RNG stream names,
+   same JSON).
+3. **Write-back ingest** — live compaction on a write-back tier:
+   rewritten lists land on the device first (admits > 0), every async
+   flush reaches the object store, nothing is dropped.
+4. **Dollars** — the tiered run priced with the default book: the NVMe
+   reservation shows up as its own component, and the tier's
+   egress/GET savings vs flat are recorded.
+
+    PYTHONPATH=src python benchmarks/tier_bench.py
+
+Exit status is non-zero if a hard check fails.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from common import QUICK, emit
+
+from repro.core.cluster_index import ClusterIndex
+from repro.core.flat import exact_topk
+from repro.core.types import ClusterIndexParams, SearchParams
+from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
+from repro.fleet import FleetConfig, run_fleet
+from repro.ingest import IngestConfig, make_mutable, synth_updates
+from repro.obs import PRICEBOOKS, run_manifest
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_tier.json")
+
+_failures: list[str] = []
+
+#: DRAM-starved operating point: the cache holds a sliver of the index,
+#: the NVMe tier holds effectively all of it.
+CACHE_BYTES = 64 * 1024
+NVME_BYTES = 16 << 20
+
+
+def _check(name: str, ok: bool, detail: str) -> None:
+    print(f"# [{name}] {'PASS' if ok else 'FAIL'}: {detail}",
+          file=sys.stderr)
+    if not ok:
+        _failures.append(name)
+
+
+def _setup():
+    n, nq = (800, 24) if QUICK else (1500, 48)
+    data, queries = make_dataset(scaled(DEEP_ANALOG, n, nq))
+    gt, _ = exact_topk(data, queries, 10)
+    index = ClusterIndex.build(data, ClusterIndexParams(kmeans_iters=4,
+                                                        seed=0))
+    return data, index, queries, gt
+
+
+def _cfg(**kw) -> FleetConfig:
+    base = dict(n_shards=2, replication=1, concurrency=24,
+                shard_concurrency=4, queue_depth=32,
+                cache_bytes=CACHE_BYTES, cache_policy="slru", seed=4)
+    base.update(kw)
+    return FleetConfig(**base)
+
+
+def _nvme_totals(rep) -> dict:
+    tot: dict = dict(hits=0, misses=0, nvme_bytes=0, promotions=0,
+                     evictions=0)
+    for s in rep.shard_stats:
+        nv = s.nvme
+        if nv:
+            for k in tot:
+                tot[k] += nv[k]
+    return tot
+
+
+def bench_policies(index, queries, gt) -> list[dict]:
+    """Flat vs second-hit vs admit-always at the same DRAM budget."""
+    params = SearchParams(k=10, nprobe=64)
+    variants = (("flat", dict()),
+                ("second-hit", dict(nvme_bytes=NVME_BYTES,
+                                    tier_policy="second-hit")),
+                ("admit-always", dict(nvme_bytes=NVME_BYTES,
+                                      tier_policy="admit-always")))
+    rows = []
+    ids_by_variant = {}
+    for label, kw in variants:
+        rep = run_fleet(index, queries, params, _cfg(**kw))
+        ids_by_variant[label] = {r.qid: r.ids for r in rep.records}
+        nv = _nvme_totals(rep)
+        dev = nv["hits"] + nv["misses"]
+        rows.append(dict(
+            policy=label, qps=round(rep.qps, 2),
+            p50_s=round(rep.latency_percentile(50), 6),
+            p99_s=round(rep.latency_percentile(99), 6),
+            recall=round(rep.recall_against(gt), 4),
+            dram_hit_rate=round(rep.hit_rate, 4),
+            nvme_hit_frac=round(nv["hits"] / dev, 4) if dev else 0.0,
+            nvme_promotions=nv["promotions"],
+            remote_bytes=int(rep.storage_bytes)))
+        emit(f"tier/policy-{label}", 1e6 / max(rep.qps, 1e-9),
+             qps=rep.qps, p99_ms=rep.latency_percentile(99) * 1e3,
+             dram_hit=rep.hit_rate, nvme_hit_frac=rows[-1]["nvme_hit_frac"])
+    flat = rows[0]
+    base_ids = ids_by_variant["flat"]
+    ids_eq = all(
+        np.array_equal(ids, ids_by_variant[label][qid])
+        for label in ("second-hit", "admit-always")
+        for qid, ids in base_ids.items())
+    _check("tier-results-exact", ids_eq,
+           "tiered result ids bit-identical to flat for every query "
+           "(the tier moves bytes, never answers)")
+    best = min(rows[1:], key=lambda r: r["p99_s"])
+    _check("tier-beats-flat-p99", best["p99_s"] < flat["p99_s"],
+           f"p99 flat={flat['p99_s'] * 1e3:.1f}ms vs best tiered "
+           f"({best['policy']})={best['p99_s'] * 1e3:.1f}ms (want lower)")
+    served = all(r["nvme_hit_frac"] > 0 and r["nvme_promotions"] > 0
+                 for r in rows[1:])
+    _check("tier-serves-traffic", served,
+           "both tier policies promoted lists and served device hits")
+    less_egress = all(r["remote_bytes"] < flat["remote_bytes"]
+                      for r in rows[1:])
+    _check("tier-cuts-egress", less_egress,
+           f"remote bytes flat={flat['remote_bytes']} vs tiered="
+           f"{[r['remote_bytes'] for r in rows[1:]]} (want lower)")
+    return rows
+
+
+def bench_nvme_zero_parity(index, queries, gt) -> dict:
+    """nvme_bytes=0 is the flat data path, bit for bit."""
+    params = SearchParams(k=10, nprobe=64)
+    flat = run_fleet(index, queries, params, _cfg())
+    zero = run_fleet(index, queries, params, _cfg(nvme_bytes=0))
+    bit_exact = flat.to_json() == zero.to_json()
+    _check("tier-nvme0-parity", bit_exact,
+           "nvme_bytes=0 fleet report bit-identical to the flat config")
+    emit("tier/nvme0-parity", 1e6 / max(zero.qps, 1e-9),
+         bit_exact=int(bit_exact))
+    return dict(bit_exact=bit_exact, qps=round(zero.qps, 2))
+
+
+def bench_writeback(data, index, queries, gt) -> list[dict]:
+    """Live compaction with write-through vs write-back placement."""
+    params = SearchParams(k=10, nprobe=32)
+    rows = []
+    for label, wb in (("write-through", False), ("write-back", True)):
+        cfg = _cfg(concurrency=8, nvme_bytes=NVME_BYTES,
+                   nvme_writeback=wb, seed=2)
+        stream = synth_updates(data, rate_qps=600.0, n_updates=120,
+                               delete_frac=0.3, seed=3)
+        rep = run_fleet(make_mutable(index), queries, params, cfg,
+                        updates=stream,
+                        ingest=IngestConfig(delta_cap_bytes=24 * 1024))
+        admits = flushes = pending = 0
+        for s in rep.shard_stats:
+            nv = s.nvme or {}
+            admits += nv.get("writeback_admits", 0)
+            flushes += nv.get("flushes_done", 0)
+            pending += nv.get("flush_pending", 0)
+        rows.append(dict(
+            placement=label, qps=round(rep.qps, 2),
+            p99_s=round(rep.latency_percentile(99), 6),
+            recall=round(rep.recall_against(gt), 4),
+            completed=len(rep.records), arrivals=rep.n_arrivals,
+            writeback_admits=admits, flushes_done=flushes,
+            flush_pending=pending))
+        emit(f"tier/ingest-{label}", 1e6 / max(rep.qps, 1e-9),
+             qps=rep.qps, admits=admits, flushes=flushes)
+    wt, wb = rows
+    _check("tier-writeback-admits",
+           wt["writeback_admits"] == 0 and wb["writeback_admits"] > 0,
+           f"write-through admits={wt['writeback_admits']} (want 0), "
+           f"write-back admits={wb['writeback_admits']} (want > 0)")
+    _check("tier-writeback-drains",
+           wb["flushes_done"] > 0 and wb["flush_pending"] == 0,
+           f"write-back flushed {wb['flushes_done']} deltas, "
+           f"{wb['flush_pending']} pending at drain (want 0)")
+    _check("tier-ingest-complete",
+           all(r["completed"] == r["arrivals"] for r in rows),
+           "every arrival completed under live compaction")
+    return rows
+
+
+def bench_cost(index, queries, gt) -> dict:
+    """The tier priced: NVMe reservation vs the egress + GETs it saves."""
+    params = SearchParams(k=10, nprobe=64)
+    book = PRICEBOOKS["default"]
+    flat = run_fleet(index, queries, params, _cfg(), pricebook=book)
+    tier = run_fleet(index, queries, params,
+                     _cfg(nvme_bytes=NVME_BYTES), pricebook=book)
+    fc, tc = flat.cost, tier.cost
+    _check("tier-nvme-component-priced",
+           fc["nvme_usd"] == 0.0 and tc["nvme_usd"] > 0.0,
+           f"nvme_usd flat={fc['nvme_usd']} (want 0) vs tiered="
+           f"{tc['nvme_usd']} (want > 0)")
+    _check("tier-cost-cuts-egress-dollars",
+           tc["egress_usd"] < fc["egress_usd"],
+           f"egress flat=${fc['egress_usd']:.9f} vs tiered="
+           f"${tc['egress_usd']:.9f} (want lower)")
+    emit("tier/cost-default", 1e6 / max(tier.qps, 1e-9),
+         total_usd=tc["total_usd"], egress_usd=tc["egress_usd"],
+         nvme_usd=tc["nvme_usd"])
+    return dict(flat=fc, tiered=tc)
+
+
+def main() -> int:
+    t0 = time.perf_counter()
+    data, index, queries, gt = _setup()
+    results = dict(
+        bench="tier",
+        quick=QUICK,
+        policies=bench_policies(index, queries, gt),
+        nvme_zero=bench_nvme_zero_parity(index, queries, gt),
+        writeback=bench_writeback(data, index, queries, gt),
+        cost=bench_cost(index, queries, gt),
+        failures=_failures,
+    )
+    results["meta"] = run_manifest(
+        seed=0, config=dict(bench="tier", quick=QUICK),
+        wall_s=time.perf_counter() - t0)
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {os.path.abspath(OUT_PATH)}", file=sys.stderr)
+    if _failures:
+        print(f"# tier_bench: FAILED {_failures}", file=sys.stderr)
+        return 1
+    print("# tier_bench: all tier checks passed", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -76,6 +76,16 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--queue-depth", type=int, default=16)
     p.add_argument("--cache-mb", type=float, default=0.0,
                    help="per-shard SLRU cache budget in MiB")
+    p.add_argument("--nvme-gb", type=float, default=0.0,
+                   help="per-instance local NVMe tier capacity in GiB "
+                        "(0 = flat DRAM-over-remote hierarchy)")
+    p.add_argument("--tier-policy", default="second-hit",
+                   choices=["second-hit", "admit-always"],
+                   help="NVMe promotion policy (needs --nvme-gb > 0)")
+    p.add_argument("--nvme-writeback", action="store_true",
+                   help="land compaction output on local NVMe first, "
+                        "flush to the object store asynchronously "
+                        "(needs --nvme-gb > 0)")
     p.add_argument("--hedge", action="store_true",
                    help="enable hedged requests (needs --replicas >= 2)")
     p.add_argument("--hedge-percentile", type=float, default=95.0)
@@ -101,7 +111,16 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def fleet_config_from_args(args, storage) -> FleetConfig:
-    """The one CLI-to-FleetConfig mapping (single- and multi-tenant)."""
+    """The one CLI-to-FleetConfig mapping (single- and multi-tenant).
+    Config-level validation errors (e.g. tier knobs without --nvme-gb)
+    surface as parser errors, not tracebacks."""
+    try:
+        return _fleet_config(args, storage)
+    except ValueError as e:
+        build_parser().error(str(e))
+
+
+def _fleet_config(args, storage) -> FleetConfig:
     return FleetConfig(
         n_shards=args.shards, replication=args.replicas, storage=storage,
         concurrency=args.concurrency,
@@ -109,6 +128,9 @@ def fleet_config_from_args(args, storage) -> FleetConfig:
         queue_depth=args.queue_depth,
         cache_bytes=int(args.cache_mb * 2**20),
         cache_policy="slru" if args.cache_mb > 0 else "none",
+        nvme_bytes=int(args.nvme_gb * 2**30),
+        tier_policy=args.tier_policy,
+        nvme_writeback=args.nvme_writeback,
         hedge=args.hedge, hedge_percentile=args.hedge_percentile,
         seed=args.seed,
         **exec_fields_from_args(args, build_parser()))

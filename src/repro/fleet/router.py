@@ -84,6 +84,7 @@ from repro.sim.autoscale import AutoscaleConfig, Autoscaler
 from repro.sim.faults import FaultSchedule
 from repro.sim.kernel import Kernel
 from repro.storage.spec import TOS, StorageSpec
+from repro.storage.tier import TIER_POLICIES, TierConfig
 
 #: A slot that cannot be routed (all owners down) retries on a backoff
 #: timer; past this many retries the scenario is declared unservable.
@@ -115,6 +116,11 @@ class FleetConfig:
     backend: str = "analytic"
     batch_window_s: float = 0.0    # kernel backend: coalescing window
     calibration: str | None = None  # table path; None = committed default
+    #: per-instance local NVMe tier (repro.storage.tier); 0 keeps the
+    #: flat DRAM -> remote hierarchy bit-exact (no tier is constructed)
+    nvme_bytes: int = 0
+    tier_policy: str = "second-hit"  # "second-hit" | "admit-always"
+    nvme_writeback: bool = False   # compaction output lands on NVMe first
     seed: int = 0
 
     def __post_init__(self):
@@ -151,6 +157,18 @@ class FleetConfig:
             raise ValueError(
                 f"hedge_percentile must be in [50, 100), got "
                 f"{self.hedge_percentile}")
+        if self.nvme_bytes < 0:
+            raise ValueError(f"nvme_bytes must be >= 0, got "
+                             f"{self.nvme_bytes}")
+        if self.tier_policy not in TIER_POLICIES:
+            raise ValueError(
+                f"tier_policy must be one of {TIER_POLICIES}, got "
+                f"{self.tier_policy!r}")
+        if self.nvme_bytes == 0 and (self.tier_policy != "second-hit"
+                                     or self.nvme_writeback):
+            raise ValueError(
+                "tier_policy/nvme_writeback are NVMe-tier knobs "
+                "(set nvme_bytes > 0)")
 
     def to_dict(self) -> dict:
         d = dict(n_shards=self.n_shards, replication=self.replication,
@@ -167,6 +185,10 @@ class FleetConfig:
             d.update(backend=self.backend,
                      batch_window_us=round(self.batch_window_s * 1e6, 3),
                      calibration=self.calibration or "default")
+        if self.nvme_bytes > 0:
+            d.update(nvme_bytes=self.nvme_bytes,
+                     tier_policy=self.tier_policy,
+                     nvme_writeback=self.nvme_writeback)
         return d
 
 
@@ -360,11 +382,17 @@ class FleetRouter:
     def _shard_engine_cfg(self, shard_id: int, instance: int
                           ) -> EngineConfig:
         cfg = self.cfg
+        tier = None
+        if cfg.nvme_bytes > 0:
+            tier = TierConfig(capacity_bytes=cfg.nvme_bytes,
+                              policy=cfg.tier_policy,
+                              writeback=cfg.nvme_writeback)
         return EngineConfig(
             storage=cfg.storage, concurrency=1,
             cache_bytes=cfg.cache_bytes, cache_policy=cfg.cache_policy,
             hit_latency_s=cfg.hit_latency_s, compute=cfg.compute,
-            seed=cfg.seed + shard_id * 7919 + instance * 104729)
+            seed=cfg.seed + shard_id * 7919 + instance * 104729,
+            tier=tier)
 
     def _spawn_server(self, shard_id: int, instance: int) -> ShardServer:
         cfg = self.cfg
@@ -649,8 +677,10 @@ class FleetRouter:
                          ctx.partition.owners(("list", li))}
 
             def provider(g=g):
+                # write_path IS the remote sim on flat instances; on a
+                # write-back tier it lands compaction PUTs locally first
                 srv = g.pick()
-                return srv.engine.sim if srv is not None else None
+                return srv.engine.write_path if srv is not None else None
 
             ctx.ingest_agents[g.shard_id] = IngestAgent(
                 ctx.index, site_id=g.shard_id, kernel=self.kernel,
@@ -673,11 +703,32 @@ class FleetRouter:
 
     def _invalidate_key(self, tid: int, key) -> None:
         """Broadcast a rewritten object's staleness to every instance
-        cache (non-owners never cached the key; dropping is a no-op)."""
+        cache and NVMe tier (non-owners never cached the key; dropping
+        is a no-op).  On a write-back tier the owning shards' instances
+        additionally admit the rewritten object to NVMe residency at its
+        new size — the compaction PUT just landed on their device."""
         wrapped = (tid,) + key
+        wb_nbytes = None
+        owners: tuple[int, ...] = ()
+        if self.cfg.nvme_writeback:
+            wb_nbytes = self._key_nbytes(self.ctxs[tid], key)
+            if wb_nbytes is not None:
+                owners = self.ctxs[tid].partition.owners(key)
         for g in self.groups:
+            wb = wb_nbytes if g.shard_id in owners else None
             for srv in g.all_servers():
-                srv.invalidate(wrapped)
+                srv.invalidate(wrapped, writeback_nbytes=wb)
+
+    @staticmethod
+    def _key_nbytes(ctx: _TenantCtx, key) -> int | None:
+        """Current (post-install) size of a native fetch key."""
+        if key[0] == "list":
+            meta = ctx.index.meta
+            if key[1] < len(meta.list_nbytes):
+                return int(meta.list_nbytes[key[1]])
+            return None
+        node_nbytes = getattr(ctx.index, "node_nbytes", None)
+        return int(node_nbytes()) if callable(node_nbytes) else None
 
     def _on_new_list(self, ctx: _TenantCtx, new_li: int,
                      parent_li: int) -> None:
@@ -1298,7 +1349,8 @@ class FleetRouter:
         comp = self._pricebook.components(
             get_requests=get_req, put_requests=put_req,
             read_bytes=read_bytes, instance_seconds=inst_s,
-            cache_byte_seconds=self.cfg.cache_bytes * inst_s)
+            cache_byte_seconds=self.cfg.cache_bytes * inst_s,
+            nvme_byte_seconds=self.cfg.nvme_bytes * inst_s)
         comp["total_usd"] = sum(comp.values())
         return comp
 
@@ -1317,6 +1369,23 @@ class FleetRouter:
         m = self.tracer.metrics
         m.gauge("fleet.queue_depth").set(self._queue_depth())
         m.gauge("fleet.instances").set(self.total_instances)
+        if self.cfg.nvme_bytes > 0:
+            # per-tier hit/byte gauges (flat runs emit none of these,
+            # keeping pre-tier metric exports byte-identical)
+            hits = misses = nvme_b = used = 0
+            for g in self.groups:
+                for srv in g.all_servers():
+                    tier = srv.engine.tier
+                    if tier is None:
+                        continue
+                    hits += tier.hits
+                    misses += tier.misses
+                    nvme_b += tier.nvme_bytes
+                    used += tier.used_bytes
+            m.gauge("tier.nvme.hits").set(hits)
+            m.gauge("tier.nvme.misses").set(misses)
+            m.gauge("tier.nvme.bytes").set(nvme_b)
+            m.gauge("tier.nvme.used_bytes").set(used)
         if self._pricebook is not None:
             for k, v in self._running_cost(now).items():
                 m.gauge(f"cost.{k}").set(round(v, 9))

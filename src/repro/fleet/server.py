@@ -48,6 +48,9 @@ class ShardStats:
     storage_put_requests: int = 0
     failures: int = 0
     jobs_aborted: int = 0
+    #: NVMe tier accounting (repro.storage.tier); None on flat instances
+    #: so their to_dict stays byte-identical to the pre-tier layout
+    nvme: dict | None = None
 
     def to_dict(self) -> dict:
         d = dict(shard=self.shard_id, instance=self.instance,
@@ -62,6 +65,8 @@ class ShardStats:
                  storage_put_requests=self.storage_put_requests)
         if self.failures:
             d.update(failures=self.failures, jobs_aborted=self.jobs_aborted)
+        if self.nvme is not None:
+            d["nvme"] = self.nvme
         return d
 
 
@@ -153,10 +158,20 @@ class ShardServer:
             tr.metrics.counter("fleet.sheds").inc()
         return False
 
-    def invalidate(self, key) -> None:
-        """Drop a rewritten object's stale cached copy (compaction)."""
+    def invalidate(self, key, writeback_nbytes: int | None = None) -> None:
+        """Drop a rewritten object's stale cached copy (compaction).
+
+        Invalidation is neither a hit nor a miss in any tier's stats.
+        ``writeback_nbytes`` is set by the router only on owning shards
+        of a write-back tier: the rewritten object just landed on local
+        NVMe, so it is admitted to residency at its new size."""
         if self.engine.cache is not None:
             self.engine.cache.remove(key)
+        tier = self.engine.tier
+        if tier is not None:
+            tier.invalidate(key)
+            if writeback_nbytes is not None and tier.writeback:
+                tier.admit_writeback(key, writeback_nbytes)
 
     def _job_done(self, job: JobRecord) -> None:
         self.stats.jobs_done += 1
@@ -194,6 +209,9 @@ class ShardServer:
             return
         self.alive = True
         self.engine.cache = self._cache_factory()
+        if self.engine.tier is not None:
+            # the replacement node's local NVMe starts empty too
+            self.engine.tier.reset()
         self.active_intervals.append([t, None])
 
     def retire(self, t: float) -> None:
@@ -218,6 +236,13 @@ class ShardServer:
         self.stats.storage_put_bytes = self.engine.sim.total_put_bytes
         self.stats.storage_put_requests = (
             self.engine.sim.total_put_requests)
+        if self.engine.tier is not None:
+            nv = self.engine.tier.stats_dict()
+            wp = self.engine.write_path
+            if wp is not self.engine.sim:       # write-back data plane
+                nv["flushes_done"] = wp.flushes_done
+                nv["flush_pending"] = wp.flush_pending
+            self.stats.nvme = nv
         return self.stats
 
 

@@ -313,10 +313,13 @@ class IngestAgent:
         if res is not None:
             new_li, _moved, _payloads, _nb = res
             self.report.reclusters += 1
-            self.invalidate(("list", li))
-            self.invalidate(("list", new_li))
+            # register the split before broadcasting staleness: the
+            # invalidate consumer may need the new list's placement
+            # (write-back tiers admit the rewritten object on its owners)
             if self.on_new_list is not None:
                 self.on_new_list(new_li, li)
+            self.invalidate(("list", li))
+            self.invalidate(("list", new_li))
         self._job_done(t0, "recluster")
 
     # ------------------------------------------------------- graph flush --

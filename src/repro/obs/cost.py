@@ -61,6 +61,9 @@ class PriceBook:
     egress_per_gib_usd: float = 0.02
     instance_per_hour_usd: float = 0.50
     cache_dram_per_gib_hour_usd: float = 0.05
+    #: local NVMe tier reservation (repro.storage.tier) — roughly an
+    #: order of magnitude under DRAM, which is the whole point of the tier
+    nvme_per_gib_hour_usd: float = 0.005
 
     def __post_init__(self) -> None:
         for f in dataclasses.fields(self):
@@ -86,7 +89,8 @@ class PriceBook:
     def components(self, *, get_requests: float = 0,
                    put_requests: float = 0, read_bytes: float = 0,
                    instance_seconds: float = 0.0,
-                   cache_byte_seconds: float = 0.0) -> dict:
+                   cache_byte_seconds: float = 0.0,
+                   nvme_byte_seconds: float = 0.0) -> dict:
         """Raw metered quantities -> unrounded component dollars."""
         return dict(
             get_usd=get_requests / 1e6 * self.get_per_million_usd,
@@ -96,6 +100,8 @@ class PriceBook:
                           * self.instance_per_hour_usd),
             cache_usd=(cache_byte_seconds / GiB / 3600.0
                        * self.cache_dram_per_gib_hour_usd),
+            nvme_usd=(nvme_byte_seconds / GiB / 3600.0
+                      * self.nvme_per_gib_hour_usd),
         )
 
 
@@ -140,6 +146,8 @@ def _fleet_quantities(report, cfg) -> dict:
         read_bytes=report.storage_bytes - put_bytes,
         instance_seconds=instance_seconds,
         cache_byte_seconds=cfg.cache_bytes * instance_seconds,
+        nvme_byte_seconds=(getattr(cfg, "nvme_bytes", 0)
+                           * instance_seconds),
     )
 
 
@@ -148,9 +156,11 @@ def fleet_cost(report, cfg, book: PriceBook) -> dict:
 
     ``get/put`` charge object-store requests (PUTs are compaction
     writes, metered separately by ``StorageSim``), ``egress`` charges
-    storage-served bytes, ``instance`` charges shard-instance uptime in
-    *simulated* hours (autoscaled instances bill only while active),
-    and ``cache`` charges the DRAM reservation per active instance.
+    storage-served bytes (remote only — the NVMe tier's device traffic
+    never crosses the NIC), ``instance`` charges shard-instance uptime
+    in *simulated* hours (autoscaled instances bill only while active),
+    ``cache`` charges the DRAM reservation per active instance, and
+    ``nvme`` the local-tier reservation (``FleetConfig.nvme_bytes``).
     """
     q = _fleet_quantities(report, cfg)
     comp = book.components(**q)
@@ -205,7 +215,10 @@ def tenant_showback(tenants, fleet_report, cfg, book: PriceBook) -> dict:
 
     jobs = {sl.name: sum(r.n_jobs for r in sl.records) for sl in tenants}
     jobs_total = sum(jobs.values())
-    shared_usd = fleet_comp["instance_usd"] + fleet_comp["cache_usd"]
+    # instance-hours, cache DRAM and the NVMe tier reservation are all
+    # per-instance capacity every tenant contends on -> one shared pool
+    shared_usd = (fleet_comp["instance_usd"] + fleet_comp["cache_usd"]
+                  + fleet_comp["nvme_usd"])
 
     rows = []
     sum_usd = 0.0

@@ -10,8 +10,11 @@ each instant of the query's sojourn to exactly one *stage*:
 ``queue``         winning job waiting in the shard's run queue
 ``batching``      waiting in a kernel-backend batch window (coalescing;
                   zero on the analytic backend)
-``cache_fetch``   fetch legs served entirely from the shard cache
-``storage_fetch`` fetch legs that went to remote storage
+``cache_fetch``   fetch legs served entirely from the shard DRAM cache
+``nvme_fetch``    fetch legs served entirely from the local NVMe tier
+``storage_fetch`` fetch legs that went to remote storage (a mixed
+                  NVMe+remote round is bounded by the remote fetch and
+                  charges here; its attrs carry the NVMe split)
 ``compute``       scan/ADC/distance work between fetch legs
 ``merge``         global top-k merge after the final gather
 ``other``         residue (float error, uninstrumented gaps)
@@ -36,9 +39,10 @@ __all__ = ["STAGES", "QueryPath", "AttributionReport", "extract_paths",
            "render_diff"]
 
 STAGES = ("admission", "route", "dispatch", "queue", "batching",
-          "cache_fetch", "storage_fetch", "compute", "merge", "other")
+          "cache_fetch", "nvme_fetch", "storage_fetch", "compute",
+          "merge", "other")
 
-_LEG_NAMES = frozenset(("queue", "batching", "cache_fetch",
+_LEG_NAMES = frozenset(("queue", "batching", "cache_fetch", "nvme_fetch",
                         "storage_fetch", "compute"))
 
 

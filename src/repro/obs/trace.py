@@ -191,8 +191,12 @@ def emit_job_spans(tr: Tracer, parent: Span | None, submit_t: float,
     ``start_t``/``end_t`` and per-batch :class:`BatchTrace` rows carry
     enough to tile the interval exactly: queue wait (submit -> engine
     start), alternating ``compute`` and fetch legs, final compute.
-    Fetch legs are ``storage_fetch`` when any request missed to storage
-    and ``cache_fetch`` when the whole batch was served locally.  On a
+    Fetch legs are ``storage_fetch`` when any request missed to remote
+    storage, ``nvme_fetch`` when the misses were served entirely from
+    the local NVMe tier, and ``cache_fetch`` when the whole batch was
+    served from the DRAM cache.  A mixed round (some misses NVMe, some
+    remote) is bounded by the remote fetch, so it stays a
+    ``storage_fetch`` leg and carries the NVMe split in its attrs.  On a
     kernel backend the job's ``coalesce`` intervals (waits in the batch
     window) are tiled out of the compute gaps as ``batching`` legs; with
     no coalescing the emitted spans are identical to before the backend
@@ -220,10 +224,21 @@ def emit_job_spans(tr: Tracer, parent: Span | None, submit_t: float,
     for b in job.batches:
         if b.submit_t > cursor:
             compute_legs(cursor, b.submit_t)
-        name = "storage_fetch" if b.n_requests > 0 else "cache_fetch"
-        tr.record(name, b.submit_t, b.done_t, parent=parent,
-                  requests=b.n_requests, hits=b.n_hits,
-                  bytes_storage=b.nbytes_storage, bytes=b.nbytes_total)
+        n_nvme = getattr(b, "n_nvme", 0)
+        if b.n_requests > 0:
+            name = "storage_fetch"
+        elif n_nvme > 0:
+            name = "nvme_fetch"
+        else:
+            name = "cache_fetch"
+        attrs = dict(requests=b.n_requests, hits=b.n_hits,
+                     bytes_storage=b.nbytes_storage, bytes=b.nbytes_total)
+        if n_nvme > 0:
+            # only tiered runs grow the attr set — flat spans stay
+            # byte-identical to the pre-tier tracer output
+            attrs["nvme_requests"] = n_nvme
+            attrs["bytes_nvme"] = getattr(b, "nbytes_nvme", 0)
+        tr.record(name, b.submit_t, b.done_t, parent=parent, **attrs)
         cursor = b.done_t
     if job.end_t > cursor:
         compute_legs(cursor, job.end_t)

@@ -38,6 +38,7 @@ from repro.sim.arrivals import ArrivalProcess, ClosedLoop
 from repro.sim.kernel import Event, Kernel
 from repro.storage.simulator import StorageSim
 from repro.storage.spec import StorageSpec
+from repro.storage.tier import NVMeTier, TierConfig, TieredWritePath
 
 
 @dataclasses.dataclass
@@ -50,6 +51,9 @@ class EngineConfig:
     hit_latency_s: float = 100e-6      # local (memory/SSD) cache service
     compute: ComputeSpec = dataclasses.field(default_factory=ComputeSpec)
     seed: int = 0
+    #: local NVMe middle tier (repro.storage.tier); None (or capacity 0)
+    #: keeps the flat DRAM -> remote hierarchy event-for-event identical
+    tier: TierConfig | None = None
 
     def __post_init__(self):
         if self.cache_policy not in CACHE_POLICIES:
@@ -95,6 +99,10 @@ class _JobState:
     pending_submit_t: float = 0.0
     pending_hits: int = 0
     pending_total_bytes: int = 0
+    pending_nvme_n: int = 0             # tier-resident misses this round
+    pending_nvme_bytes: int = 0
+    pending_parts: int = 0              # device sub-batches still in flight
+    pending_remote_done: tuple = (0, 0)
     pending_ev: Event | None = None     # next engine event for this job
     alive: bool = True                  # False once aborted (shard death)
     #: [enq_t, flush_t] intervals spent waiting in a KernelBackend batch
@@ -150,6 +158,18 @@ class SteppableEngine:
         self.on_complete = on_complete
         self.kernel = kernel if kernel is not None else Kernel(seed=cfg.seed)
         self.sim = StorageSim(cfg.storage, self.kernel, seed=cfg.seed)
+        # NVMe tier: constructed ONLY when capacity > 0 — a zero-capacity
+        # tier must not even allocate a second StorageSim, or the kernel's
+        # unique_name/RNG-stream sequence (and every flat golden) shifts.
+        self.tier = (NVMeTier(cfg.tier, self.kernel, seed=cfg.seed)
+                     if cfg.tier is not None and cfg.tier.capacity_bytes > 0
+                     else None)
+        #: ingest data plane: compaction PUTs go through here so a
+        #: write-back tier can land them locally first (flat engines hand
+        #: out the remote sim itself — identical object, identical path)
+        self.write_path = (TieredWritePath(self.tier, self.sim)
+                           if self.tier is not None and self.tier.writeback
+                           else self.sim)
         # Optional repro.exec.KernelBackend: compute is then batch-
         # coalesced and priced from a measured CalibrationTable instead
         # of the analytic ComputeSpec.  None keeps the analytic path
@@ -190,6 +210,8 @@ class SteppableEngine:
             tags.append(st.tag)
         self._jobs.clear()
         self.sim.abort_all()
+        if self.tier is not None:
+            self.tier.sim.abort_all()
         self.in_flight = 0
         return tags
 
@@ -258,41 +280,78 @@ class SteppableEngine:
         st.pending_ev = self.kernel.at(t, self._submit_batch, st, batch)
 
     def _submit_batch(self, st: _JobState, batch) -> None:
-        """Cache-split the batch and route misses to storage."""
+        """Cache-split the batch, then tier-split the misses.
+
+        Up to two device sub-batches go out concurrently — NVMe-resident
+        misses to the tier device, the rest to the remote store — and the
+        round completes when the slower one does (a join).  Without a
+        tier the remote sub-batch is the whole miss set and the path is
+        event-for-event what it was in the flat hierarchy."""
         st.pending_ev = None
         t = self.kernel.now
         hits = 0
-        miss_bytes = 0
-        miss_n = 0
+        miss = []
         for rq in batch.requests:
             st.metrics.cache_lookups += 1
             if self.cache is not None and self.cache.get(rq.key):
                 hits += 1
                 st.metrics.cache_hits += 1
             else:
-                miss_bytes += rq.nbytes
-                miss_n += 1
+                miss.append(rq)
+        if self.tier is not None and miss:
+            nvme_reqs, remote_reqs = self.tier.split(miss)
+        else:
+            nvme_reqs, remote_reqs = [], miss
+        miss_bytes = sum(rq.nbytes for rq in remote_reqs)
+        miss_n = len(remote_reqs)
+        nvme_bytes = sum(rq.nbytes for rq in nvme_reqs)
+        # bytes_storage stays remote-only: it feeds egress attribution,
+        # and tier-served bytes never cross the NIC
         st.metrics.bytes_storage += miss_bytes
         tr = self.kernel.tracer
         if tr.enabled:
             tr.metrics.counter("cache.hits").inc(hits)
-            tr.metrics.counter("cache.misses").inc(miss_n)
+            tr.metrics.counter("cache.misses").inc(len(miss))
             tr.metrics.counter("storage.bytes").inc(miss_bytes)
+            if self.tier is not None:
+                tr.metrics.counter("nvme.hits").inc(len(nvme_reqs))
+                tr.metrics.counter("nvme.bytes").inc(nvme_bytes)
         st.pending_batch = batch
         st.pending_submit_t = t
         st.pending_hits = hits
         st.pending_total_bytes = batch.nbytes
-        if miss_n == 0:
+        st.pending_nvme_n = len(nvme_reqs)
+        st.pending_nvme_bytes = nvme_bytes
+        st.pending_remote_done = (0, 0)
+        if miss_n == 0 and not nvme_reqs:
             st.pending_ev = self.kernel.at(t + self.cfg.hit_latency_s,
                                            self._on_fetched, st, 0, 0)
-        else:
+            return
+        st.pending_parts = (1 if nvme_reqs else 0) + (1 if miss_n else 0)
+        if nvme_reqs:
+            self.tier.sim.submit_batch(
+                nvme_bytes, len(nvme_reqs),
+                on_done=lambda tk, st=st: self._part_done(st, None))
+        if miss_n:
             self.sim.submit_batch(
                 miss_bytes, miss_n,
-                on_done=lambda tk, st=st: self._storage_done(st, tk))
+                on_done=lambda tk, st=st, reqs=remote_reqs:
+                    self._part_done(st, reqs, tk))
 
-    def _storage_done(self, st: _JobState, ticket) -> None:
-        if st.alive:
-            self._on_fetched(st, ticket.n_requests, ticket.nbytes)
+    def _part_done(self, st: _JobState, remote_reqs, ticket=None) -> None:
+        """One device sub-batch finished; the round resumes at the join."""
+        if not st.alive:
+            return
+        if ticket is not None:
+            st.pending_remote_done = (ticket.n_requests, ticket.nbytes)
+            if self.tier is not None and remote_reqs:
+                # promotion happens the instant the remote bytes land
+                for rq in remote_reqs:
+                    self.tier.note_remote_fetch(rq.key, rq.nbytes)
+        st.pending_parts -= 1
+        if st.pending_parts == 0:
+            n, b = st.pending_remote_done
+            self._on_fetched(st, n, b)
 
     def _on_fetched(self, st: _JobState, n_storage_req: int,
                     storage_bytes: int) -> None:
@@ -303,7 +362,9 @@ class SteppableEngine:
             round_idx=st.round_idx, submit_t=st.pending_submit_t,
             done_t=t, n_requests=n_storage_req,
             n_hits=st.pending_hits, nbytes_storage=storage_bytes,
-            nbytes_total=st.pending_total_bytes))
+            nbytes_total=st.pending_total_bytes,
+            n_nvme=st.pending_nvme_n,
+            nbytes_nvme=st.pending_nvme_bytes))
         st.round_idx += 1
         if self.cache is not None:
             for rq in batch.requests:
@@ -396,13 +457,19 @@ class QueryEngine:
             from repro.ingest.metrics import IngestReport
             from repro.ingest.mutable import make_mutable
             self.index = make_mutable(self.index)
+            inval = None
+            if self.cache is not None or core.tier is not None:
+                def inval(key, _c=self.cache, _t=core.tier):
+                    if _c is not None:
+                        _c.remove(key)
+                    if _t is not None:
+                        _t.invalidate(key)
             agent = IngestAgent(
                 self.index, site_id=0, kernel=kernel,
                 cfg=ingest if ingest is not None else IngestConfig(),
-                compute=cfg.compute, sim_provider=lambda: core.sim,
+                compute=cfg.compute, sim_provider=lambda: core.write_path,
                 report=IngestReport(),
-                invalidate=(self.cache.remove if self.cache is not None
-                            else None),
+                invalidate=inval,
                 inflight_floor=lambda: min(
                     (st.start_t for st in core._jobs),
                     default=float("inf")))

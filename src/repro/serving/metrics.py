@@ -15,10 +15,12 @@ class BatchTrace:
     round_idx: int
     submit_t: float
     done_t: float
-    n_requests: int        # storage requests (misses)
+    n_requests: int        # remote storage requests (misses)
     n_hits: int            # cache hits in this batch
     nbytes_storage: int
     nbytes_total: int
+    n_nvme: int = 0        # requests served from the local NVMe tier
+    nbytes_nvme: int = 0   # bytes served from the local NVMe tier
 
     @property
     def io_latency(self) -> float:

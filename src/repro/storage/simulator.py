@@ -106,6 +106,10 @@ class StorageSim:
         self._tickets: dict[int, BatchTicket] = {}
         self._on_done: dict[int, Callable[[BatchTicket], None] | None] = {}
         self._start_evs: dict[int, Event] = {}
+        #: per-batch token-bucket charge (seconds of bucket time), kept
+        #: until transfer start so abort_all can refund batches whose
+        #: admission tokens were charged but never used
+        self._bucket_charge: dict[int, float] = {}
         self._completion_ev: Event | None = None
         self.completed: list[BatchTicket] = []   # callback-less tickets
         # aggregates (puts are also included in the totals: a PUT is
@@ -135,8 +139,9 @@ class StorageSim:
         tid = self._next_id
         self._next_id += 1
         # 1) GET-rate admission: n tokens at get_qps_limit
-        self._bucket_vt = max(self._bucket_vt, t) + (
-            n_requests / self.spec.get_qps_limit)
+        charge = n_requests / self.spec.get_qps_limit
+        self._bucket_vt = max(self._bucket_vt, t) + charge
+        self._bucket_charge[tid] = charge
         admit_t = max(t, self._bucket_vt)
         # 2) TTFB (one overlapped sample per batch)
         start_t = admit_t + self.sample_ttfb() + self.spec.min_latency_s
@@ -156,6 +161,7 @@ class StorageSim:
     def _start(self, tid: int) -> None:
         """Transfer-start event: the batch joins the shared pipe."""
         self._start_evs.pop(tid, None)
+        self._bucket_charge.pop(tid, None)     # tokens are spent now
         self.pipe.add(self.kernel.now, tid, self._tickets[tid].nbytes)
         self._reschedule_completion()
 
@@ -189,10 +195,18 @@ class StorageSim:
 
         Waiters are NOT notified — the failing server reports aborted
         jobs; storage just forgets the work.
+
+        GET-rate tokens charged to batches that never reached transfer
+        start are refunded: their admission slots were reserved but the
+        requests never issued, so leaving ``_bucket_vt`` advanced would
+        make post-fault traffic queue behind phantom I/O.
         """
-        for ev in self._start_evs.values():
+        for tid, ev in self._start_evs.items():
             self.kernel.cancel(ev)
+            self._bucket_vt -= self._bucket_charge.pop(tid, 0.0)
+        self._bucket_vt = max(self._bucket_vt, self.kernel.now)
         self._start_evs.clear()
+        self._bucket_charge.clear()
         for tid in list(self.pipe.active):
             self.pipe.remove(self.kernel.now, tid)
         if self._completion_ev is not None:

@@ -44,6 +44,20 @@ SSD = StorageSpec(
     get_qps_limit=420_000.0,
 )
 
+# Per-shard local NVMe used as a middle tier between the DRAM segment
+# cache and the remote object store (repro.storage.tier): ~100us base
+# latency (TTFB median + kernel I/O floor), with its own IOPS bucket and
+# bandwidth pipe so an NVMe-resident working set never touches the
+# remote NIC or GET tokens.
+NVME = StorageSpec(
+    name="local-nvme",
+    ttfb_p50_s=90e-6,
+    ttfb_sigma=0.25,
+    bandwidth_Bps=3.5e9,
+    get_qps_limit=300_000.0,
+    min_latency_s=10e-6,
+)
+
 S3_EXTERNAL = StorageSpec(
     name="s3-external",
     ttfb_p50_s=30e-3,
@@ -60,4 +74,5 @@ INTERNAL_NIC = StorageSpec(
     get_qps_limit=20_000.0,
 )
 
-PRESETS = {s.name: s for s in [TOS, TOS_EXTERNAL, SSD, S3_EXTERNAL, INTERNAL_NIC]}
+PRESETS = {s.name: s for s in [TOS, TOS_EXTERNAL, SSD, NVME, S3_EXTERNAL,
+                               INTERNAL_NIC]}

@@ -30,6 +30,11 @@ from repro.tuning.tenancy import (CacheSplit, CacheSplitRecommendation,
                                   miss_curve, object_access_profile,
                                   screen_cache_splits, tune_cache_split)
 from repro.tuning.recommend import Recommendation, autotune
+from repro.tuning.tier import (TierOutcome, TierPrediction, TierSplit,
+                               TierSplitRecommendation,
+                               enumerate_tier_splits, evaluate_tier_split,
+                               fleet_access_profile, screen_tier_splits,
+                               tune_tier_split)
 from repro.tuning.screen import (Prediction, ScreenResult,
                                  best_predicted_qps, predict, screen)
 from repro.tuning.space import (Candidate, EnvSpec, WorkloadSpec,
@@ -54,4 +59,8 @@ __all__ = [
     "CacheSplitRecommendation", "object_access_profile", "che_hit_rate",
     "miss_curve", "enumerate_splits", "screen_cache_splits",
     "tune_cache_split",
+    "TierSplit", "TierPrediction", "TierOutcome",
+    "TierSplitRecommendation", "fleet_access_profile",
+    "enumerate_tier_splits", "screen_tier_splits", "evaluate_tier_split",
+    "tune_tier_split",
 ]

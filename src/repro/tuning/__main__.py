@@ -33,6 +33,15 @@ Two modes:
 
       python -m repro.tuning --tune-split --tenants tenants.json \\
           --cache-gb 0.004 --mrc-curves mrc.json
+
+* **tier-split tuning** (``--tune-tier``): split a fixed $/hour budget
+  across fleet width, DRAM cache and the local NVMe tier
+  (docs/storage.md).  The screen prices per-tier hit rates from the
+  workload's access profile (or ``--mrc-curves``) and a price book;
+  the top candidates are re-priced on real tiered fleet runs.
+
+      python -m repro.tuning --tune-tier --budget-usd-hour 2.0 \\
+          --pricebook default
 """
 from __future__ import annotations
 
@@ -120,6 +129,20 @@ def build_parser() -> argparse.ArgumentParser:
                    help="fleet point for the refinement runs")
     g.add_argument("--replicas", type=int, default=1,
                    help="fleet point for the refinement runs")
+    t = p.add_argument_group("tier-split tuning (--tune-tier)")
+    t.add_argument("--tune-tier", action="store_true",
+                   help="split a fixed $/hour budget across fleet width, "
+                        "DRAM cache and the local NVMe tier: analytic "
+                        "screen + refinement on real tiered fleet runs "
+                        "(docs/storage.md)")
+    t.add_argument("--budget-usd-hour", type=float, default=0.0,
+                   metavar="USD",
+                   help="the hourly budget to split (required; priced "
+                        "with --pricebook, default price book otherwise)")
+    t.add_argument("--tier-steps", type=int, default=6,
+                   help="screen granularity: DRAM-share steps per width")
+    t.add_argument("--tier-widths", default="1,2,4", metavar="W,W,...",
+                   help="fleet widths the screen considers")
     add_exec_args(p)
     add_scenario_args(p, faults=False)
     add_obs_args(p)
@@ -146,25 +169,44 @@ def main(argv: list[str] | None = None) -> int:
     parser = build_parser()
     monitor = monitor_from_args(args, parser)
     pricebook = pricebook_from_args(args, parser)
-    if (monitor is not None or pricebook is not None) and not args.fleet:
-        parser.error("--monitor/--pricebook apply to the fleet-sizing "
-                     "validation rerun; add --fleet (index tuning has no "
-                     "serving run to monitor or meter)")
+    if monitor is not None and not args.fleet:
+        parser.error("--monitor applies to the fleet-sizing validation "
+                     "rerun; add --fleet (index tuning has no serving "
+                     "run to monitor)")
+    if pricebook is not None and not (args.fleet or args.tune_tier):
+        parser.error("--pricebook applies to the fleet-sizing validation "
+                     "rerun or the --tune-tier budget screen; add --fleet "
+                     "or --tune-tier")
     if monitor is not None and monitor.recall_target is not None:
         parser.error("--recall-slo is a serving-run knob (python -m "
                      "repro.fleet); the sizing rerun has no precomputed "
                      "ground truth to judge live recall against")
     if args.tune_split:
-        if args.fleet or args.tune_window:
+        if args.fleet or args.tune_window or args.tune_tier:
             parser.error("--tune-split is its own mode; drop --fleet/"
-                         "--tune-window")
+                         "--tune-window/--tune-tier")
         if not args.tenants:
             parser.error("--tune-split needs --tenants SPEC.JSON")
         if args.cache_gb <= 0:
             parser.error("--tune-split splits the --cache-gb budget; "
                          "give a budget > 0")
-    elif args.tenants or args.mrc_curves:
-        parser.error("--tenants/--mrc-curves belong to --tune-split")
+    elif args.tenants:
+        parser.error("--tenants belongs to --tune-split")
+    elif args.mrc_curves and not args.tune_tier:
+        parser.error("--mrc-curves belongs to --tune-split/--tune-tier")
+    if args.tune_tier:
+        if args.fleet or args.tune_window:
+            parser.error("--tune-tier is its own mode; drop --fleet/"
+                         "--tune-window")
+        if args.budget_usd_hour <= 0:
+            parser.error("--tune-tier splits an hourly dollar budget; "
+                         "give --budget-usd-hour > 0")
+        if args.cache_gb:
+            parser.error("--cache-gb conflicts with --tune-tier (the "
+                         "DRAM budget is a tuned output, priced from "
+                         "--budget-usd-hour)")
+    elif args.budget_usd_hour:
+        parser.error("--budget-usd-hour belongs to --tune-tier")
     exec_kw = None
     if args.tune_window:
         if args.batch_window_us:
@@ -209,6 +251,41 @@ def main(argv: list[str] | None = None) -> int:
             config=dict(mode="cache-split", tenants=args.tenants,
                         mrc_curves=args.mrc_curves,
                         cache_bytes=env.cache_bytes),
+            wall_s=time.perf_counter() - t0)
+        emit_json(out, args)
+        return 0
+
+    if args.tune_tier:
+        import json as _json
+
+        from repro.tuning.tier import tune_tier_split
+        mrc = None
+        if args.mrc_curves:
+            with open(args.mrc_curves) as f:
+                mrc = _json.load(f)
+        try:
+            widths = tuple(int(x) for x in args.tier_widths.split(",")
+                           if x.strip())
+            if not widths:
+                raise ValueError
+        except ValueError:
+            parser.error("--tier-widths wants comma-separated ints, got "
+                         f"{args.tier_widths!r}")
+        t0 = time.perf_counter()
+        try:
+            rec = tune_tier_split(
+                w, env, args.budget_usd_hour, book=pricebook,
+                widths=widths, steps=args.tier_steps,
+                refine_top=args.refine_top, mrc=mrc, seed=args.seed)
+        except ValueError as e:
+            parser.error(str(e))
+        out = rec.to_dict()
+        out["meta"] = run_manifest(
+            seed=args.seed,
+            config=dict(mode="tier-split",
+                        budget_usd_per_hour=args.budget_usd_hour,
+                        pricebook=rec.pricebook,
+                        mrc_curves=args.mrc_curves),
             wall_s=time.perf_counter() - t0)
         emit_json(out, args)
         return 0

@@ -9,7 +9,14 @@ Invariant under arbitrary interleavings of put/get/remove/invalidate:
   hit behaviour;
 * partitioned tenant caches (static/weighted) never exceed any
   tenant's quota, and the weighted policy's reallocation conserves the
-  total byte budget exactly.
+  total byte budget exactly;
+* shrinking a cache below its protected-segment usage spills across
+  *both* segments and satisfies ``used_bytes <= capacity`` immediately
+  on return — never deferred to the next access;
+* invalidation is neither a hit nor a miss: ``remove``/``invalidate``
+  leave the ``(hits, misses)`` counters untouched on every cache class
+  (SLRU, pinned, and all partitioned tenant assemblies), so compaction
+  churn can never masquerade as workload locality change.
 
 The generator runs on seeded numpy randomness so the sweep always
 executes; when ``hypothesis`` is installed the same checker is also
@@ -19,7 +26,8 @@ import numpy as np
 import pytest
 
 from repro.cache.slru import PinnedCache, SLRUCache
-from repro.tenancy.policy import (StaticTenantCache, WeightedTenantCache)
+from repro.tenancy.policy import (SharedTenantCache, StaticTenantCache,
+                                  WeightedTenantCache)
 
 try:
     from hypothesis import given, settings
@@ -43,6 +51,18 @@ def check_slru_invariants(cache: SLRUCache) -> None:
     assert all(v >= 0 for v in cache.protected.values())
 
 
+def cache_stats(cache) -> tuple[int, int]:
+    """``(hits, misses)`` for any cache class, summing partitions."""
+    parts = getattr(cache, "parts", None)
+    if parts is not None:
+        return (sum(p.hits for p in parts.values()),
+                sum(p.misses for p in parts.values()))
+    inner = getattr(cache, "inner", None)
+    if inner is not None:
+        return (inner.hits, inner.misses)
+    return (cache.hits, cache.misses)
+
+
 def apply_slru_ops(cache: SLRUCache, ops) -> None:
     """Run an op sequence, checking invariants after every step."""
     for op, key, nbytes in ops:
@@ -51,10 +71,16 @@ def apply_slru_ops(cache: SLRUCache, ops) -> None:
         elif op == "get":
             cache.get(key)
         elif op == "remove":
+            stats = cache_stats(cache)
             freed = cache.remove(key)
             assert freed >= 0
+            assert cache_stats(cache) == stats, \
+                "remove must be neither a hit nor a miss"
         else:
+            stats = cache_stats(cache)
             cache.invalidate(key)
+            assert cache_stats(cache) == stats, \
+                "invalidate must be neither a hit nor a miss"
         check_slru_invariants(cache)
 
 
@@ -93,6 +119,55 @@ def test_slru_resize_keeps_accounting_exact():
         check_slru_invariants(cache)
 
 
+def test_slru_shrink_below_protected_spills_both_segments():
+    """A resize below the protected segment's usage must land within
+    budget *on return* — demoting protected overflow into probation and
+    evicting LRU-first across the combined spill, not just probation."""
+    cache = SLRUCache(1000)
+    for i in range(8):
+        cache.put(("k", i), 100)
+        cache.get(("k", i))              # promote into protected
+    cache.put(("p", 0), 100)
+    cache.put(("p", 1), 100)
+    assert cache.protected_bytes == 800 and cache.probation_bytes == 200
+    evicted = []
+    cache.on_evict = lambda k, s: evicted.append(k)
+    cache.set_capacity(300)              # well below protected usage
+    assert cache.used_bytes <= 300       # immediately, not eventually
+    check_slru_invariants(cache)
+    # the spill crossed both segments: original probation entries AND
+    # demoted protected entries were evicted
+    assert any(k[0] == "p" for k in evicted)
+    assert any(k[0] == "k" for k in evicted)
+    # survivors are the most-recently-used protected entries, within the
+    # shrunken protected ceiling
+    assert cache.protected_bytes <= cache.protected_cap
+    assert ("k", 7) in cache
+    cache.set_capacity(0)                # degenerate shrink: drop all
+    assert cache.used_bytes == 0 and len(cache) == 0
+    check_slru_invariants(cache)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_slru_shrink_below_protected_property(seed):
+    """Randomised variant: promote-heavy fill, then shrink to targets
+    scattered below protected usage (including 0 and sub-entry sizes)."""
+    rng = np.random.default_rng(seed)
+    cache = SLRUCache(int(rng.integers(5, 20)) * 100)
+    for op, key, nbytes in random_ops(rng, 150):
+        if op == "put":
+            cache.put(key, nbytes)
+            cache.get(key)               # immediate re-reference: promote
+        else:
+            cache.get(key)
+    for target in sorted(rng.integers(0, max(cache.protected_bytes, 1),
+                                      size=4), reverse=True):
+        cache.set_capacity(int(target))
+        assert cache.used_bytes <= cache.capacity
+        assert cache.protected_bytes <= cache.protected_cap
+        check_slru_invariants(cache)
+
+
 def test_slru_oversize_put_is_rejected_without_accounting_drift():
     cache = SLRUCache(100)
     cache.put("big", 101)
@@ -115,9 +190,13 @@ def test_pinned_membership_matches_hits(seed):
         elif op == "get":
             assert cache.get(key) == (key in cache.keys)
         elif op == "remove":
+            stats = cache_stats(cache)
             assert cache.remove(key) == 0   # pinned carries no bytes
+            assert cache_stats(cache) == stats
         else:
+            stats = cache_stats(cache)
             cache.invalidate(key)
+            assert cache_stats(cache) == stats
         assert cache.used_bytes == 0
         assert cache.keys <= pinned_keys    # unpinning only shrinks
 
@@ -132,6 +211,20 @@ def tenant_ops(rng: np.random.Generator, n: int, n_tenants: int):
                "list", int(rng.integers(0, 16)))
         out.append((op, key, int(rng.integers(1, 400))))
     return out
+
+
+def apply_tenant_op(cache, op, key, nbytes) -> None:
+    """One op against a tenant assembly, asserting the stats contract
+    (invalidation paths never move the hit/miss counters)."""
+    if op == "put":
+        cache.put(key, nbytes)
+    elif op == "get":
+        cache.get(key)
+    else:
+        stats = cache_stats(cache)
+        (cache.remove if op == "remove" else cache.invalidate)(key)
+        assert cache_stats(cache) == stats, \
+            f"{op} must be neither a hit nor a miss on {cache.policy}"
 
 
 def check_partition_invariants(cache, total: int) -> None:
@@ -149,15 +242,39 @@ def test_partitioned_caches_never_exceed_quota(cls, seed):
     weights = {0: 1.0, 1: 2.0, 2: 0.5}
     cache = cls(total, weights)
     for op, key, nbytes in tenant_ops(rng, 500, 3):
-        if op == "put":
-            cache.put(key, nbytes)
-        elif op == "get":
-            cache.get(key)
-        elif op == "remove":
-            cache.remove(key)
-        else:
-            cache.invalidate(key)
+        apply_tenant_op(cache, op, key, nbytes)
         check_partition_invariants(cache, total)
+
+
+# ------------------------------------------------ invalidation contract --
+
+@pytest.mark.parametrize("make", [
+    lambda: SLRUCache(1000),
+    lambda: PinnedCache({(0, "list", i) for i in range(4)}),
+    lambda: SharedTenantCache(2000, {0: 1.0, 1: 2.0}),
+    lambda: StaticTenantCache(2000, {0: 1.0, 1: 2.0}),
+    lambda: WeightedTenantCache(2000, {0: 1.0, 1: 2.0}),
+], ids=["slru", "pinned", "shared", "static", "weighted"])
+def test_invalidation_is_neither_hit_nor_miss(make):
+    """The unified stats contract: ``remove``/``invalidate`` never touch
+    the hit/miss counters — present key, absent key, any cache class.
+    Only the *next lookup* of an invalidated key records (one miss)."""
+    cache = make()
+    present = (0, "list", 1)
+    absent = (1, "list", 9)
+    cache.put(present, 100)
+    cache.get(present)
+    cache.get(absent)
+    stats = cache_stats(cache)
+    assert cache.invalidate(absent) is False
+    cache.remove(absent)
+    assert cache_stats(cache) == stats
+    # the predicate reflects presence (pinned: key is in the pinned set)
+    assert cache.invalidate(present) is True
+    cache.remove(present)                 # idempotent, still no stats
+    assert cache_stats(cache) == stats
+    cache.get(present)                    # the miss happens here, once
+    assert cache_stats(cache) == (stats[0], stats[1] + 1)
 
 
 def test_weighted_floor_never_breached_under_adversarial_pressure():
@@ -205,12 +322,23 @@ if HAVE_HYPOTHESIS:
     def test_hypothesis_partition_quota(cls, ops):
         cache = cls(2000, {0: 1.0, 1: 2.0, 2: 0.5})
         for op, key, nbytes in ops:
-            if op == "put":
-                cache.put(key, nbytes)
-            elif op == "get":
-                cache.get(key)
-            elif op == "remove":
-                cache.remove(key)
-            else:
-                cache.invalidate(key)
+            apply_tenant_op(cache, op, key, nbytes)
             check_partition_invariants(cache, 2000)
+
+    shrink_strategy = st.lists(
+        st.tuples(st.sampled_from(("put", "get")), st.sampled_from(KEYS),
+                  st.integers(min_value=1, max_value=400)),
+        min_size=1, max_size=80)
+
+    @settings(max_examples=80, deadline=None)
+    @given(st.integers(min_value=200, max_value=2000), shrink_strategy,
+           st.integers(min_value=0, max_value=2000))
+    def test_hypothesis_shrink_below_protected(capacity, ops, target):
+        cache = SLRUCache(capacity)
+        for op, key, nbytes in ops:
+            cache.put(key, nbytes) if op == "put" else cache.get(key)
+            cache.get(key)           # promote: pressure the protected seg
+        cache.set_capacity(target)
+        assert cache.used_bytes <= cache.capacity
+        assert cache.protected_bytes <= cache.protected_cap
+        check_slru_invariants(cache)

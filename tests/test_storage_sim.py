@@ -213,6 +213,89 @@ def test_abort_all_drops_inflight_work():
     assert tk.done_t > sim.kernel.now - 1e-9 or tk.done_t > 0
 
 
+def test_abort_all_refunds_unstarted_get_tokens():
+    """Batches killed before transfer start give their GET tokens back:
+    post-fault traffic must not queue behind phantom admissions."""
+    spec = _quiet(TOS)
+    sim = StorageSim(spec, seed=0)
+    n_req = 20_000                        # 1 s of tokens per batch
+    for _ in range(5):
+        sim.submit_batch(1000, n_req)     # 5 s of bucket time reserved
+    sim.abort_all()                       # t=0: nothing reached _start
+    tk = sim.submit_batch(1000, 1)
+    sim.drain()
+    # admission is this batch's own token only, not 5 s of dead work
+    expect = (1 / spec.get_qps_limit + spec.ttfb_p50_s
+              + spec.min_latency_s)
+    assert tk.start_t == pytest.approx(expect, rel=0.05)
+
+
+def test_abort_all_refund_spares_started_batches():
+    """Tokens are spent at transfer start: a batch already on the pipe
+    when the fault hits keeps its charge; only unstarted ones refund."""
+    spec = _quiet(TOS)
+    sim = StorageSim(spec, seed=0)
+    n_req = 20_000                        # 1 s of tokens
+    first = sim.submit_batch(1000, n_req)
+    sim.submit_batch(1000, n_req)         # queued behind the first
+    sim.kernel.run_until(first.start_t + 1e-9)   # first is transferring
+    assert sim.pipe.active
+    sim.abort_all()
+    tk = sim.submit_batch(1000, 1)
+    sim.drain()
+    # the second batch's 1 s refunded; the first's stays spent, but the
+    # bucket clock never falls behind wall time, so admission is prompt
+    expect = (1 / spec.get_qps_limit + spec.ttfb_p50_s
+              + spec.min_latency_s)
+    assert tk.start_t - tk.submit_t == pytest.approx(expect, rel=0.05)
+
+
+def test_fault_replay_with_and_without_hedging():
+    """End-to-end abort-refund regression: replay one fault schedule
+    through the fleet with hedging off and on.  Every arrival completes
+    with exact results (no query starves behind refunded tokens), and
+    each replay is bit-identical to its twin — abort bookkeeping leaks
+    would show up as nondeterministic admission times."""
+    import dataclasses
+
+    from repro.core.cluster_index import ClusterIndex
+    from repro.core.flat import exact_topk
+    from repro.core.types import ClusterIndexParams, SearchParams
+    from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
+    from repro.fleet import FleetConfig, run_fleet
+    from repro.sim.arrivals import Poisson
+    from repro.sim.faults import FaultSchedule, ShardFault
+
+    data, queries = make_dataset(scaled(DEEP_ANALOG, 600, 16))
+    gt, _ = exact_topk(data, queries, 10)
+    ci = ClusterIndex.build(data, ClusterIndexParams(kmeans_iters=4,
+                                                     seed=0))
+    p = SearchParams(k=10, nprobe=16)
+    heavy = dataclasses.replace(TOS, ttfb_sigma=0.8)
+    faults = FaultSchedule((ShardFault(shard=0, t_fail=0.05,
+                                       t_recover=0.25),
+                            ShardFault(shard=1, t_fail=0.15,
+                                       t_recover=0.30)))
+    for hedge in (False, True):
+        cfg = FleetConfig(n_shards=2, replication=2, storage=heavy,
+                          concurrency=12, shard_concurrency=4,
+                          queue_depth=32, seed=6, hedge=hedge,
+                          hedge_percentile=70.0, hedge_min_samples=16)
+        runs = [run_fleet(ci, queries, p, cfg,
+                          arrivals=Poisson(rate_qps=200.0,
+                                           n_total=2 * len(queries)),
+                          faults=faults) for _ in range(2)]
+        for rep in runs:
+            assert len(rep.records) == rep.n_arrivals
+            assert all((r.ids >= 0).all() for r in rep.records)
+            assert rep.recall_against(gt) == \
+                runs[0].recall_against(gt)
+        a, b = runs
+        assert a.wall_time_s == b.wall_time_s
+        assert sorted((r.qid, r.sojourn) for r in a.records) == \
+            sorted((r.qid, r.sojourn) for r in b.records)
+
+
 def test_workload_replay_concurrency_invariance():
     """Replaying the same workload at different concurrency changes
     timing but is bit-for-bit identical in results and total traffic."""

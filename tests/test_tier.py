@@ -1,0 +1,366 @@
+"""Tiered storage data path: DRAM -> local NVMe -> object store.
+
+Four contracts from the tier PR's acceptance list:
+
+* promotion is deterministic — same seed, same config, bit-identical
+  fleet JSON and tier stats across replays (checked over 3 seeds);
+* write-back makes compaction output visible at *local* completion,
+  strictly before the async object-store flush lands;
+* a device too small to hold anything degrades to the flat hierarchy —
+  recall and results are unchanged, never an error;
+* ``nvme_bytes=0`` constructs no tier at all and reproduces the
+  pre-tier golden fleet report bit-exactly.
+"""
+import dataclasses
+import hashlib
+import json
+import os
+from collections import namedtuple
+
+import numpy as np
+import pytest
+
+from repro.core.cluster_index import ClusterIndex
+from repro.core.flat import exact_topk
+from repro.core.types import ClusterIndexParams, SearchParams
+from repro.data.synth import DEEP_ANALOG, make_dataset, scaled
+from repro.fleet import FleetConfig, run_fleet
+from repro.sim.kernel import Kernel
+from repro.storage.simulator import StorageSim
+from repro.storage.spec import NVME, TOS
+from repro.storage.tier import (NVMeTier, TierConfig, TieredWritePath)
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
+                           "golden_fleet_prerefactor.json")
+
+Rq = namedtuple("Rq", ["key", "nbytes"])
+
+
+def _quiet(spec):
+    return dataclasses.replace(spec, ttfb_sigma=1e-9)
+
+
+def _tier(capacity=1000, policy="second-hit", writeback=False, kernel=None):
+    cfg = TierConfig(capacity_bytes=capacity, policy=policy,
+                     writeback=writeback)
+    return NVMeTier(cfg, kernel if kernel is not None else Kernel(seed=0))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = scaled(DEEP_ANALOG, 1200, 32)
+    data, queries = make_dataset(spec)
+    gt, _ = exact_topk(data, queries, 10)
+    ci = ClusterIndex.build(data, ClusterIndexParams(kmeans_iters=4, seed=0))
+    return data, queries, gt, ci
+
+
+def _ids_sha256(report) -> str:
+    h = hashlib.sha256()
+    for r in sorted(report.records, key=lambda r: r.qid):
+        h.update(np.asarray(r.qid).tobytes())
+        h.update(np.asarray(r.ids, dtype=np.int64).tobytes())
+    return h.hexdigest()
+
+
+# ------------------------------------------------------------ unit: tier --
+
+def test_tier_config_validation():
+    with pytest.raises(ValueError):
+        TierConfig(capacity_bytes=-1)
+    with pytest.raises(ValueError):
+        TierConfig(capacity_bytes=100, policy="always")  # not a policy
+    with pytest.raises(AssertionError):
+        NVMeTier(TierConfig(capacity_bytes=0), Kernel(seed=0))
+
+
+def test_second_hit_promotes_only_on_repeat_miss():
+    tier = _tier(policy="second-hit")
+    (nv, rem) = tier.split([Rq("a", 100)])
+    assert (nv, rem) == ([], [Rq("a", 100)])
+    tier.note_remote_fetch("a", 100)       # first touch: ghost only
+    assert "a" not in tier and tier.promotions == 0
+    (nv, rem) = tier.split([Rq("a", 100)])
+    assert rem == [Rq("a", 100)]           # still remote
+    tier.note_remote_fetch("a", 100)       # second touch: admitted
+    assert "a" in tier and tier.promotions == 1
+    (nv, rem) = tier.split([Rq("a", 100)])
+    assert nv == [Rq("a", 100)] and rem == []
+    assert tier.hits == 1 and tier.nvme_bytes == 100
+
+
+def test_admit_always_promotes_first_touch():
+    tier = _tier(policy="admit-always")
+    tier.note_remote_fetch("a", 100)
+    assert "a" in tier and tier.promotions == 1
+
+
+def test_ghost_list_is_byte_bounded():
+    tier = _tier(capacity=300, policy="second-hit")
+    for i in range(10):
+        tier.note_remote_fetch(("k", i), 100)   # 10 ghosts, cap 300
+    assert tier._ghost_bytes <= 300
+    # the oldest ghosts aged out: re-touching them starts over
+    tier.note_remote_fetch(("k", 0), 100)
+    assert ("k", 0) not in tier
+
+
+def test_residency_lru_eviction_order():
+    tier = _tier(capacity=300, policy="admit-always")
+    for i in range(3):
+        tier.note_remote_fetch(("k", i), 100)
+    tier.split([Rq(("k", 0), 100)])             # touch k0: now MRU
+    tier.note_remote_fetch(("k", 3), 100)       # evicts LRU = k1
+    assert ("k", 1) not in tier and ("k", 0) in tier
+    assert tier.evictions == 1 and tier.used_bytes == 300
+
+
+def test_admit_writeback_full_device_degrades_to_write_through():
+    tier = _tier(capacity=300, writeback=True)
+    assert tier.admit_writeback("big", 301) is False
+    assert tier.writeback_fallbacks == 1 and "big" not in tier
+    assert tier.admit_writeback("a", 200) is True
+    assert tier.admit_writeback("a", 250) is True    # resize in place
+    assert tier.used_bytes == 250 and tier.resident_keys == 1
+
+
+def test_tier_invalidate_is_neither_hit_nor_miss():
+    tier = _tier(policy="admit-always")
+    tier.note_remote_fetch("a", 100)
+    tier.split([Rq("a", 100), Rq("b", 50)])
+    stats = (tier.hits, tier.misses)
+    assert tier.invalidate("a") is True
+    assert tier.invalidate("a") is False      # already gone
+    assert tier.invalidate("zzz") is False
+    assert (tier.hits, tier.misses) == stats
+    assert tier.used_bytes == 0
+
+
+def test_reset_clears_residency_but_keeps_cumulative_counters():
+    tier = _tier(policy="admit-always")
+    tier.note_remote_fetch("a", 100)
+    tier.split([Rq("a", 100)])
+    tier.reset()
+    assert tier.resident_keys == 0 and tier.used_bytes == 0
+    assert tier.hits == 1 and tier.promotions == 1   # billing survives
+    assert "a" not in tier
+
+
+# ------------------------------------------------- unit: write-back path --
+
+def test_writeback_put_visible_before_flush_completes():
+    """on_done (the install) fires at NVMe-local completion; the
+    object-store flush lands strictly later."""
+    kernel = Kernel(seed=0)
+    remote = StorageSim(_quiet(TOS), kernel, seed=0)
+    tier = NVMeTier(TierConfig(capacity_bytes=1 << 20, writeback=True,
+                               spec=_quiet(NVME)), kernel, seed=1)
+    wp = TieredWritePath(tier, remote)
+    times = {}
+    wp.submit_batch(100_000, 1, put=True,
+                    on_done=lambda tk: times.setdefault("local",
+                                                        kernel.now))
+    kernel.run()
+    assert wp.flushes_done == 1 and wp.flush_pending == 0
+    # local visibility strictly precedes the remote flush: the device's
+    # ~100us TTFB vs the object store's ~13ms
+    assert times["local"] < kernel.now
+    assert tier.sim.total_put_requests == 1
+    assert remote.total_put_requests == 1     # the bill is deferred, not
+    assert remote.total_put_bytes == 100_000  # avoided
+
+
+def test_write_through_and_reads_bypass_the_device():
+    kernel = Kernel(seed=0)
+    remote = StorageSim(_quiet(TOS), kernel, seed=0)
+    tier = NVMeTier(TierConfig(capacity_bytes=1 << 20, writeback=False,
+                               spec=_quiet(NVME)), kernel, seed=1)
+    wp = TieredWritePath(tier, remote)
+    wp.submit_batch(50_000, 1, put=True)      # write-through PUT
+    wp.submit_batch(50_000, 2, put=False)     # compaction re-read
+    kernel.run()
+    assert tier.sim.total_requests == 0
+    assert remote.total_requests == 3
+    assert wp.flushes_done == 0
+
+
+# ----------------------------------------------------------- fleet level --
+
+def test_promotion_determinism_across_seeds(setup):
+    """Same seed => bit-identical fleet JSON and tier stats; promotions
+    actually happen (the tier is live, not decorative)."""
+    _, queries, _, ci = setup
+    p = SearchParams(k=10, nprobe=32)
+    for seed in (0, 1, 2):
+        cfg = FleetConfig(n_shards=2, replication=1, storage=TOS,
+                          concurrency=12, shard_concurrency=4,
+                          queue_depth=32, nvme_bytes=4 << 20,
+                          tier_policy="second-hit", seed=seed)
+        a = run_fleet(ci, queries, p, cfg)
+        b = run_fleet(ci, queries, p, cfg)
+        assert a.to_json() == b.to_json()
+        nv = [s.nvme for s in a.shard_stats]
+        assert nv == [s.nvme for s in b.shard_stats]
+        assert all(s is not None for s in nv)
+        assert sum(s["promotions"] for s in nv) > 0
+        assert sum(s["hits"] for s in nv) > 0
+
+
+def test_full_device_fallback_keeps_results_exact(setup):
+    """A device smaller than any non-empty object can only ever hold
+    zero-byte residents: every real fetch falls through to remote and
+    results/recall match the flat hierarchy exactly."""
+    _, queries, gt, ci = setup
+    p = SearchParams(k=10, nprobe=32)
+    base = dict(n_shards=2, replication=1, storage=TOS, concurrency=12,
+                shard_concurrency=4, queue_depth=32, seed=3)
+    flat = run_fleet(ci, queries, p, FleetConfig(**base))
+    tiny = run_fleet(ci, queries, p, FleetConfig(
+        nvme_bytes=64, tier_policy="admit-always", **base))
+    assert _ids_sha256(tiny) == _ids_sha256(flat)
+    assert tiny.recall_against(gt) == flat.recall_against(gt)
+    nv = [s.nvme for s in tiny.shard_stats]
+    # nothing with payload ever landed on (or was served from) the device
+    assert sum(s["promoted_bytes"] for s in nv) == 0
+    assert sum(s["nvme_bytes"] for s in nv) == 0
+    assert sum(s["used_bytes"] for s in nv) == 0
+    assert sum(s["misses"] for s in nv) > 0
+
+
+def test_nvme_zero_reproduces_pre_tier_golden(setup):
+    """``--nvme-gb 0`` is the flat hierarchy: no second StorageSim is
+    built, so the pre-tier golden reproduces bit-exactly."""
+    _, queries, _, ci = setup
+    golden = json.load(open(GOLDEN_PATH))
+    p = SearchParams(k=golden["params"]["k"],
+                     nprobe=golden["params"]["nprobe"])
+    configs = dict(
+        one_shard=FleetConfig(n_shards=1, replication=1, concurrency=8,
+                              shard_concurrency=8, queue_depth=64,
+                              nvme_bytes=0, seed=0),
+        four_shard=FleetConfig(n_shards=4, replication=2, concurrency=16,
+                               shard_concurrency=4, queue_depth=16,
+                               hedge=True, hedge_percentile=75.0,
+                               nvme_bytes=0, seed=5))
+    for name, cfg in configs.items():
+        rep = run_fleet(ci, queries, p, cfg)
+        g = golden[name]
+        assert rep.wall_time_s == pytest.approx(g["wall_time_s"],
+                                                rel=1e-9, abs=1e-12)
+        assert rep.qps == pytest.approx(g["qps"], rel=1e-9)
+        assert _ids_sha256(rep) == g["ids_sha256"]
+        assert all(s.nvme is None for s in rep.shard_stats)
+        # off-default keys stay out of the config dict: old artifacts
+        # round-trip unchanged
+        assert "nvme_bytes" not in cfg.to_dict()
+        assert "nvme" not in json.dumps(rep.summary())
+
+
+def test_writeback_fleet_run_admits_and_flushes(setup):
+    """Live ingest on a write-back tier: compaction output lands on the
+    device (admits > 0), every flush reaches the object store, and
+    results stay complete."""
+    from repro.ingest import IngestConfig, synth_updates
+
+    data, queries, _, ci = setup
+    from repro.ingest import make_mutable
+    p = SearchParams(k=10, nprobe=32)
+    cfg = FleetConfig(n_shards=2, replication=1, concurrency=8,
+                      nvme_bytes=8 << 20, nvme_writeback=True, seed=2)
+    stream = synth_updates(data, rate_qps=600.0, n_updates=120,
+                           delete_frac=0.3, seed=3)
+    rep = run_fleet(make_mutable(ci), queries, p, cfg, updates=stream,
+                    ingest=IngestConfig(delta_cap_bytes=24 * 1024))
+    assert len(rep.records) == rep.n_arrivals
+    nv = [s.nvme for s in rep.shard_stats]
+    assert all(s is not None for s in nv)
+    assert sum(s["writeback_admits"] for s in nv) > 0
+    assert sum(s["flushes_done"] for s in nv) > 0
+    assert all(s["flush_pending"] == 0 for s in nv)   # run drained
+
+
+# ------------------------------------------------------ budget tuning --
+
+def test_enumerate_tier_splits_spends_the_budget():
+    """Every enumerated split prices out to exactly the budget, each
+    feasible width contributes both pure strategies (all-DRAM and
+    all-NVMe), and an unpayable budget is a loud error."""
+    from repro.obs.cost import PriceBook
+    from repro.tuning import enumerate_tier_splits
+
+    book = PriceBook()
+    budget = 1.2
+    splits = enumerate_tier_splits(budget, book, widths=(1, 2), steps=4)
+    assert all(s.usd_per_hour(book) == pytest.approx(budget)
+               for s in splits)
+    for w in (1, 2):
+        mine = [s for s in splits if s.n_shards == w]
+        assert len(mine) == 5
+        assert any(s.nvme_gib == 0 for s in mine)
+        assert any(s.dram_gib == 0 for s in mine)
+    # width 2 at $0.5/instance/h leaves nothing: only width 1 splits
+    only_one = enumerate_tier_splits(0.8, book, widths=(1, 2), steps=2)
+    assert {s.n_shards for s in only_one} == {1}
+    with pytest.raises(ValueError, match="cannot pay"):
+        enumerate_tier_splits(0.4, book, widths=(1,), steps=2)
+
+
+def test_screen_tier_splits_orders_by_fetch_latency():
+    """With a uniform profile much larger than any candidate, capacity
+    wins: NVMe-heavy splits (more GiB per dollar) screen ahead of
+    DRAM-heavy ones, and cumulative hit rates never invert."""
+    from repro.obs.cost import PriceBook
+    from repro.storage.spec import TOS
+    from repro.tuning import enumerate_tier_splits, screen_tier_splits
+
+    book = PriceBook()
+    profile = {("list", i): [1 << 20, 1] for i in range(64 << 10)}  # 64 GiB
+    splits = enumerate_tier_splits(1.2, book, widths=(1,), steps=4)
+    preds = screen_tier_splits(profile, splits, book, remote_spec=TOS)
+    assert [p.expected_fetch_s for p in preds] == \
+        sorted(p.expected_fetch_s for p in preds)
+    for p in preds:
+        assert 0.0 <= p.hit_dram <= p.hit_nvme <= 1.0
+        assert p.usd_per_hour == pytest.approx(1.2)
+    by_nvme = max(preds, key=lambda p: p.split.nvme_gib)
+    by_dram = max(preds, key=lambda p: p.split.dram_gib)
+    assert by_nvme.expected_fetch_s < by_dram.expected_fetch_s
+
+
+def test_tune_tier_split_end_to_end():
+    """Screen + refine on a budget-starved workload: the refined runs
+    measure real tier traffic and the pick spends the budget."""
+    from repro.obs.cost import PriceBook
+    from repro.tuning import EnvSpec, WorkloadSpec, tune_tier_split
+
+    w = WorkloadSpec(n=8_000_000, dim=960, target_recall=0.5)
+    env = EnvSpec(storage=TOS)
+    rec = tune_tier_split(w, env, 0.56, widths=(1,), steps=4,
+                          refine_top=2, eval_n=1200, nq=32, seed=0)
+    assert rec.feasible
+    assert len(rec.refined) == 2
+    assert rec.split.usd_per_hour(PriceBook()) == pytest.approx(0.56)
+    # the refined winner carried real tier traffic (device hits seen)
+    picked = next(o for o in rec.refined if o.split == rec.split)
+    if rec.split.nvme_gib > 0:
+        assert picked.hit_nvme_frac > 0
+    d = rec.to_dict()
+    assert json.loads(rec.to_json()) == json.loads(json.dumps(d))
+    assert d["recommendation"] == rec.split.to_dict()
+    assert [p["expected_fetch_s"] for p in d["screened"]] == \
+        sorted(p["expected_fetch_s"] for p in d["screened"])
+
+
+def test_resolve_mrc_curve_shapes():
+    """Bare curves pass through; a single-tenant --mrc artifact is
+    unwrapped; multi-tenant artifacts are ambiguous and refuse."""
+    from repro.tuning.tier import resolve_mrc_curve
+
+    bare = {"sizes": [1, 2], "miss_ratio": [0.9, 0.1]}
+    assert resolve_mrc_curve(bare) is bare
+    row = {"name": "t0", "sizes": [1], "miss_ratio": [0.5]}
+    assert resolve_mrc_curve({"tenants": [row]}) == row
+    with pytest.raises(ValueError, match="one fleet-wide"):
+        resolve_mrc_curve({"tenants": [row, dict(row, name="t1")]})
+    with pytest.raises(ValueError, match="one fleet-wide"):
+        resolve_mrc_curve({})
